@@ -1,0 +1,102 @@
+"""Child-process body for the distributed GNN benchmarks.
+
+Invoked by run.py / bench modules with a forced host device count; times
+one full-graph training epoch per (mode, model, graph, layers, dims)
+combination passed on the command line.  Prints CSV rows:
+
+    <tag>,<us_per_epoch>,<derived>
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--modes", default="dp,naive,decoupled,"
+                                       "decoupled_pipelined")
+    ap.add_argument("--model", default="gcn")
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--feat-dim", type=int, default=128)
+    ap.add_argument("--classes", type=int, default=16)
+    ap.add_argument("--avg-degree", type=int, default=16)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--chunks", type=int, default=4)
+    ap.add_argument("--graph", default="sbm", choices=["sbm", "ba"])
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--tag-prefix", default="")
+    ap.add_argument("--census", action="store_true",
+                    help="also report collective wire bytes per epoch")
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro import optim
+    from repro.core import decouple as D
+    from repro.gnn import dp_baseline as DP
+    from repro.gnn import models as M
+    from repro.graph import barabasi_albert, sbm_power_law
+    from repro.launch.roofline import hlo_census
+
+    k = len(jax.devices())
+    mesh = Mesh(np.array(jax.devices()), ("model",))
+    gen = sbm_power_law if args.graph == "sbm" else barabasi_albert
+    kw = dict(n=args.n, num_classes=args.classes, feat_dim=args.feat_dim,
+              seed=7)
+    if args.graph == "sbm":
+        kw["avg_degree"] = args.avg_degree
+    else:
+        kw["m"] = args.avg_degree // 2
+    data = gen(**kw)
+    opt = optim.adamw(1e-2)
+
+    for mode in args.modes.split(","):
+        if mode == "dp":
+            bundle = DP.prepare_dp_bundle(data, k=k)
+            cfg = M.GNNConfig(model=args.model, in_dim=args.feat_dim,
+                              hidden_dim=args.hidden,
+                              num_classes=args.classes,
+                              num_layers=args.layers, decoupled=False)
+            step, _ = DP.make_dp_train_fns(cfg, bundle, mesh, opt)
+            params = M.init_params(jax.random.PRNGKey(0), cfg)
+        else:
+            bundle = D.prepare_bundle(data, n_workers=k,
+                                      n_chunks=args.chunks)
+            cfg = D.padded_gnn_config(data, bundle, model=args.model,
+                                      hidden_dim=args.hidden,
+                                      num_layers=args.layers)
+            step, _ = D.make_tp_train_fns(cfg, bundle, mesh, opt,
+                                          mode=mode)
+            params = M.init_params(jax.random.PRNGKey(0), cfg)
+        o = opt.init(params)
+        p = params
+        # warmup (compile)
+        p, o, loss = step(p, o)
+        jax.block_until_ready(loss)
+        t0 = time.perf_counter()
+        for _ in range(args.epochs):
+            p, o, loss = step(p, o)
+        jax.block_until_ready(loss)
+        dt = (time.perf_counter() - t0) / args.epochs
+        derived = f"workers={k};loss={float(loss):.3f}"
+        if args.census:
+            try:
+                txt = step.lower(p, o).compile().as_text()
+                cb = hlo_census(txt)["collectives"]
+                derived += (f";coll_bytes={cb['total']:.3e}"
+                            f";a2a={cb['all-to-all']:.3e}"
+                            f";ag={cb['all-gather']:.3e}"
+                            f";ar={cb['all-reduce']:.3e}")
+            except Exception as e:  # noqa: BLE001
+                derived += f";census_error={type(e).__name__}"
+        print(f"{args.tag_prefix}{mode},{dt*1e6:.1f},{derived}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Fig. 11: performance-gain ablation — baseline(DP+CS) → +TP → +DT
+→ +IP, normalized speedups on two graph families."""
+from __future__ import annotations
+
+import re
+
+from .common import emit, run_subprocess_bench
+
+
+def main():
+    for graph in ("sbm", "ba"):
+        out = run_subprocess_bench(
+            "benchmarks._dist_gnn", devices=8,
+            args=["--modes", "dp,naive,decoupled,decoupled_pipelined",
+                  "--graph", graph,
+                  "--tag-prefix", f"ablation_{graph}_"])
+        rows = {}
+        for line in out.strip().splitlines():
+            parts = line.split(",")
+            rows[parts[0]] = float(parts[1])
+            print(line)
+        base = rows.get(f"ablation_{graph}_dp")
+        if base:
+            for mode, label in (("naive", "+TP"),
+                                ("decoupled", "+TP+DT"),
+                                ("decoupled_pipelined", "+TP+DT+IP")):
+                t = rows.get(f"ablation_{graph}_{mode}")
+                if t:
+                    emit(f"ablation_{graph}_speedup_{label}", t,
+                         f"speedup_vs_baseline={base / t:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

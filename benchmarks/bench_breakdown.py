@@ -1,0 +1,96 @@
+"""Paper Table 4: training-cost breakdown for node classification and link
+prediction (GNN computation vs classification vs loss vs neg-sampling)."""
+from __future__ import annotations
+
+import time
+
+from .common import emit
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.gnn import layers as L
+    from repro.gnn import models as M
+    from repro.graph import sbm_power_law
+
+    data = sbm_power_law(n=4096, num_classes=16, feat_dim=128,
+                         avg_degree=16, seed=7)
+    g = L.edge_list_dev(data.graph)
+    x = jnp.asarray(data.features)
+    labels = jnp.asarray(data.labels)
+    mask = jnp.asarray(data.train_mask.astype("float32"))
+    cfg = M.GNNConfig(model="gcn", in_dim=128, hidden_dim=64,
+                      num_classes=16, num_layers=2, decoupled=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    def timed(fn, *args, iters=5):
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters
+
+    # --- node classification phases ---
+    mlp = jax.jit(lambda p, xx: M.mlp_phase(p, cfg, xx))
+    h = mlp(params, x)
+    t_nn = timed(mlp, params, x)
+
+    def agg(hh):
+        w = cfg.gamma * g.weight
+        z = hh
+        for _ in range(cfg.num_layers):
+            z = L.aggregate(g, z, edge_weight=w)
+        return z
+    agg_j = jax.jit(agg)
+    z = agg_j(h)
+    t_agg = timed(agg_j, h)
+
+    loss_j = jax.jit(lambda lg: M.cross_entropy(lg, labels, mask))
+    t_loss = timed(loss_j, z)
+    total = t_nn + t_agg + t_loss
+    emit("breakdown_nc_gnn_computation", (t_nn + t_agg) * 1e6,
+         f"fraction={(t_nn + t_agg) / total:.2f};"
+         f"nn={t_nn*1e6:.0f}us;agg={t_agg*1e6:.0f}us")
+    emit("breakdown_nc_loss", t_loss * 1e6,
+         f"fraction={t_loss / total:.2f}")
+
+    # --- link prediction: dot-product decoder + negative sampling ---
+    rng = np.random.default_rng(0)
+    pos_src = jnp.asarray(data.graph.src[: 8192])
+    pos_dst = jnp.asarray(data.graph.dst[: 8192])
+
+    def neg_sample(key):
+        return jax.random.randint(key, (8192,), 0, data.graph.n)
+    neg_j = jax.jit(neg_sample)
+    t_neg = timed(neg_j, jax.random.PRNGKey(1))
+
+    def lp_score(z):
+        pos = jnp.sum(z[pos_src] * z[pos_dst], axis=-1)
+        return pos
+    lp_j = jax.jit(lp_score)
+    t_score = timed(lp_j, z)
+
+    def lp_loss(z, neg):
+        pos = jnp.sum(z[pos_src] * z[pos_dst], axis=-1)
+        negs = jnp.sum(z[pos_src] * z[neg], axis=-1)
+        return (jax.nn.softplus(-pos).mean()
+                + jax.nn.softplus(negs).mean())
+    lpl_j = jax.jit(lp_loss)
+    neg = neg_j(jax.random.PRNGKey(1))
+    t_lploss = timed(lpl_j, z, neg)
+    total_lp = t_nn + t_agg + t_neg + t_score + t_lploss
+    emit("breakdown_lp_neg_sampling", t_neg * 1e6,
+         f"fraction={t_neg / total_lp:.2f}")
+    emit("breakdown_lp_gnn_computation", (t_nn + t_agg) * 1e6,
+         f"fraction={(t_nn + t_agg) / total_lp:.2f}")
+    emit("breakdown_lp_score_and_loss", (t_score + t_lploss) * 1e6,
+         f"fraction={(t_score + t_lploss) / total_lp:.2f}")
+
+
+if __name__ == "__main__":
+    main()

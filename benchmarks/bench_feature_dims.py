@@ -1,0 +1,18 @@
+"""Paper Fig. 14: per-epoch runtime vs input feature dimension."""
+from __future__ import annotations
+
+from .common import run_subprocess_bench
+
+
+def main():
+    for dim in (64, 128, 256, 512):
+        out = run_subprocess_bench(
+            "benchmarks._dist_gnn", devices=8,
+            args=["--modes", "dp,decoupled_pipelined",
+                  "--feat-dim", str(dim), "--n", "2048",
+                  "--tag-prefix", f"featdim_{dim}_"])
+        print(out, end="")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Paper Table 3 / §5.8: heterogeneous-graph R-GCN training.
+
+R-GCN relation transforms commute with aggregation (Σ_u w·(H W_r)_u =
+(Σ_u w·H_u) W_r), so typed aggregation runs on feature slices and the W_r
+mix happens post-gather — the TP extension the paper calls 'natural'.
+Compares single-device coupled R-GCN vs per-relation decoupled epoch time
+and validates the commuted formulation numerically.
+"""
+from __future__ import annotations
+
+import time
+
+from .common import emit
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.gnn import layers as L
+    from repro.gnn import models as M
+    from repro.graph import heterogeneous_sbm
+
+    data = heterogeneous_sbm(n=2048, num_classes=8, num_edge_types=4,
+                             feat_dim=64, avg_degree=12, seed=5)
+    g = L.edge_list_dev(data.graph)
+    etypes = jnp.asarray(data.edge_types)
+    x = jnp.asarray(data.features)
+    cfg = M.GNNConfig(model="rgcn", in_dim=64, hidden_dim=64, num_classes=8,
+                      num_layers=1, decoupled=False, num_edge_types=4)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    coupled = jax.jit(lambda p, xx: M.coupled_forward(p, cfg, g, xx,
+                                                      etypes))
+    out_ref = coupled(params, x)
+
+    def decoupled_commuted(p, xx):
+        """aggregate-per-relation on slices, transform after gather."""
+        h = xx
+        rel_w = p["rel"][0]                     # (R, D, D_out)
+        acc = jnp.zeros((xx.shape[0], rel_w.shape[-1]), xx.dtype)
+        for r in range(cfg.num_edge_types):
+            wr = jnp.where(etypes == r, g.weight, 0.0)
+            agg = L.aggregate(g, h, edge_weight=wr)   # sliceable
+            acc = acc + agg @ rel_w[r]                # post-gather mix
+        return acc + L.dense(p["self"][0], h)
+    dec = jax.jit(decoupled_commuted)
+    out_dec = dec(params, x)
+    err = float(jnp.abs(out_ref - out_dec).max())
+
+    def timed(fn, iters=5):
+        o = fn(params, x)
+        jax.block_until_ready(o)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            o = fn(params, x)
+        jax.block_until_ready(o)
+        return (time.perf_counter() - t0) / iters
+
+    t_c = timed(coupled)
+    t_d = timed(dec)
+    emit("hetero_rgcn_coupled", t_c * 1e6, f"commute_err={err:.2e}")
+    emit("hetero_rgcn_decoupled_commuted", t_d * 1e6,
+         f"speed_ratio={t_c / t_d:.2f}")
+    assert err < 1e-3, err
+
+
+if __name__ == "__main__":
+    main()

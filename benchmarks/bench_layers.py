@@ -1,0 +1,19 @@
+"""Paper Fig. 13: per-epoch runtime vs model depth (TP advantage grows
+with L because its comm frequency is depth-independent)."""
+from __future__ import annotations
+
+from .common import run_subprocess_bench
+
+
+def main():
+    for layers in (2, 3, 4, 5):
+        out = run_subprocess_bench(
+            "benchmarks._dist_gnn", devices=8,
+            args=["--modes", "dp,decoupled_pipelined",
+                  "--layers", str(layers),
+                  "--tag-prefix", f"layers_L{layers}_"])
+        print(out, end="")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper Table 2 analog: per-epoch runtime, GCN + GAT, all systems.
+
+Systems: DP baseline (DepComm halo exchange), naive TP, decoupled TP (DT),
+decoupled+pipelined (DT+IP) — on 8 workers (forced host devices).
+"""
+from __future__ import annotations
+
+from .common import run_subprocess_bench
+
+
+def main():
+    for model in ("gcn", "gat"):
+        modes = "dp,naive,decoupled,decoupled_pipelined" if model == "gcn" \
+            else "naive,decoupled,decoupled_pipelined"
+        out = run_subprocess_bench(
+            "benchmarks._dist_gnn", devices=8,
+            args=["--modes", modes, "--model", model,
+                  "--tag-prefix", f"overall_{model}_"])
+        print(out, end="")
+
+
+if __name__ == "__main__":
+    main()

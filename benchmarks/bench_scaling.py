@@ -1,0 +1,17 @@
+"""Paper Fig. 12: per-epoch runtime vs cluster size (2/4/8 workers)."""
+from __future__ import annotations
+
+from .common import run_subprocess_bench
+
+
+def main():
+    for k in (2, 4, 8):
+        out = run_subprocess_bench(
+            "benchmarks._dist_gnn", devices=k,
+            args=["--modes", "dp,decoupled_pipelined",
+                  "--tag-prefix", f"scaling_k{k}_"])
+        print(out, end="")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Kernel microbenchmark: Pallas SSD intra-chunk kernel (interpret mode)
+vs the chunked jnp path and the dense dual oracle.  Reports the structural
+quantities for TPU (VMEM working set, modeled HBM traffic vs the jnp
+path's censused (Q,Q) shuffle traffic)."""
+from __future__ import annotations
+
+import time
+
+from .common import emit
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.ssd import (hbm_bytes_model, ssd_chunked_pallas,
+                                   ssd_dense_ref)
+    from repro.nn.ssm import ssd_chunked
+
+    b, s, h, p, n, chunk = 2, 512, 8, 64, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(0.3 * jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, n)) / np.sqrt(n)
+    cm = jax.random.normal(ks[4], (b, s, n)) / np.sqrt(n)
+
+    jnp_fn = jax.jit(lambda *ar: ssd_chunked(*ar, chunk)[0])
+    pl_fn = jax.jit(lambda *ar: ssd_chunked_pallas(*ar, chunk,
+                                                   interpret=True)[0])
+    ref = ssd_dense_ref(x, dt, a, bm, cm)
+    err_j = float(jnp.abs(jnp_fn(x, dt, a, bm, cm) - ref).max())
+    err_p = float(jnp.abs(pl_fn(x, dt, a, bm, cm) - ref).max())
+
+    def timed(fn, iters=3):
+        o = fn(x, dt, a, bm, cm)
+        jax.block_until_ready(o)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            o = fn(x, dt, a, bm, cm)
+        jax.block_until_ready(o)
+        return (time.perf_counter() - t0) / iters
+
+    t_j = timed(jnp_fn)
+    t_p = timed(pl_fn)
+    kernel_bytes = hbm_bytes_model(b, s, h, p, n, chunk=chunk)
+    qq_bytes = b * (s // chunk) * h * chunk * chunk * 4 * 3  # L/scores/M
+    vmem_kb = (chunk * p + 2 * chunk * n + 3 * chunk * chunk
+               + chunk * p + p * n) * 4 / 1024
+    emit("ssd_jnp_chunked", t_j * 1e6, f"err_vs_dense={err_j:.2e}")
+    emit("ssd_pallas_interpret", t_p * 1e6,
+         f"err_vs_dense={err_p:.2e};vmem_per_step_kb={vmem_kb:.0f};"
+         f"hbm_model_bytes={kernel_bytes:.3e};"
+         f"qq_traffic_avoided={qq_bytes:.3e}")
+
+
+if __name__ == "__main__":
+    main()

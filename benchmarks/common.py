@@ -1,0 +1,60 @@
+"""Shared benchmark utilities.
+
+Multi-worker benchmarks run as child processes with
+``XLA_FLAGS=--xla_force_host_platform_device_count=<k>`` so the main bench
+process keeps the single real CPU device (per the dry-run isolation rule).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_epochs(step_fn, *args, warmup: int = 2, iters: int = 3) -> float:
+    """Median-ish per-call seconds for a jitted step closure."""
+    out = None
+    for _ in range(warmup):
+        out = step_fn(*args)
+    _block(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = step_fn(*args)
+    _block(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _block(out):
+    import jax
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def run_subprocess_bench(module: str, devices: int = 8,
+                         args: list[str] | None = None,
+                         timeout: int = 1800) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", module] + (args or [])
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout, env=env,
+                          cwd=os.path.dirname(SRC))
+    if proc.returncode != 0:
+        raise RuntimeError(f"{module} failed:\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+# standard bench workload (Reddit-like scaled to CPU budget)
+BENCH_GRAPH = dict(n=4096, num_classes=16, feat_dim=128, avg_degree=16,
+                   seed=7)
+BENCH_HIDDEN = 64

@@ -1,0 +1,71 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only name]``
+prints ``name,us_per_call,derived`` CSV rows per benchmark.
+
+| paper artifact            | module              |
+|---------------------------|---------------------|
+| Table 2 (overall)         | bench_overall       |
+| Fig. 3/10a (load balance) | bench_load_balance  |
+| Fig. 8/10b (comm volume)  | bench_comm_volume   |
+| Fig. 11 (gain ablation)   | bench_ablation      |
+| Fig. 12 (cluster scaling) | bench_scaling       |
+| Fig. 13 (model layers)    | bench_layers        |
+| Fig. 14 (feature dims)    | bench_feature_dims  |
+| Fig. 16 (accuracy)        | bench_accuracy      |
+| Table 3 (heterogeneous)   | bench_hetero        |
+| Table 4 (cost breakdown)  | bench_breakdown     |
+| kernel microbench         | bench_spmm_kernel   |
+| kernel microbench (attn)  | bench_flash_kernel  |
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_load_balance",
+    "bench_comm_volume",
+    "bench_overall",
+    "bench_ablation",
+    "bench_scaling",
+    "bench_layers",
+    "bench_feature_dims",
+    "bench_accuracy",
+    "bench_hetero",
+    "bench_breakdown",
+    "bench_spmm_kernel",
+    "bench_flash_kernel",
+    "bench_ssd_kernel",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of module names")
+    args = ap.parse_args()
+    mods = MODULES if not args.only else [
+        m for m in MODULES if m in set(args.only.split(","))]
+    failures = []
+    for name in mods:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            importlib.import_module(f"benchmarks.{name}").main()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            print(f"# {name} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

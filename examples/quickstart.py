@@ -1,0 +1,54 @@
+"""Quickstart: NeutronTP GNN tensor parallelism in ~60 lines.
+
+Runs on however many devices are visible (1 is fine — the collectives
+degenerate); for a real multi-worker run:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro import optim
+from repro.core import decouple as D
+from repro.gnn import models as M
+from repro.graph import sbm_power_law
+
+
+def main():
+    n_workers = len(jax.devices())
+    print(f"workers: {n_workers}")
+
+    # 1. a synthetic power-law graph with planted communities
+    data = sbm_power_law(n=4096, num_classes=8, feat_dim=64,
+                         avg_degree=12, seed=0)
+    print(f"graph: {data.graph.n} vertices, {data.graph.e} edges")
+
+    # 2. NeutronTP bundle: graph replicated, features dim-shardable,
+    #    chunk schedule + per-chunk communication plan precomputed
+    bundle = D.prepare_bundle(data, n_workers=n_workers, n_chunks=4)
+
+    # 3. a decoupled 2-layer GCN (paper §4.1) trained with tensor
+    #    parallelism: L NN rounds → split → L aggregations → gather
+    cfg = D.padded_gnn_config(data, bundle, model="gcn", hidden_dim=64,
+                              num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = optim.adamw(1e-2)
+    mesh = Mesh(np.array(jax.devices()), ("model",))
+    train_step, evaluate = D.make_tp_train_fns(
+        cfg, bundle, mesh, opt, mode="decoupled_pipelined")
+
+    opt_state = opt.init(params)
+    for epoch in range(1, 51):
+        params, opt_state, loss = train_step(params, opt_state)
+        if epoch % 10 == 0:
+            _, val_acc = evaluate(params, "val")
+            print(f"epoch {epoch:3d}  loss {float(loss):.4f}  "
+                  f"val acc {float(val_acc):.3f}")
+    _, test_acc = evaluate(params, "test")
+    print(f"test accuracy: {float(test_acc):.3f}")
+
+
+if __name__ == "__main__":
+    main()

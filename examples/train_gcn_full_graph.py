@@ -1,0 +1,96 @@
+"""End-to-end driver: distributed full-graph GCN/GAT training (the paper's
+workload) with NeutronTP tensor parallelism on 8 workers.
+
+    PYTHONPATH=src python examples/train_gcn_full_graph.py \
+        [--model gcn] [--n 20000] [--epochs 100] [--mode decoupled_pipelined]
+
+Trains on a Reddit-like synthetic graph (power-law SBM, 602-d features,
+41 classes — Table 1 proportions), logs epoch time + accuracy, saves and
+restores a checkpoint, and reports the per-worker balance property.
+"""
+import os
+
+if "--single-device" not in __import__("sys").argv:
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro import checkpoint, optim  # noqa: E402
+from repro.core import decouple as D  # noqa: E402
+from repro.gnn import models as M  # noqa: E402
+from repro.graph import sbm_power_law  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="gcn", choices=["gcn", "gat",
+                                                       "sage", "gin"])
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--feat-dim", type=int, default=302)
+    ap.add_argument("--classes", type=int, default=41)
+    ap.add_argument("--hidden", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--epochs", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--chunks", type=int, default=4)
+    ap.add_argument("--mode", default="decoupled_pipelined",
+                    choices=["decoupled", "decoupled_pipelined", "naive"])
+    ap.add_argument("--ckpt", default="results/gcn_full_graph")
+    ap.add_argument("--single-device", action="store_true")
+    args = ap.parse_args()
+
+    k = len(jax.devices())
+    print(f"devices: {k}  mode: {args.mode}")
+    data = sbm_power_law(n=args.n, num_classes=args.classes,
+                         feat_dim=args.feat_dim, avg_degree=12, seed=0)
+    print(f"graph: V={data.graph.n} E={data.graph.e} "
+          f"ftr={args.feat_dim} classes={args.classes}")
+
+    bundle = D.prepare_bundle(data, n_workers=k, n_chunks=args.chunks)
+    cfg = D.padded_gnn_config(data, bundle, model=args.model,
+                              hidden_dim=args.hidden,
+                              num_layers=args.layers)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = optim.adamw(args.lr, weight_decay=5e-4)
+    mesh = Mesh(np.array(jax.devices()), ("model",))
+    train_step, evaluate = D.make_tp_train_fns(cfg, bundle, mesh, opt,
+                                               mode=args.mode)
+    opt_state = opt.init(params)
+
+    # the paper's load-balance property, by construction:
+    print(f"per-worker aggregation load: E×D/N = "
+          f"{data.graph.e}×{cfg.hidden_dim}/{k} on every worker "
+          f"(imbalance 1.00)")
+
+    times = []
+    for epoch in range(1, args.epochs + 1):
+        t0 = time.perf_counter()
+        params, opt_state, loss = train_step(params, opt_state)
+        jax.block_until_ready(loss)
+        times.append(time.perf_counter() - t0)
+        if epoch % max(1, args.epochs // 10) == 0:
+            _, va = evaluate(params, "val")
+            print(f"epoch {epoch:4d}  loss {float(loss):.4f}  "
+                  f"val {float(va):.3f}  {times[-1]*1e3:.0f} ms/epoch")
+
+    _, test_acc = evaluate(params, "test")
+    print(f"test accuracy: {float(test_acc):.3f}  "
+          f"median epoch: {np.median(times)*1e3:.0f} ms")
+
+    checkpoint.save(args.ckpt, params,
+                    metadata={"model": args.model,
+                              "test_acc": float(test_acc)})
+    restored = checkpoint.restore(args.ckpt, params)
+    _, acc2 = evaluate(restored, "test")
+    assert abs(float(acc2) - float(test_acc)) < 1e-6
+    print(f"checkpoint round-trip OK → {args.ckpt}.npz")
+
+
+if __name__ == "__main__":
+    main()

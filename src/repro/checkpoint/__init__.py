@@ -1,0 +1,59 @@
+"""Checkpointing: flat .npz per pytree + JSON manifest (no orbax offline).
+
+Handles arbitrary registered-dataclass pytrees (TrainState, ParamLeaf
+trees, caches) by saving leaves keyed by their flattened index alongside a
+treedef fingerprint; restore validates structure against a template from
+the same code version.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def save(path: str, tree: Any, metadata: dict | None = None) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    manifest = {
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "metadata": metadata or {},
+    }
+    with open(_manifest_path(path), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def restore(path: str, template: Any) -> Any:
+    """Restore into the structure of ``template`` (shapes validated)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    t_leaves, treedef = jax.tree.flatten(template)
+    with open(_manifest_path(path)) as f:
+        manifest = json.load(f)
+    if manifest["n_leaves"] != len(t_leaves):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, template has "
+            f"{len(t_leaves)}")
+    leaves = []
+    for i, tl in enumerate(t_leaves):
+        arr = npz[f"leaf_{i}"]
+        if hasattr(tl, "shape") and tuple(arr.shape) != tuple(tl.shape):
+            raise ValueError(f"leaf {i}: checkpoint shape {arr.shape} != "
+                             f"template {tl.shape}")
+        leaves.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def load_metadata(path: str) -> dict:
+    with open(_manifest_path(path)) as f:
+        return json.load(f)["metadata"]
+
+
+def _manifest_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".manifest.json"

@@ -1,0 +1,7 @@
+# The paper's primary contribution: GNN tensor parallelism (feature-dim
+# sharding + gather/split all-to-alls), the generalized decoupled training
+# engine, and the chunk-based task scheduler with inter-chunk pipelining.
+from . import tp, chunks, decouple  # noqa: F401
+from .decouple import (TPBundle, TPGraph, prepare_bundle, padded_gnn_config,
+                       make_tp_train_fns, tp_decoupled_forward,
+                       tp_naive_forward)  # noqa: F401

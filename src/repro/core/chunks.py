@@ -1,0 +1,136 @@
+"""Chunk-level communication plans + the pipelined chunk scheduler (§4.2.2).
+
+The decoupled epoch needs one *split* (vertex-sharded → dim-sharded) before
+the L aggregation rounds and one *gather* after them.  Inter-chunk
+pipelining partitions those two collectives into per-chunk tasks so they can
+overlap with per-chunk aggregation compute, **without** changing the bytes
+moved:
+
+* split task of chunk c  — move the feature slices of the src vertices whose
+  *first use* is chunk c (the paper's dedup: a src shared by several chunks
+  is communicated once, by the earliest chunk).
+* gather task of chunk c — collect the complete embeddings of chunk c's
+  destination vertices as soon as its last aggregation finishes.
+
+Plans are static, rectangular (padded) index tables so each task is a single
+`all_to_all`; padding rows are dropped via out-of-range scatter indices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.format import ChunkedGraph
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("split_rows", "gather_rows"),
+         meta_fields=("n_workers", "n_padded", "m_split", "m_gather"))
+@dataclasses.dataclass(frozen=True)
+class ChunkCommPlan:
+    """Static per-chunk all-to-all row tables.
+
+    split_rows[c, i, m]  — global vertex id whose owner is worker i and whose
+                           feature slices must be broadcast for chunk c
+                           (pad = -1).
+    gather_rows[c, i, m] — global dst vertex id (owned by worker i in the
+                           vertex-sharded layout) collected after chunk c
+                           (pad = -1).
+    """
+
+    split_rows: jax.Array   # (C, N, m_split) int32
+    gather_rows: jax.Array  # (C, N, m_gather) int32
+    n_workers: int
+    n_padded: int           # padded vertex count (multiple of n_workers)
+    m_split: int
+    m_gather: int
+
+
+def build_chunk_comm_plan(cg: ChunkedGraph, n_workers: int,
+                          n_padded: int) -> ChunkCommPlan:
+    shard = n_padded // n_workers
+    c_rows_split: list[list[np.ndarray]] = []
+    c_rows_gather: list[list[np.ndarray]] = []
+    m_split, m_gather = 1, 1
+    for c in range(cg.n_chunks):
+        fresh = cg.new_src[c][: cg.new_src_count[c]]
+        split_by_owner = [fresh[fresh // shard == i] for i in range(n_workers)]
+        lo = c * cg.chunk_size
+        hi = min(cg.n, (c + 1) * cg.chunk_size)
+        dsts = np.arange(lo, hi, dtype=np.int32)
+        gather_by_owner = [dsts[dsts // shard == i] for i in range(n_workers)]
+        c_rows_split.append(split_by_owner)
+        c_rows_gather.append(gather_by_owner)
+        m_split = max(m_split, max(len(r) for r in split_by_owner))
+        m_gather = max(m_gather, max(len(r) for r in gather_by_owner))
+
+    def table(rows, m):
+        out = np.full((cg.n_chunks, n_workers, m), -1, dtype=np.int32)
+        for c, per_owner in enumerate(rows):
+            for i, r in enumerate(per_owner):
+                out[c, i, : len(r)] = r
+        return out
+
+    return ChunkCommPlan(
+        split_rows=jnp.asarray(table(c_rows_split, m_split)),
+        gather_rows=jnp.asarray(table(c_rows_gather, m_gather)),
+        n_workers=n_workers, n_padded=n_padded,
+        m_split=m_split, m_gather=m_gather)
+
+
+# ---------------------------------------------------------------------------
+# Device-side chunk collectives (inside shard_map)
+# ---------------------------------------------------------------------------
+
+def chunk_split_step(h_local: jax.Array, rows_c: jax.Array,
+                     zbuf: jax.Array, axis: str) -> jax.Array:
+    """Move feature slices of ``rows_c`` into the dim-sharded buffer.
+
+    h_local : (V/N, D)   vertex-sharded embeddings (this worker's rows)
+    rows_c  : (N, M)     global ids; rows_c[i] are owned by worker i (pad -1)
+    zbuf    : (V, D/N)   dim-sharded destination buffer (carried by the scan)
+    """
+    n = jax.lax.axis_size(axis)
+    i = jax.lax.axis_index(axis)
+    shard = zbuf.shape[0] // n
+    ds = zbuf.shape[1]
+    mine = rows_c[i]                              # (M,) rows I own
+    local = jnp.where(mine >= 0, mine - i * shard, 0)
+    rows = jnp.take(h_local, local, axis=0, mode="clip")
+    rows = jnp.where((mine >= 0)[:, None], rows, 0.0)     # (M, D)
+    send = rows.reshape(rows.shape[0], n, ds).transpose(1, 0, 2)  # (N, M, Ds)
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    # recv[j] = slices (this worker's dims) of rows owned by worker j
+    ids = rows_c.reshape(-1)
+    ids = jnp.where(ids >= 0, ids, zbuf.shape[0])          # pad → dropped
+    return zbuf.at[ids].set(recv.reshape(-1, ds), mode="drop")
+
+
+def chunk_gather_step(z_chunk: jax.Array, rows_c: jax.Array,
+                      chunk_start: jax.Array, h_out: jax.Array,
+                      axis: str) -> jax.Array:
+    """Collect complete embeddings of chunk destinations.
+
+    z_chunk : (chunk_size, D/N)  this chunk's aggregation output (dim slice)
+    rows_c  : (N, M)             global dst ids grouped by owner (pad -1)
+    h_out   : (V/N, D)           vertex-sharded output buffer
+    """
+    n = jax.lax.axis_size(axis)
+    i = jax.lax.axis_index(axis)
+    shard = h_out.shape[0]          # h_out is already the per-device shard
+    ds = z_chunk.shape[1]
+    # send[j] = my dim-slice of the rows worker j owns
+    in_chunk = jnp.where(rows_c >= 0, rows_c - chunk_start, 0)
+    send = jnp.take(z_chunk, in_chunk.reshape(-1), axis=0, mode="clip")
+    send = jnp.where((rows_c >= 0).reshape(-1, 1), send, 0.0)
+    send = send.reshape(n, rows_c.shape[1], ds)
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    # recv[j] = worker j's dim-slice of MY rows → concat along features
+    full = recv.transpose(1, 0, 2).reshape(rows_c.shape[1], n * ds)  # (M, D)
+    mine = rows_c[i]
+    ids = jnp.where(mine >= 0, mine - i * shard, h_out.shape[0])
+    return h_out.at[ids].set(full, mode="drop")

@@ -1,0 +1,1 @@
+from .synthetic_lm import SyntheticLM  # noqa: F401

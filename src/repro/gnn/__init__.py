@@ -1,0 +1,2 @@
+from . import layers, models, dp_baseline  # noqa: F401
+from .models import GNNConfig, init_params, forward  # noqa: F401

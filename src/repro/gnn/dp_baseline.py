@@ -1,0 +1,221 @@
+"""GNN data parallelism baseline (DepComm, NeutronStar-style).
+
+The comparison system for the paper's ablation (§5.4 "baseline+CS"): the
+graph is partitioned into contiguous destination chunks, one per worker;
+every aggregation needs the embeddings of *remote* in-neighbors, fetched by
+an explicit halo exchange (dependency communication).  This is exactly the
+workload whose imbalance (skewed edge counts, skewed halo sizes) motivates
+tensor parallelism.
+
+The halo exchange is a static, rectangular all-to-all built from
+:func:`repro.graph.partition.halo_plan`; per-worker edge lists are padded to
+the max across workers and sharded on the worker axis, so the whole model
+runs inside one ``shard_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..graph import partition as gp
+from ..graph.format import Graph
+from ..graph.synthetic import GraphData
+from . import models as M
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("send_idx_local", "recv_pos", "src", "dst", "weight",
+                      "valid_rows"),
+         meta_fields=("k", "m", "halo_size", "n_local_max", "e_max"))
+@dataclasses.dataclass(frozen=True)
+class DPGraph:
+    """Per-worker partitioned graph, stacked+padded on the worker axis."""
+
+    send_idx_local: jax.Array  # (k, k, m) int32 LOCAL row ids to send (pad -1)
+    recv_pos: jax.Array        # (k, k, m) int32 halo slot (pad = halo_size)
+    src: jax.Array             # (k, e_max) int32 local-coord srcs (pad 0)
+    dst: jax.Array             # (k, e_max) int32 local dst (pad = n_local_max)
+    weight: jax.Array          # (k, e_max) f32 (pad 0)
+    valid_rows: jax.Array      # (k, n_local_max) f32 1 for real local vertices
+    k: int
+    m: int
+    halo_size: int
+    n_local_max: int
+    e_max: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DPBundle:
+    graph: DPGraph
+    features: jax.Array     # (k, n_local_max, d)
+    labels: jax.Array       # (k, n_local_max)
+    train_mask: jax.Array   # (k, n_local_max)
+    val_mask: jax.Array
+    test_mask: jax.Array
+    num_classes: int
+    comm_rows_per_worker: np.ndarray  # analysis: rows each worker receives
+
+
+def prepare_dp_bundle(data: GraphData, k: int,
+                      balance: str = "vertex") -> DPBundle:
+    g = data.graph
+    part = gp.chunk_partition(g, k, balance=balance)
+    plan = gp.halo_plan(g, part)
+    n_local_max = int(plan.n_local.max())
+    e_max = max(1, max(len(s) for s in plan.local_src))
+
+    send_local = np.full((k, k, plan.m), -1, dtype=np.int32)
+    for i in range(k):
+        lo = part.bounds[i]
+        sel = plan.send_idx[i] >= 0
+        send_local[i][sel] = plan.send_idx[i][sel] - lo
+
+    src = np.zeros((k, e_max), np.int32)
+    dst = np.full((k, e_max), n_local_max, np.int32)
+    wgt = np.zeros((k, e_max), np.float32)
+    valid = np.zeros((k, n_local_max), np.float32)
+    feats = np.zeros((k, n_local_max, data.features.shape[1]), np.float32)
+    labels = np.zeros((k, n_local_max), np.int32)
+    masks = {name: np.zeros((k, n_local_max), np.float32)
+             for name in ("train", "val", "test")}
+    for i in range(k):
+        e_i = len(plan.local_src[i])
+        n_i = int(plan.n_local[i])
+        src[i, :e_i] = plan.local_src[i]
+        # clamp halo coords into the padded layout: local rows sit in
+        # [0, n_local_max), halo rows in [n_local_max, n_local_max+halo)
+        halo_sel = plan.local_src[i] >= n_i
+        src[i, :e_i][halo_sel] += n_local_max - n_i
+        dst[i, :e_i] = plan.local_dst[i]
+        wgt[i, :e_i] = plan.local_w[i]
+        valid[i, :n_i] = 1.0
+        lo, hi = part.bounds[i], part.bounds[i + 1]
+        feats[i, :n_i] = data.features[lo:hi]
+        labels[i, :n_i] = data.labels[lo:hi]
+        masks["train"][i, :n_i] = data.train_mask[lo:hi]
+        masks["val"][i, :n_i] = data.val_mask[lo:hi]
+        masks["test"][i, :n_i] = data.test_mask[lo:hi]
+
+    comm_rows = (plan.send_idx >= 0).sum(axis=(0, 2))
+    graph = DPGraph(
+        send_idx_local=jnp.asarray(send_local),
+        recv_pos=jnp.asarray(plan.recv_pos),
+        src=jnp.asarray(src), dst=jnp.asarray(dst), weight=jnp.asarray(wgt),
+        valid_rows=jnp.asarray(valid),
+        k=k, m=plan.m, halo_size=plan.halo_size,
+        n_local_max=n_local_max, e_max=e_max)
+    return DPBundle(graph=graph, features=jnp.asarray(feats),
+                    labels=jnp.asarray(labels),
+                    train_mask=jnp.asarray(masks["train"]),
+                    val_mask=jnp.asarray(masks["val"]),
+                    test_mask=jnp.asarray(masks["test"]),
+                    num_classes=data.num_classes,
+                    comm_rows_per_worker=comm_rows)
+
+
+# ---------------------------------------------------------------------------
+# Device-side halo exchange + aggregation (inside shard_map)
+# ---------------------------------------------------------------------------
+
+def halo_exchange(h_local: jax.Array, g: DPGraph, axis: str) -> jax.Array:
+    """DepComm: fetch remote in-neighbor rows.  Returns (halo_size+1, D)."""
+    i = jax.lax.axis_index(axis)
+    send_rows = g.send_idx_local[i]                      # (k, m) local ids
+    take_ids = jnp.where(send_rows >= 0, send_rows, 0)
+    send = jnp.take(h_local, take_ids.reshape(-1), axis=0, mode="clip")
+    send = jnp.where((send_rows >= 0).reshape(-1, 1), send, 0.0)
+    send = send.reshape(g.k, g.m, h_local.shape[1])
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    # recv[j] = rows worker j sent me; land them in my halo buffer
+    pos = g.recv_pos[i].reshape(-1)                      # (k*m,)
+    halo = jnp.zeros((g.halo_size + 1, h_local.shape[1]), h_local.dtype)
+    return halo.at[pos].set(recv.reshape(-1, h_local.shape[1]), mode="drop")
+
+
+def dp_aggregate(h_local: jax.Array, g: DPGraph, axis: str,
+                 edge_weight: jax.Array | None = None) -> jax.Array:
+    """One full aggregation round: halo exchange + local weighted SpMM."""
+    i = jax.lax.axis_index(axis)
+    halo = halo_exchange(h_local, g, axis)[:-1]          # drop pad slot
+    h_ext = jnp.concatenate([h_local, halo], axis=0)
+    w = g.weight[i] if edge_weight is None else edge_weight
+    msg = jnp.take(h_ext, g.src[i], axis=0) * w[:, None]
+    out = jax.ops.segment_sum(msg, g.dst[i],
+                              num_segments=g.n_local_max + 1)
+    return out[: g.n_local_max]
+
+
+def dp_coupled_forward(params, cfg: M.GNNConfig, g: DPGraph, x_local,
+                       axis: str = "model"):
+    """Classic coupled data-parallel GNN (per-layer halo exchange)."""
+    h = x_local
+    for i in range(cfg.num_layers):
+        last = i == cfg.num_layers - 1
+        a = dp_aggregate(h, g, axis)
+        p = params["layers"][i]
+        h = a @ p["w"] + p["b"]
+        if not last:
+            h = jax.nn.relu(h)
+    return h
+
+
+def make_dp_train_fns(cfg: M.GNNConfig, bundle: DPBundle, mesh,
+                      optimizer, axis: str = "model"):
+    """Jitted (train_step, evaluate) for the DP baseline (GCN)."""
+
+    def shard_loss(params, g, x_local, labels_local, mask_local):
+        # sharded args arrive with a leading worker axis of size 1
+        x_local = x_local[0]
+        labels_local = labels_local[0]
+        mask_local = mask_local[0]
+        logits = dp_coupled_forward(params, cfg, g, x_local, axis=axis)
+        c_pad = logits.shape[-1]
+        if c_pad > bundle.num_classes:
+            logits = logits.at[:, bundle.num_classes:].add(-1e9)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, labels_local[:, None], axis=1)[:, 0]
+        mask = mask_local * g.valid_rows[jax.lax.axis_index(axis)]
+        loss_sum = jax.lax.psum(jnp.sum(nll * mask), axis)
+        pred = jnp.argmax(logits, axis=-1)
+        correct = jax.lax.psum(
+            jnp.sum((pred == labels_local).astype(jnp.float32) * mask), axis)
+        cnt = jax.lax.psum(jnp.sum(mask), axis)
+        return loss_sum / jnp.maximum(cnt, 1.0), \
+            correct / jnp.maximum(cnt, 1.0)
+
+    smapped = jax.shard_map(
+        shard_loss, mesh=mesh,
+        in_specs=(P(), P(), P(axis, None, None), P(axis, None), P(axis, None)),
+        out_specs=(P(), P()), check_vma=False)
+
+    def _squeeze(x):  # (k, n_local, ...) sharded on axis → per-device (n,...)
+        return x
+
+    def loss_fn(params, mask):
+        loss, _ = smapped(params, bundle.graph, bundle.features,
+                          bundle.labels, mask)
+        return loss
+
+    @jax.jit
+    def train_step(params, opt_state):
+        loss, grads = jax.value_and_grad(loss_fn)(params, bundle.train_mask)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return params, opt_state, loss
+
+    @jax.jit
+    def _eval(params, mask):
+        return smapped(params, bundle.graph, bundle.features,
+                       bundle.labels, mask)
+
+    def evaluate(params, split: str = "val"):
+        mask = {"train": bundle.train_mask, "val": bundle.val_mask,
+                "test": bundle.test_mask}[split]
+        return _eval(params, mask)
+
+    return train_step, evaluate

@@ -1,0 +1,181 @@
+"""GNN model definitions: coupled (classic) and decoupled (paper §4.1).
+
+These are the single-device reference semantics.  The distributed engines
+(`repro.core.decouple` for tensor parallelism, `repro.gnn.dp_baseline` for
+the data-parallel baseline) reuse the same parameter pytrees so accuracy
+comparisons are apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .layers import EdgeListDev
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    model: str = "gcn"          # gcn | gat | sage | gin | rgcn
+    in_dim: int = 64
+    hidden_dim: int = 64
+    num_classes: int = 8
+    num_layers: int = 2         # L — both NN rounds and propagation rounds
+    decoupled: bool = True      # paper's DT mode
+    gamma: float = 1.0          # propagation edge weight γ ∈ (0,1] (§4.1.3)
+    num_edge_types: int = 1     # rgcn only
+    dropout: float = 0.0
+
+
+def init_params(key: jax.Array, cfg: GNNConfig) -> Any:
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    dims = ([cfg.in_dim] + [cfg.hidden_dim] * (cfg.num_layers - 1)
+            + [cfg.num_classes])
+    if cfg.model == "gcn":
+        return {"layers": [L.init_dense(keys[i], dims[i], dims[i + 1])
+                           for i in range(cfg.num_layers)]}
+    if cfg.model == "sage":
+        return {"layers": [L.init_dense(keys[i], 2 * dims[i], dims[i + 1])
+                           for i in range(cfg.num_layers)]}
+    if cfg.model == "gin":
+        return {"layers": [
+            {"l0": L.init_dense(jax.random.fold_in(keys[i], 0),
+                                dims[i], dims[i + 1]),
+             "l1": L.init_dense(jax.random.fold_in(keys[i], 1),
+                                dims[i + 1], dims[i + 1]),
+             "eps": jnp.zeros(())}
+            for i in range(cfg.num_layers)]}
+    if cfg.model == "gat":
+        return {"layers": [L.init_gat_layer(keys[i], dims[i], dims[i + 1])
+                           for i in range(cfg.num_layers)]}
+    if cfg.model == "rgcn":
+        return {
+            "rel": [L.glorot(keys[i],
+                             (cfg.num_edge_types, dims[i], dims[i + 1]))
+                    for i in range(cfg.num_layers)],
+            "self": [L.init_dense(jax.random.fold_in(keys[i], 7),
+                                  dims[i], dims[i + 1])
+                     for i in range(cfg.num_layers)],
+        }
+    raise ValueError(cfg.model)
+
+
+# ---------------------------------------------------------------------------
+# Coupled forward (classic per-layer AGG→UPDATE; eqs. 1–6)
+# ---------------------------------------------------------------------------
+
+def coupled_forward(params, cfg: GNNConfig, g: EdgeListDev, x,
+                    etypes: jax.Array | None = None):
+    h = x
+    n_layers = cfg.num_layers
+    for i in range(n_layers):
+        last = i == n_layers - 1
+        act = (lambda v: v) if last else jax.nn.relu
+        if cfg.model == "gcn":
+            a = L.aggregate(g, h)
+            h = L.gcn_update(params["layers"][i], a, act=act)
+        elif cfg.model == "sage":
+            h = L.sage_forward(params["layers"][i], g, h)
+        elif cfg.model == "gin":
+            p = params["layers"][i]
+            h = L.gin_forward(p, g, h, p["eps"])
+        elif cfg.model == "gat":
+            alpha, hw = L.gat_attention(params["layers"][i], g, h)
+            h = jax.ops.segment_sum(hw[g.src] * alpha[:, None], g.dst,
+                                    num_segments=h.shape[0])
+            h = h if last else jax.nn.elu(h)
+        elif cfg.model == "rgcn":
+            a = L.rgcn_aggregate(g, etypes, h, params["rel"][i])
+            h = act(a + L.dense(params["self"][i], h))
+        else:
+            raise ValueError(cfg.model)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Decoupled forward (paper §4.1.2): L NN rounds → L propagation rounds
+# ---------------------------------------------------------------------------
+
+def mlp_phase(params, cfg: GNNConfig, x):
+    """The vertex-sharded NN phase: UPDATE applied L times (eq. 7)."""
+    h = x
+    n = cfg.num_layers
+    if cfg.model == "gcn":
+        for i, p in enumerate(params["layers"]):
+            h = L.dense(p, h)
+            if i < n - 1:
+                h = jax.nn.relu(h)
+    elif cfg.model == "sage":
+        for i, p in enumerate(params["layers"]):
+            # decoupled SAGE degenerates to dense on [h‖h] (self=neigh input)
+            h = jnp.concatenate([h, h], axis=-1) @ p["w"] + p["b"]
+            if i < n - 1:
+                h = jax.nn.relu(h)
+    elif cfg.model == "gin":
+        for i, p in enumerate(params["layers"]):
+            h = jax.nn.relu(L.dense(p["l0"], h))
+            h = L.dense(p["l1"], h)
+    elif cfg.model == "gat":
+        for i, p in enumerate(params["layers"]):
+            h = h @ p["w"]
+            if i < n - 1:
+                h = jax.nn.elu(h)
+    elif cfg.model == "rgcn":
+        for i in range(n):
+            h = L.dense(params["self"][i], h)
+            if i < n - 1:
+                h = jax.nn.relu(h)
+    else:
+        raise ValueError(cfg.model)
+    return h
+
+
+def propagation_edge_weights(params, cfg: GNNConfig, g: EdgeListDev, h):
+    """Edge weights for the propagation phase.
+
+    GCN/SAGE/GIN: the (pre-normalized) structural weights, scaled by γ.
+    GAT: the generalized decoupling — precompute attention α from the final
+    embeddings (edge-associated NN op pulled in front of aggregation, §4.1.1).
+    """
+    if cfg.model == "gat":
+        p = params["layers"][-1]
+        sl = h @ p["a_l"]
+        sr = h @ p["a_r"]
+        e = jax.nn.leaky_relu(sl[g.src] + sr[g.dst], 0.2)
+        alpha = L.segment_softmax(e, g.dst, h.shape[0])
+        return cfg.gamma * alpha
+    return cfg.gamma * g.weight
+
+
+def decoupled_forward(params, cfg: GNNConfig, g: EdgeListDev, x,
+                      etypes: jax.Array | None = None):
+    """Reference (single-device) decoupled semantics: eqs. 7–9."""
+    h = mlp_phase(params, cfg, x)
+    w = propagation_edge_weights(params, cfg, g, h)
+    z = h
+    for _ in range(cfg.num_layers):
+        z = L.aggregate(g, z, edge_weight=w)
+    return z
+
+
+def forward(params, cfg: GNNConfig, g: EdgeListDev, x,
+            etypes: jax.Array | None = None):
+    if cfg.decoupled:
+        return decoupled_forward(params, cfg, g, x, etypes)
+    return coupled_forward(params, cfg, g, x, etypes)
+
+
+def cross_entropy(logits, labels, mask):
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    mask = mask.astype(logits.dtype)
+    return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def accuracy(logits, labels, mask):
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels).astype(jnp.float32) * mask
+    return correct.sum() / jnp.maximum(mask.sum(), 1.0)

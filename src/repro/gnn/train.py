@@ -1,0 +1,82 @@
+"""Single-device full-graph training loop (reference + accuracy studies).
+
+Used by the accuracy-parity benchmark (paper §5.7 / Fig. 16) to train the
+coupled and decoupled variants under identical conditions, and by the
+quickstart example.  Distributed training goes through
+``repro.core.decouple.make_tp_train_fns`` instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .. import optim
+from ..graph.synthetic import GraphData
+from . import layers as L
+from . import models as M
+
+
+@dataclasses.dataclass
+class EpochLog:
+    epoch: int
+    loss: float
+    train_acc: float
+    val_acc: float
+    test_acc: float
+    seconds: float
+
+
+def train_full_graph(data: GraphData, cfg: M.GNNConfig,
+                     epochs: int = 100, lr: float = 1e-2,
+                     weight_decay: float = 5e-4, seed: int = 0,
+                     log_every: int = 10,
+                     callback: Callable[[EpochLog], None] | None = None):
+    """Train on the full graph; returns (params, [EpochLog])."""
+    g = L.edge_list_dev(data.graph)
+    x = jnp.asarray(data.features)
+    labels = jnp.asarray(data.labels)
+    etypes = (jnp.asarray(data.edge_types)
+              if data.edge_types is not None else None)
+    masks = {k: jnp.asarray(v.astype("float32")) for k, v in
+             dict(train=data.train_mask, val=data.val_mask,
+                  test=data.test_mask).items()}
+
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    opt = optim.adamw(lr, weight_decay=weight_decay)
+    opt_state = opt.init(params)
+
+    def loss_fn(p, mask):
+        logits = M.forward(p, cfg, g, x, etypes)
+        return M.cross_entropy(logits, labels, mask)
+
+    @jax.jit
+    def step(p, s):
+        loss, grads = jax.value_and_grad(loss_fn)(p, masks["train"])
+        updates, s = opt.update(grads, s, p)
+        p = jax.tree.map(lambda a, u: a + u, p, updates)
+        return p, s, loss
+
+    @jax.jit
+    def metrics(p):
+        logits = M.forward(p, cfg, g, x, etypes)
+        return tuple(M.accuracy(logits, labels, masks[k])
+                     for k in ("train", "val", "test"))
+
+    logs: list[EpochLog] = []
+    for epoch in range(1, epochs + 1):
+        t0 = time.perf_counter()
+        params, opt_state, loss = step(params, opt_state)
+        loss.block_until_ready()
+        dt = time.perf_counter() - t0
+        if epoch % log_every == 0 or epoch == epochs:
+            tr, va, te = metrics(params)
+            log = EpochLog(epoch, float(loss), float(tr), float(va),
+                           float(te), dt)
+            logs.append(log)
+            if callback:
+                callback(log)
+    return params, logs

@@ -1,0 +1,7 @@
+from .format import (Graph, ChunkedGraph, BlockSparseGraph, build_graph,
+                     chunk_graph, block_sparse, pad_features)  # noqa: F401
+from .synthetic import (GraphData, sbm_power_law, barabasi_albert,
+                        heterogeneous_sbm, reddit_like)  # noqa: F401
+from .partition import (Partition, chunk_partition, hash_partition,
+                        greedy_edge_cut_partition, workload_stats,
+                        tensor_parallel_stats, halo_plan)  # noqa: F401

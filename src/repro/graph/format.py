@@ -1,0 +1,247 @@
+"""Graph containers and TPU-friendly sparse formats.
+
+NeutronTP replicates the full graph structure on every worker and shards the
+*feature* dimension instead.  The formats here are therefore built for
+single-worker full-graph aggregation:
+
+* ``Graph``          — COO sorted by destination + CSR ``indptr`` over in-edges,
+                       with GCN symmetric normalization baked into ``weight``.
+* ``ChunkedGraph``   — the paper's §4.2 chunk partition: contiguous destination
+                       ranges with *all* their in-edges, padded to rectangular
+                       arrays so a ``lax.scan`` can stream chunks.
+* ``BlockSparseGraph`` — (dst_block × src_block) dense tiles for the Pallas
+                       SpMM kernel: TPUs want MXU tiles, not gather/scatter,
+                       so aggregation becomes a block-sparse matmul.
+
+Everything is constructed in numpy (host, once) and consumed as jnp arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Full graph, in-edge oriented (COO sorted by dst + CSR indptr)."""
+
+    n: int
+    src: np.ndarray       # (E,) int32, sorted by dst
+    dst: np.ndarray       # (E,) int32, non-decreasing
+    weight: np.ndarray    # (E,) float32 aggregation coefficients
+    indptr: np.ndarray    # (n+1,) int64 CSR offsets over dst
+
+    @property
+    def e(self) -> int:
+        return int(self.src.shape[0])
+
+    def in_degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    def out_degrees(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.n).astype(np.int64)
+
+    def dense_adjacency(self) -> np.ndarray:
+        """Dense normalized adjacency (test oracle only)."""
+        a = np.zeros((self.n, self.n), dtype=np.float32)
+        a[self.dst, self.src] += self.weight
+        return a
+
+
+def _sort_by_dst(src: np.ndarray, dst: np.ndarray,
+                 weight: np.ndarray | None = None):
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    weight = None if weight is None else weight[order]
+    return src, dst, weight
+
+
+def build_graph(src: np.ndarray, dst: np.ndarray, n: int, *,
+                add_self_loops: bool = True,
+                normalization: str = "sym") -> Graph:
+    """Build a :class:`Graph` with GCN-style normalized edge weights.
+
+    normalization:
+      * ``"sym"``  — 1/sqrt(deg_in(v) · deg_out(u))  (GCN, eq. 3)
+      * ``"mean"`` — 1/deg_in(v)                      (GraphSAGE mean)
+      * ``"none"`` — 1                                 (GIN sum)
+    """
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if add_self_loops:
+        loop = np.arange(n, dtype=np.int32)
+        src = np.concatenate([src, loop])
+        dst = np.concatenate([dst, loop])
+    # dedupe parallel edges
+    key = dst.astype(np.int64) * n + src.astype(np.int64)
+    key, uniq_idx = np.unique(key, return_index=True)
+    src, dst = src[uniq_idx], dst[uniq_idx]
+
+    src, dst, _ = _sort_by_dst(src, dst)
+    deg_in = np.bincount(dst, minlength=n).astype(np.float64)
+    deg_out = np.bincount(src, minlength=n).astype(np.float64)
+    if normalization == "sym":
+        w = 1.0 / np.sqrt(np.maximum(deg_in[dst], 1.0)
+                          * np.maximum(deg_out[src], 1.0))
+    elif normalization == "mean":
+        w = 1.0 / np.maximum(deg_in[dst], 1.0)
+    elif normalization == "none":
+        w = np.ones_like(src, dtype=np.float64)
+    else:
+        raise ValueError(f"unknown normalization {normalization!r}")
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(dst, minlength=n), out=indptr[1:])
+    return Graph(n=n, src=src, dst=dst,
+                 weight=w.astype(np.float32), indptr=indptr)
+
+
+# ---------------------------------------------------------------------------
+# Chunked format (paper §4.2: contiguous dst ranges + all their in-edges)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedGraph:
+    """Rectangular per-chunk edge arrays for ``lax.scan`` streaming.
+
+    Padded edges carry weight 0 and point at dst slot ``chunk_size`` which is
+    dropped after segment-sum, so padding is numerically inert.
+    """
+
+    n: int
+    n_chunks: int
+    chunk_size: int            # destinations per chunk (last chunk padded)
+    src: np.ndarray            # (n_chunks, max_e) int32, pad=0
+    dst_local: np.ndarray      # (n_chunks, max_e) int32 in [0, chunk_size], pad=chunk_size
+    weight: np.ndarray         # (n_chunks, max_e) float32, pad=0.0
+    edge_id: np.ndarray        # (n_chunks, max_e) int32 id into the flat edge
+                               # list (pad=E) — lets per-edge quantities (GAT α)
+                               # be re-chunked on device
+    # Inter-chunk pipelining (§4.2.2): srcs whose embedding slice is first
+    # used by this chunk — the dedup'd per-chunk communication task.
+    new_src: np.ndarray        # (n_chunks, max_new) int32, pad=-1
+    new_src_count: np.ndarray  # (n_chunks,) int32
+
+    @property
+    def max_e(self) -> int:
+        return int(self.src.shape[1])
+
+
+def chunk_graph(g: Graph, n_chunks: int) -> ChunkedGraph:
+    n = g.n
+    chunk_size = -(-n // n_chunks)
+    srcs, dsts, ws, eids, news, new_counts = [], [], [], [], [], []
+    seen = np.zeros(n, dtype=bool)
+    max_e = 1
+    max_new = 1
+    for c in range(n_chunks):
+        # clamp: with n_chunks ∤ n, ceil-sized chunks can overrun n (e.g.
+        # n=6, n_chunks=5 → chunk 4 would start at 8); trailing chunks
+        # become empty, which the padded layout already represents.
+        lo = min(n, c * chunk_size)
+        hi = min(n, (c + 1) * chunk_size)
+        e_lo, e_hi = g.indptr[lo], g.indptr[hi]
+        s = g.src[e_lo:e_hi]
+        d = g.dst[e_lo:e_hi] - lo
+        w = g.weight[e_lo:e_hi]
+        eid = np.arange(e_lo, e_hi, dtype=np.int64)
+        fresh = np.unique(s[~seen[s]]) if s.size else np.empty(0, np.int32)
+        seen[fresh] = True
+        srcs.append(s); dsts.append(d); ws.append(w); eids.append(eid)
+        news.append(fresh)
+        new_counts.append(len(fresh))
+        max_e = max(max_e, len(s))
+        max_new = max(max_new, len(fresh))
+
+    def pad(a, length, value, dtype):
+        out = np.full(length, value, dtype=dtype)
+        out[: len(a)] = a
+        return out
+
+    return ChunkedGraph(
+        n=n, n_chunks=n_chunks, chunk_size=chunk_size,
+        src=np.stack([pad(s, max_e, 0, np.int32) for s in srcs]),
+        dst_local=np.stack(
+            [pad(d, max_e, chunk_size, np.int32) for d in dsts]),
+        weight=np.stack([pad(w, max_e, 0.0, np.float32) for w in ws]),
+        edge_id=np.stack([pad(e, max_e, g.e, np.int32) for e in eids]),
+        new_src=np.stack([pad(f, max_new, -1, np.int32) for f in news]),
+        new_src_count=np.asarray(new_counts, dtype=np.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse format for the Pallas SpMM kernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockSparseGraph:
+    """(dst_block, src_block) dense tiles of the normalized adjacency.
+
+    ``blocks[k]`` is the dense ``(bs, bs)`` tile for the pair
+    ``(block_rows[k], block_cols[k])``; pairs are sorted by ``block_rows`` so
+    a sequential kernel grid can accumulate per destination block.
+    ``row_first[k]`` is 1 iff k is the first pair of its destination block.
+    """
+
+    n: int                  # original vertex count
+    n_padded: int           # padded to a multiple of bs
+    bs: int                 # block size (MXU-friendly, multiple of 8/128)
+    n_blocks: int           # n_padded // bs
+    block_rows: np.ndarray  # (nnzb,) int32, non-decreasing
+    block_cols: np.ndarray  # (nnzb,) int32
+    row_first: np.ndarray   # (nnzb,) int32 {0,1}
+    blocks: np.ndarray      # (nnzb, bs, bs) float32
+
+    @property
+    def nnzb(self) -> int:
+        return int(self.block_rows.shape[0])
+
+    def density(self) -> float:
+        return self.nnzb / float(self.n_blocks * self.n_blocks)
+
+
+def block_sparse(g: Graph, bs: int = 128) -> BlockSparseGraph:
+    n_padded = -(-g.n // bs) * bs
+    n_blocks = n_padded // bs
+    bi = g.dst.astype(np.int64) // bs
+    bj = g.src.astype(np.int64) // bs
+    pair = bi * n_blocks + bj
+    order = np.argsort(pair, kind="stable")
+    pair_sorted = pair[order]
+    uniq, start = np.unique(pair_sorted, return_index=True)
+    block_rows = (uniq // n_blocks).astype(np.int32)
+    block_cols = (uniq % n_blocks).astype(np.int32)
+    blocks = np.zeros((len(uniq), bs, bs), dtype=np.float32)
+    # scatter edges into their tiles
+    tile_of_edge = np.searchsorted(uniq, pair)
+    blocks[tile_of_edge, g.dst % bs, g.src % bs] += g.weight
+    # ensure every destination block row has >= 1 tile: the Pallas kernel
+    # writes each out block only when visited, so empty rows get an explicit
+    # zero diagonal tile (keeps output fully initialized).
+    present = np.zeros(n_blocks, dtype=bool)
+    present[block_rows] = True
+    missing = np.where(~present)[0].astype(np.int32)
+    if len(missing):
+        block_rows = np.concatenate([block_rows, missing])
+        block_cols = np.concatenate([block_cols, missing])
+        blocks = np.concatenate(
+            [blocks, np.zeros((len(missing), bs, bs), np.float32)])
+        order = np.argsort(block_rows, kind="stable")
+        block_rows, block_cols = block_rows[order], block_cols[order]
+        blocks = blocks[order]
+    row_first = np.ones(len(block_rows), dtype=np.int32)
+    row_first[1:] = (block_rows[1:] != block_rows[:-1]).astype(np.int32)
+    return BlockSparseGraph(
+        n=g.n, n_padded=n_padded, bs=bs, n_blocks=n_blocks,
+        block_rows=block_rows, block_cols=block_cols,
+        row_first=row_first, blocks=blocks)
+
+
+def pad_features(x: np.ndarray, n_padded: int) -> np.ndarray:
+    if x.shape[0] == n_padded:
+        return x
+    out = np.zeros((n_padded,) + x.shape[1:], dtype=x.dtype)
+    out[: x.shape[0]] = x
+    return out

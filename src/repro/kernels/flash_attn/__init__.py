@@ -1,0 +1,1 @@
+from .ops import flash_attention, flash_ref, hbm_bytes_model  # noqa: F401

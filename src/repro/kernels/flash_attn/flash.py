@@ -1,0 +1,186 @@
+"""Pallas TPU kernel: flash attention (GQA-aware, causal/windowed/softcap).
+
+The §Roofline baseline shows the memory term of every *_32k prefill and
+train_4k combo is dominated by attention score traffic: even the jnp
+blockwise schedule keeps its (block_q × block_kv) score/prob temporaries in
+HBM at the HLO level.  On TPU the fix is structural — the score block must
+live and die in VMEM.  This kernel is the flash-attention schedule with
+explicit BlockSpec tiling:
+
+  grid = (B·Hq, nq, nkv)    kv innermost (revisiting accumulation)
+  VMEM per step: q (bq × hd) + k,v (bkv × hd) + scores (bq × bkv)
+                 + acc (bq × hd) + m,l (bq)
+  bq = bkv = 512, hd = 128 ⇒ ~2.6 MiB fp32 — inside the ~16 MiB VMEM
+  budget with headroom for double-buffered DMAs; both matmul dims are
+  multiples of 128 (MXU-aligned).
+
+GQA is handled in the k/v BlockSpec index maps: query head h reads kv head
+h // (Hq/Hkv) — no head replication in HBM.
+
+HBM traffic per (b, h): Q once, O once, K/V once per q-block
+  ⇒ bytes ≈ B·Hq·(2·Sq·hd + 2·nq·Skv·hd_kv)·itemsize
+which is the "kernel-corrected" memory term quoted in §Perf (the dry-run
+HLO census cannot see VMEM residency — CPU backend Pallas is
+interpret-only — so §Perf reports both the census number and this model).
+
+Causal block skipping: steps with block_kv_start > block_q_end contribute
+nothing; ``pl.when`` guards the compute so the MXU work is skipped on
+TPU (the DMA for the skipped block is still scheduled — acceptable, since
+fetching K/V is ≤ ¼ of the compute-side win at these block shapes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_q: int, block_kv: int, nkv: int,
+            sq: int, skv: int, causal: bool, window, softcap):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = kj * block_kv
+    # causal: skip blocks entirely above the diagonal
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        needed = needed & (k_start + block_kv - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, hd)
+        v = v_ref[0].astype(jnp.float32)                  # (bkv, hdv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 1)
+        mask = k_pos < skv                                 # kv padding
+        mask &= q_pos < sq                                 # q padding
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                # (bq,)
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_prev * alpha + p.sum(axis=1)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kj == nkv - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "scale",
+                              "block_q", "block_kv", "interpret"))
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: int | None = None,
+                         softcap: float | None = None,
+                         scale: float | None = None,
+                         block_q: int = 512, block_kv: int = 512,
+                         interpret: bool = True) -> jax.Array:
+    """Flash attention on head-major layouts.
+
+    q: (B, Hq, Sq, hd); k/v: (B, Hkv, Skv, hd[_v]) with Hq % Hkv == 0.
+    Sq/Skv may be arbitrary (padded internally to block multiples).
+    Returns (B, Hq, Sq, hd_v) in q.dtype.
+    """
+    b, hq, sq, hd = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = scale if scale is not None else hd ** -0.5
+
+    block_q = min(block_q, _round_up(sq, 8))
+    block_kv = min(block_kv, _round_up(skv, 8))
+    q_pad = (-sq) % block_q
+    kv_pad = (-skv) % block_kv
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, kv_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, kv_pad), (0, 0)))
+    nq = (sq + q_pad) // block_q
+    nkv = (skv + kv_pad) // block_kv
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+        nkv=nkv, sq=sq, skv=skv, causal=causal, window=window,
+        softcap=softcap)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd),
+                         lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_kv, hd),
+                         lambda bh, i, j, g=g, hq=hq:
+                         ((bh // hq) * hkv + (bh % hq) // g, j, 0)),
+            pl.BlockSpec((1, block_kv, hdv),
+                         lambda bh, i, j, g=g, hq=hq:
+                         ((bh // hq) * hkv + (bh % hq) // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hdv),
+                               lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq + q_pad, hdv), q.dtype),
+        scratch_shapes=[
+            _vmem_scratch((block_q,), jnp.float32),    # running max m
+            _vmem_scratch((block_q,), jnp.float32),    # running sum l
+            _vmem_scratch((block_q, hdv), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(q.reshape(b * hq, sq + q_pad, hd),
+      k.reshape(b * hkv, skv + kv_pad, hd),
+      v.reshape(b * hkv, skv + kv_pad, hdv))
+    return out.reshape(b, hq, sq + q_pad, hdv)[:, :, :sq]
+
+
+def _vmem_scratch(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def hbm_bytes_model(b: int, hq: int, hkv: int, sq: int, skv: int,
+                    hd: int, hdv: int, *, block_q: int = 512,
+                    itemsize: int = 4) -> int:
+    """Analytic HBM traffic of this kernel's schedule (the VMEM-resident
+    score block never touches HBM): Q+O once, K/V once per q-block."""
+    nq = -(-sq // block_q)
+    q_o = b * hq * sq * (hd + hdv)
+    kv = b * hkv * nq * skv * (hd + hdv)
+    return (q_o + kv) * itemsize

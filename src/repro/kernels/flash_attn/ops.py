@@ -1,0 +1,46 @@
+"""Jitted public wrapper around the flash-attention Pallas kernel.
+
+Accepts the model's (B, S, H, hd) token-major layout, transposes to the
+kernel's head-major layout, and dispatches to the kernel (interpret=True on
+CPU — validation mode) or the jnp oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash import flash_attention_bhsd, hbm_bytes_model
+from .ref import flash_ref
+
+__all__ = ["flash_attention", "flash_ref", "hbm_bytes_model"]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "scale",
+                                   "block_q", "block_kv", "interpret",
+                                   "use_ref"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool = True,
+                    use_ref: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, hd); k/v: (B, Skv, Hkv, hd[_v]) → (B, Sq, Hq, hd_v).
+
+    ``interpret=True`` executes the kernel body on CPU; pass False on TPU.
+    ``use_ref`` short-circuits to the dense oracle (A/B inside models)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if use_ref:
+        out = flash_ref(qt, kt, vt, causal=causal, window=window,
+                        softcap=softcap, scale=scale)
+    else:
+        out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                   softcap=softcap, scale=scale,
+                                   block_q=block_q, block_kv=block_kv,
+                                   interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

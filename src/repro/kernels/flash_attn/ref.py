@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel (head-major layout)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_ref(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None,
+              softcap: Optional[float] = None,
+              scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Skv, hd[_v]).  Dense math —
+    materializes the full score matrix (small shapes only)."""
+    b, hq, sq, hd = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    kq = jnp.repeat(k, g, axis=1)          # (B, Hq, Skv, hd)
+    vq = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

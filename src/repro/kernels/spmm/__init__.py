@@ -1,0 +1,3 @@
+from .ops import BlockSparseDev, block_sparse_dev, aggregate_pallas  # noqa: F401
+from .ref import spmm_ref, spmm_dense_ref  # noqa: F401
+from .spmm import spmm_block_sparse  # noqa: F401

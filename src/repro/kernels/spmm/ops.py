@@ -1,0 +1,63 @@
+"""Jitted public wrapper around the block-sparse SpMM Pallas kernel."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ...graph.format import BlockSparseGraph
+from .spmm import spmm_block_sparse
+from .ref import spmm_ref
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("blocks", "block_rows", "block_cols", "row_first"),
+         meta_fields=("n", "n_padded", "bs"))
+@dataclasses.dataclass(frozen=True)
+class BlockSparseDev:
+    blocks: jax.Array
+    block_rows: jax.Array
+    block_cols: jax.Array
+    row_first: jax.Array
+    n: int
+    n_padded: int
+    bs: int
+
+
+def block_sparse_dev(bsg: BlockSparseGraph,
+                     dtype=jnp.float32) -> BlockSparseDev:
+    return BlockSparseDev(
+        blocks=jnp.asarray(bsg.blocks, dtype),
+        block_rows=jnp.asarray(bsg.block_rows),
+        block_cols=jnp.asarray(bsg.block_cols),
+        row_first=jnp.asarray(bsg.row_first),
+        n=bsg.n, n_padded=bsg.n_padded, bs=bsg.bs)
+
+
+def aggregate_pallas(bsg: BlockSparseDev, h: jax.Array, *,
+                     d_tile: int = 128, interpret: bool = True,
+                     use_ref: bool = False) -> jax.Array:
+    """Â @ h via the Pallas kernel; pads rows/dims, unpads the result.
+
+    ``interpret=True`` executes the kernel body on CPU (validation mode);
+    on real TPU pass ``interpret=False``.  ``use_ref`` short-circuits to the
+    jnp oracle (useful to A/B inside larger models).
+    """
+    n, d = h.shape
+    pad_rows = bsg.n_padded - n
+    d_tile = min(d_tile, _round_up(d, 8))
+    d_pad = _round_up(d, d_tile) - d
+    hp = jnp.pad(h, ((0, pad_rows), (0, d_pad)))
+    if use_ref:
+        out = spmm_ref(bsg.blocks, bsg.block_rows, bsg.block_cols, hp)
+    else:
+        out = spmm_block_sparse(bsg.blocks, bsg.block_rows, bsg.block_cols,
+                                bsg.row_first, hp, d_tile=d_tile,
+                                interpret=interpret)
+    return out[:n, :d]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m

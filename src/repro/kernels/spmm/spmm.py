@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: block-sparse SpMM for full-graph GNN aggregation.
+
+The paper's compute hot-spot is the graph aggregation ``Â @ H`` executed by
+every worker on its feature slice.  A GPU implementation would gather rows
+with scatter/atomics; that ports badly to TPU, so we adapt the insight to
+the MXU: the normalized adjacency is stored as dense ``(bs × bs)`` tiles for
+the non-empty (dst-block, src-block) pairs (``repro.graph.format
+.block_sparse``) and aggregation becomes a sequence of small dense matmuls
+
+    out[r(k)] (+)= blocks[k] @ h[c(k)]        k = 0..nnzb-1, sorted by r(k)
+
+Scheduling:
+  * grid = (d_tiles, nnzb) — the tile index k iterates fastest, so all tiles
+    of one destination row-block are consecutive and the output block stays
+    resident in VMEM while it accumulates (revisiting pattern).
+  * the (r(k), c(k), first(k)) tables are scalar-prefetched so the
+    BlockSpec index maps can look them up before each step's DMA.
+  * VMEM working set per step: bs·bs (tile) + bs·dt (src rows) + bs·dt
+    (out) floats — bs=dt=128 ⇒ ~192 KiB in fp32, well inside the ~16 MiB
+    VMEM budget, MXU-aligned on both matmul dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(rows_ref, cols_ref, first_ref, blocks_ref, h_ref, out_ref):
+    k = pl.program_id(1)
+    a = blocks_ref[0]                      # (bs, bs) adjacency tile
+    x = h_ref[...]                         # (bs, dt) source feature rows
+    contrib = jnp.dot(a, x, preferred_element_type=jnp.float32)
+
+    @pl.when(first_ref[k] == 1)
+    def _init():
+        out_ref[...] = contrib.astype(out_ref.dtype)
+
+    @pl.when(first_ref[k] == 0)
+    def _acc():
+        out_ref[...] = (out_ref[...].astype(jnp.float32)
+                        + contrib).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("d_tile", "interpret"))
+def spmm_block_sparse(blocks: jax.Array, block_rows: jax.Array,
+                      block_cols: jax.Array, row_first: jax.Array,
+                      h: jax.Array, *, d_tile: int = 128,
+                      interpret: bool = True) -> jax.Array:
+    """out = A @ h with A given as sorted block tiles.
+
+    blocks     : (nnzb, bs, bs) float
+    block_rows : (nnzb,) int32 non-decreasing destination block ids
+    block_cols : (nnzb,) int32 source block ids
+    row_first  : (nnzb,) int32 — 1 iff first tile of its destination row
+    h          : (n_padded, d) with n_padded % bs == 0 and d % d_tile == 0
+    """
+    nnzb, bs, _ = blocks.shape
+    n_padded, d = h.shape
+    assert n_padded % bs == 0, (n_padded, bs)
+    assert d % d_tile == 0, (d, d_tile)
+    d_tiles = d // d_tile
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(d_tiles, nnzb),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda j, k, rows, cols, first:
+                         (k, 0, 0)),
+            pl.BlockSpec((bs, d_tile), lambda j, k, rows, cols, first:
+                         (cols[k], j)),
+        ],
+        out_specs=pl.BlockSpec((bs, d_tile), lambda j, k, rows, cols, first:
+                               (rows[k], j)),
+    )
+    fn = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_padded, d), h.dtype),
+        interpret=interpret,
+    )
+    return fn(block_rows, block_cols, row_first, blocks, h)

@@ -1,0 +1,1 @@
+from .ops import ssd_chunked_pallas, ssd_dense_ref, hbm_bytes_model  # noqa: F401

@@ -1,0 +1,63 @@
+"""Jitted public wrapper: full chunked SSD using the Pallas intra-chunk
+kernel + the tiny jnp inter-chunk recurrence.  Drop-in replacement for
+``repro.nn.ssm.ssd_chunked`` (same signature and semantics)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ssd import ssd_intra_chunk, hbm_bytes_model
+from .ref import ssd_dense_ref
+
+__all__ = ["ssd_chunked_pallas", "ssd_dense_ref", "hbm_bytes_model"]
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_pallas(x, dt, a, b_mat, c_mat, chunk: int, *,
+                       interpret: bool = True):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); b/c: (B,S,N).
+    Returns (y (B,S,H,P) fp32, final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    s_orig = s
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        s += pad
+    nc = s // chunk
+
+    y_intra, states = ssd_intra_chunk(
+        x.astype(jnp.float32), dt.astype(jnp.float32), a,
+        b_mat.astype(jnp.float32), c_mat.astype(jnp.float32),
+        chunk=chunk, interpret=interpret)
+
+    # inter-chunk recurrence (tiny: nc steps over (B,H,P,N))
+    da_h = (dt * a[None, None]).reshape(bsz, nc, chunk, h) \
+        .transpose(0, 1, 3, 2)                          # (B,nc,H,Q)
+    chunk_decay = jnp.exp(jnp.sum(da_h, axis=-1))       # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B,nc,H,P,N)
+
+    # inter-chunk contribution (head-major batched matmul, as in R3.1)
+    cc = c_mat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    decay_from_start = jnp.exp(jnp.cumsum(da_h, axis=-1))
+    ch = cc[:, :, None] * decay_from_start[..., None]   # (B,nc,H,Q,N)
+    y_inter_h = ch @ jnp.swapaxes(prev_states, -1, -2)  # (B,nc,H,Q,P)
+    y_inter = y_inter_h.transpose(0, 1, 3, 2, 4).reshape(bsz, s, h, p)
+
+    y = y_intra + y_inter
+    return y[:, :s_orig], final

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the SSD kernel: the dense dual (quadratic) form.
+
+y[t] = Σ_{s≤t} C[t]·exp(Σ_{s<k≤t} da[k])·dt[s]·(B[s]·x[s])  — one S×S
+masked matrix, no chunking.  Independent of BOTH the chunked jnp
+implementation (nn/ssm.ssd_chunked) and the Pallas kernel's scheduling,
+so it can arbitrate between them.  Small shapes only (materializes S×S).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_dense_ref(x, dt, a, b_mat, c_mat):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); b/c: (B,S,N) → (B,S,H,P)."""
+    s = x.shape[1]
+    da = dt * a                                        # (B,S,H)
+    cs = jnp.cumsum(da, axis=1)
+    # L[t, s] = exp(cs[t] - cs[s]) for s <= t  (decay from s+1..t)
+    seg = cs[:, :, None] - cs[:, None, :]              # (B,T,S,H)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    l_mat = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("btn,bsn->bts", c_mat, b_mat)  # (B,T,S)
+    m = scores[..., None] * l_mat * dt[:, None]        # (B,T,S,H)
+    y = jnp.einsum("btsh,bshp->bthp", m, x)
+    return y

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk dual form.
+
+§Perf round 3 follow-up: R3.1's layout restructure halved mamba2's memory
+term at the HLO level, but the (Q,Q) chunk matrices (scores, decay L, M)
+still round-trip HBM between the XLA dots.  On TPU they belong in VMEM:
+this kernel fuses the whole intra-chunk computation — decay segsum,
+C·Bᵀ scores, masked M = scores⊙L⊙dt, y_intra = M·X, and the per-chunk
+boundary state — into one grid step per (batch·head, chunk).
+
+  grid = (B·H, nc)
+  VMEM per step (Q=64, P=64, N=128, fp32):
+    x (Q,P) 16K + b,c (Q,N) 2×32K + L/scores/M (Q,Q) 3×16K
+    + y (Q,P) 16K + state (P,N) 32K ≈ 180 KiB — far inside ~16 MiB,
+  leaving room to raise Q to 128 on real hardware (MXU-preferred).
+
+The tiny inter-chunk recurrence (nc steps over (P,N) states) and the
+y_inter correction stay in jnp — they are O(S/Q) and bandwidth-trivial.
+
+HBM traffic model (ops.hbm_bytes_model): each chunk reads x, dt, b, c
+once and writes y_intra + state once — no (Q,Q) buffer ever leaves VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref):
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0, 0].astype(jnp.float32)       # scalar decay rate
+    b = b_ref[0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0].astype(jnp.float32)          # (Q, N)
+    q = x.shape[0]
+
+    da = dt * a                               # (Q,)
+    cs = jnp.cumsum(da)
+    seg = cs[:, None] - cs[None, :]           # (Q, Q)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_mat = jnp.where(kj <= qi, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    m = scores * l_mat * dt[None, :]          # (Q, Q)
+    y_ref[0] = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    # chunk boundary state: st[p, n] = Σ_k exp(cs_Q − cs_k)·dt_k·x[k,p]·b[k,n]
+    w = jnp.exp(cs[q - 1] - cs) * dt          # (Q,)
+    st_ref[0, 0] = jax.lax.dot_general(
+        x, b * w[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_intra_chunk(x, dt, a, b_mat, c_mat, *, chunk: int,
+                    interpret: bool = True):
+    """Intra-chunk SSD via the Pallas kernel.
+
+    x: (B,S,H,P); dt: (B,S,H) (already softplus'd); a: (H,);
+    b/c: (B,S,N); S % chunk == 0.
+    Returns (y_intra (B,S,H,P), states (B,nc,H,P,N)) in fp32.
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    # head-major flattening: rows are (B·H), kernel indexes chunks
+    xh = x.transpose(0, 2, 1, 3).reshape(bsz * h, s, p)
+    dth = dt.transpose(0, 2, 1).reshape(bsz * h, s)
+    ah = jnp.broadcast_to(a[None], (bsz, h)).reshape(bsz * h, 1)
+    # b/c shared across heads: index map divides the row id by H
+    y, st = pl.pallas_call(
+        _kernel,
+        grid=(bsz * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda r, c: (r, c, 0)),
+            pl.BlockSpec((1, chunk), lambda r, c: (r, c)),
+            pl.BlockSpec((1, 1), lambda r, c: (r, 0)),
+            pl.BlockSpec((1, chunk, n), lambda r, c, h=h: (r // h, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda r, c, h=h: (r // h, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda r, c: (r, c, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda r, c: (r, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz * h, s, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz * h, nc, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xh, dth, ah, b_mat, c_mat)
+
+    y = y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3)
+    st = st.reshape(bsz, h, nc, p, n).transpose(0, 2, 1, 3, 4)
+    return y, st
+
+
+def hbm_bytes_model(bsz: int, s: int, h: int, p: int, n: int, *,
+                    chunk: int = 64, itemsize: int = 4) -> int:
+    """Kernel HBM traffic: x,dt read + y written per (b,h); b,c read per
+    (b,h) chunk pass; boundary states written once.  No (Q,Q) traffic."""
+    nc = -(-s // chunk)
+    xy = 2 * bsz * h * s * p
+    dtb = bsz * h * s
+    bc = 2 * bsz * h * s * n
+    states = bsz * h * nc * p * n
+    return (xy + dtb + bc + states) * itemsize

@@ -1,0 +1,3 @@
+# NOTE: do not import .dryrun here — it force-sets the XLA device count and
+# must only run as a dedicated process (python -m repro.launch.dryrun).
+from . import mesh, roofline  # noqa: F401

@@ -1,0 +1,31 @@
+"""Production mesh builders.
+
+Single pod: (16, 16) = 256 v5e chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod axis
+extends data parallelism across the inter-pod DCI link.
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets the forced device count before any init).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int | None = None, data: int = 1):
+    """Small mesh over whatever local devices exist (tests, examples)."""
+    devs = jax.devices()
+    model = model or (len(devs) // data)
+    arr = np.array(devs[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def data_axes_for(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

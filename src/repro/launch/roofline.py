@@ -1,0 +1,306 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per (arch × shape × mesh):
+  compute    = HLO_FLOPs / (chips × 197e12)           [bf16 MXU peak]
+  memory     = HLO_bytes / (chips × 819e9)            [HBM bandwidth]
+  collective = Σ collective operand bytes / (chips × 50e9)   [ICI/link]
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (whole-program, already
+per-partition under SPMD — we document the convention below); collective
+bytes are parsed from the compiled HLO text since cost_analysis omits them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (~ per-chip usable)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(\(?[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+# computation headers sit at column 0: `%name (params...) -> type {` — the
+# param list may contain nested parens (tuple types), so match greedily.
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*"
+                           r".*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?condition=%?([\w\.\-]+),\s*"
+                       r"body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"=\s+s32\[\]\s+constant\((\d+)\)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                     r"((?:\([^=]*?\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+                     r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _split_computations(hlo_text: str):
+    """→ (comps: name → lines, entry_name)."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():        # headers at column 0
+            m = _COMP_HEAD_RE.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _multipliers(comps: dict, entry: str | None) -> dict[str, float]:
+    """Execution-count multiplier per computation: while bodies count trip×
+    (trip = largest s32 constant in the loop condition); fusions/calls 1×."""
+    edges: dict[str, list[tuple[str, float]]] = {}   # parent → [(child, f)]
+    for parent, lines in comps.items():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                consts = [int(c) for cl in comps.get(cond, [])
+                          for c in _CONST_RE.findall(cl)]
+                trip = float(max(consts)) if consts else 1.0
+                edges.setdefault(parent, []).append((body, trip))
+                edges.setdefault(parent, []).append((cond, trip))
+                continue
+            for callee in _CALLS_RE.findall(line):
+                edges.setdefault(parent, []).append((callee, 1.0))
+
+    mult: dict[str, float] = {}
+
+    def visit(name: str, factor: float, depth=0):
+        if depth > 32:
+            return
+        mult[name] = mult.get(name, 0.0) + factor
+        for child, f in edges.get(name, []):
+            visit(child, factor * f, depth + 1)
+
+    if entry is not None:
+        visit(entry, 1.0)
+    else:  # fallback: everything once
+        for name in comps:
+            mult[name] = 1.0
+    return mult
+
+
+def hlo_census(hlo_text: str) -> dict:
+    """Trip-count-aware FLOP / byte / collective census of compiled HLO.
+
+    XLA's ``cost_analysis()`` visits while bodies once; layer scans would
+    undercount by ~num_layers.  This census multiplies each computation by
+    its execution count from the call graph.
+
+    flops — 2·|result|·contraction for every ``dot`` (convolutions and
+    elementwise transcendentals are ignored: negligible next to matmuls).
+    bytes — result + resolvable operand bytes of materialized ops
+    (fusion/dot/copy/slice/collective), a post-fusion buffer-traffic model.
+    """
+    comps, entry = _split_computations(hlo_text)
+    mult = _multipliers(comps, entry)
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts = {k: 0.0 for k in _COLLECTIVES}
+
+    # byte-traffic model per op kind (post-fusion buffer reads+writes):
+    #   exact  — result + true operand buffer sizes (dot, reduce, concat)
+    #   capped — result + Σ min(operand, result): elementwise-ish fusions;
+    #            prevents counting a whole scan-stacked buffer for the
+    #            slice-fusions inside while bodies (they read 1/trip of it)
+    #   double — 2×result (copy/convert/slice/gather: read≈write≈result)
+    #   single — 1×result (broadcast/iota/pad writes)
+    exact_ops = {"dot", "reduce", "concatenate", "convolution", "sort",
+                 "scatter", "select-and-scatter"}
+    capped_ops = {"fusion"}
+    double_ops = {"copy", "convert", "transpose", "slice", "dynamic-slice",
+                  "gather", "dynamic-update-slice", "rng-bit-generator"}
+    single_ops = {"broadcast", "iota", "pad"}
+
+    for name, lines in comps.items():
+        f_comp = mult.get(name, 0.0)
+        if f_comp == 0.0:
+            continue
+        shapes: dict[str, list] = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            vname, rshape, op = dm.group(1), dm.group(2), dm.group(3)
+            rlist = _SHAPE_RE.findall(rshape)
+            shapes[vname] = rlist
+            rbytes = sum(_shape_bytes(dt, d) for dt, d in rlist)
+
+            # ---- collectives ----
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                gm = _GROUPS_RE.search(line)
+                g = int(gm.group(2)) if gm else 1
+                coll[base] += rbytes * _wire_factor(base, g) * f_comp
+                coll_counts[base] += f_comp
+                bytes_accessed += 2 * rbytes * f_comp
+                continue
+
+            # ---- flops: dot ----
+            if op == "dot":
+                cm = _CONTRACT_RE.search(line)
+                contract = 1
+                # first operand = lhs
+                call = line[dm.end():]
+                ops_names = _OPERAND_RE.findall(call.split(")")[0])
+                if cm and ops_names:
+                    lhs = shapes.get(ops_names[0])
+                    if lhs:
+                        dims = [int(x) for x in lhs[0][1].split(",") if x]
+                        for ci in cm.group(1).split(","):
+                            if ci and int(ci) < len(dims):
+                                contract *= dims[int(ci)]
+                n_res = 1
+                for dt, d in rlist:
+                    for x in d.split(","):
+                        if x:
+                            n_res *= int(x)
+                flops += 2.0 * n_res * contract * f_comp
+
+            # ---- bytes ----
+            if op in exact_ops or op in capped_ops:
+                obytes = 0
+                call = line[dm.end():]
+                for on in _OPERAND_RE.findall(call.split("),")[0]):
+                    ol = shapes.get(on)
+                    if ol:
+                        ob = sum(_shape_bytes(dt, d) for dt, d in ol)
+                        if op in capped_ops:
+                            ob = min(ob, rbytes)
+                        obytes += ob
+                bytes_accessed += (rbytes + obytes) * f_comp
+            elif op in double_ops:
+                bytes_accessed += 2 * rbytes * f_comp
+            elif op in single_ops:
+                bytes_accessed += rbytes * f_comp
+
+    coll["total"] = sum(coll[k] for k in _COLLECTIVES)
+    coll["counts"] = coll_counts
+    return {"flops": flops, "bytes": bytes_accessed, "collectives": coll}
+
+
+def _wire_factor(kind: str, g: int) -> float:
+    """Ring-algorithm per-device wire-byte factor on the RESULT size:
+      all-gather       (g−1)/g     all-reduce   2(g−1)/g
+      reduce-scatter   (g−1)       all-to-all   (g−1)/g
+      collective-permute  1
+    """
+    if kind == "collective-permute":
+        return 1.0
+    if g <= 1:
+        return 0.0
+    return {"all-gather": (g - 1) / g,
+            "all-reduce": 2 * (g - 1) / g,
+            "reduce-scatter": float(g - 1),
+            "all-to-all": (g - 1) / g}[kind]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes per collective kind (see hlo_census)."""
+    return hlo_census(hlo_text)["collectives"]
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    flops_ratio: float           # MODEL_FLOPS / HLO_FLOPs
+    coll_breakdown: dict
+
+    def as_dict(self):
+        d = dataclasses.asdict(self)
+        return d
+
+
+def derive_terms(arch: str, shape: str, mesh_name: str, chips: int,
+                 census: dict, model_flops: float) -> RooflineTerms:
+    """census: :func:`hlo_census` of the compiled per-partition module —
+    all quantities are per-device, so term = quantity / per-chip peak.
+    ``model_flops`` is global, so the useful-compute ratio divides by
+    (per-device flops × chips)."""
+    flops = float(census["flops"])
+    mem_bytes = float(census["bytes"])
+    coll = census["collectives"]
+    coll_total = float(coll.get("total", 0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = mem_bytes / HBM_BW
+    collective_s = coll_total / ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=mem_bytes, coll_bytes=coll_total,
+        model_flops=model_flops,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant,
+        flops_ratio=(model_flops / (flops * chips)) if flops else 0.0,
+        coll_breakdown={k: coll[k] for k in _COLLECTIVES} | {
+            "counts": coll["counts"]},
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D convention (N = active params, D = tokens processed).
+    Decode steps process global_batch tokens; train includes the 3× of
+    backward (6·N·D already counts fwd+bwd for training; for pure forward
+    (prefill/decode) we use 2·N·D)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch          # one new token per sequence
+    return 2.0 * n_active * tokens

@@ -1,0 +1,1 @@
+from . import transformer, blocks  # noqa: F401

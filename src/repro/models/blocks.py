@@ -1,0 +1,197 @@
+"""Per-layer blocks and layer grouping for the unified decoder.
+
+A config's layers are grouped into repeating *units* so the whole stack
+lowers as a few ``lax.scan``s (small HLO even at 54 layers):
+
+  dense archs     → unit ("dense",) × L           (or ("local","global"))
+  deepseek        → 1 unscanned dense layer + unit ("moe",) × 26
+  mamba2          → unit ("mamba",) × 48
+  zamba2          → unit ("mamba",)*5 + ("shared_attn",) × 9 groups, the
+                    shared_attn params weight-tied across groups
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..nn import attention as attn
+from ..nn import layers as nl
+from ..nn import moe as moe_lib
+from ..nn import ssm as ssm_lib
+from ..nn.attention import Sharder, no_shard
+from ..nn.param import param
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    unit: tuple[str, ...]   # block kinds within one scan step
+    repeats: int            # scan length
+
+
+def layer_groups(cfg: ArchConfig) -> list[GroupSpec]:
+    kinds = cfg.layer_kinds()
+    groups: list[GroupSpec] = []
+    i = 0
+    if cfg.moe and cfg.first_dense_layers:
+        groups.append(GroupSpec(("dense",) * cfg.first_dense_layers, 1))
+        i = cfg.first_dense_layers
+    rest = kinds[i:]
+    if not rest:
+        return groups
+    # find the shortest repeating unit of the remaining pattern
+    for unit_len in range(1, len(rest) + 1):
+        if len(rest) % unit_len:
+            continue
+        unit = tuple(rest[:unit_len])
+        if all(tuple(rest[j:j + unit_len]) == unit
+               for j in range(0, len(rest), unit_len)):
+            groups.append(GroupSpec(unit, len(rest) // unit_len))
+            return groups
+    groups.append(GroupSpec(tuple(rest), 1))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig, kind: str, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    if kind == "mamba":
+        return {"norm": nl.init_rms_norm(cfg.d_model),
+                "mixer": ssm_lib.init_mamba2(k1, cfg, dtype)}
+    p = {
+        "attn_norm": nl.init_rms_norm(cfg.d_model, plus_one=cfg.post_norm),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "mlp_norm": nl.init_rms_norm(cfg.d_model, plus_one=cfg.post_norm),
+    }
+    if cfg.post_norm:   # gemma2: extra post-block norms
+        p["attn_post_norm"] = nl.init_rms_norm(cfg.d_model, plus_one=True)
+        p["mlp_post_norm"] = nl.init_rms_norm(cfg.d_model, plus_one=True)
+    if kind == "moe":
+        p["moe"] = moe_lib.init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = nl.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _norm(p_leaf, x, cfg: ArchConfig):
+    return nl.rms_norm(x, p_leaf.astype(jnp.float32), cfg.norm_eps,
+                       plus_one=cfg.post_norm)
+
+
+def apply_block(p: dict, cfg: ArchConfig, kind: str, x, positions, *,
+                shard: Sharder = no_shard):
+    """Full-sequence block application.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "mamba":
+        h = _norm(p["norm"], x, cfg)
+        return x + ssm_lib.mamba2_forward(p["mixer"], cfg, h, shard=shard), \
+            aux
+
+    h = _norm(p["attn_norm"], x, cfg)
+    window = cfg.sliding_window if kind == "local" else None
+    if cfg.use_mla:
+        a = attn.mla_attention(p["attn"], cfg, h, positions, shard=shard)
+    else:
+        a = attn.gqa_attention(p["attn"], cfg, h, positions, window=window,
+                               shard=shard)
+    if cfg.post_norm:
+        a = _norm(p["attn_post_norm"], a, cfg)
+    x = x + a
+
+    h = _norm(p["mlp_norm"], x, cfg)
+    h = shard(h, "act_tokens")
+    if kind == "moe":
+        m, aux = moe_lib.moe_apply(p["moe"], cfg, h, shard=shard)
+    else:
+        m = nl.mlp(p["mlp"], h, cfg.act)
+    if cfg.post_norm:
+        m = _norm(p["mlp_post_norm"], m, cfg)
+    return x + m, aux
+
+
+def apply_block_prefill(p: dict, cfg: ArchConfig, kind: str, x, positions,
+                        max_len: int, *, shard: Sharder = no_shard,
+                        long_context: bool = False):
+    """Full-sequence block that also materializes the decode cache.
+    Returns (x, cache)."""
+    if kind == "mamba":
+        h = _norm(p["norm"], x, cfg)
+        y, cache = ssm_lib.mamba2_prefill(p["mixer"], cfg, h, shard=shard)
+        return x + y, cache
+
+    h = _norm(p["attn_norm"], x, cfg)
+    window = cfg.sliding_window if kind == "local" else None
+    if cfg.use_mla:
+        a, cache = attn.mla_prefill(p["attn"], cfg, h, positions, max_len,
+                                    shard=shard)
+    else:
+        a, cache = attn.gqa_prefill(p["attn"], cfg, h, positions, max_len,
+                                    window=window, shard=shard,
+                                    long_context=long_context)
+    if cfg.post_norm:
+        a = _norm(p["attn_post_norm"], a, cfg)
+    x = x + a
+
+    h = _norm(p["mlp_norm"], x, cfg)
+    h = shard(h, "act_tokens")
+    if kind == "moe":
+        m, _ = moe_lib.moe_apply(p["moe"], cfg, h, shard=shard)
+    else:
+        m = nl.mlp(p["mlp"], h, cfg.act)
+    if cfg.post_norm:
+        m = _norm(p["mlp_post_norm"], m, cfg)
+    return x + m, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode-step application (single token, per-layer cache)
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                     dtype=jnp.float32, long_context: bool = False):
+    """Cache pytree for one block.  ``long_context`` puts gemma2 local
+    layers on the O(window) ring buffer."""
+    if kind == "mamba":
+        return ssm_lib.init_ssm_cache(cfg, batch, dtype)
+    if cfg.use_mla:
+        return attn.init_mla_cache(cfg, batch, max_len, dtype)
+    if kind == "local" and long_context and cfg.sliding_window:
+        return attn.init_window_cache(cfg, batch, dtype)
+    return attn.init_kv_cache(cfg, batch, max_len, dtype)
+
+
+def apply_block_decode(p: dict, cfg: ArchConfig, kind: str, x, cache, *,
+                       shard: Sharder = no_shard):
+    """One-token step.  Returns (x, new_cache)."""
+    if kind == "mamba":
+        h = _norm(p["norm"], x, cfg)
+        y, cache = ssm_lib.mamba2_decode(p["mixer"], cfg, h, cache,
+                                         shard=shard)
+        return x + y, cache
+
+    h = _norm(p["attn_norm"], x, cfg)
+    if cfg.use_mla:
+        a, cache = attn.mla_decode(p["attn"], cfg, h, cache, shard=shard)
+    elif isinstance(cache, attn.WindowKVCache):
+        a, cache = attn.gqa_decode_windowed(p["attn"], cfg, h, cache,
+                                            shard=shard)
+    else:
+        a, cache = attn.gqa_decode(p["attn"], cfg, h, cache, shard=shard)
+    if cfg.post_norm:
+        a = _norm(p["attn_post_norm"], a, cfg)
+    x = x + a
+
+    h = _norm(p["mlp_norm"], x, cfg)
+    if kind == "moe":
+        m, _ = moe_lib.moe_apply(p["moe"], cfg, h, dropless=True,
+                                 shard=shard)
+    else:
+        m = nl.mlp(p["mlp"], h, cfg.act)
+    if cfg.post_norm:
+        m = _norm(p["mlp_post_norm"], m, cfg)
+    return x + m, cache

@@ -1,0 +1,348 @@
+"""Unified decoder-only transformer covering all ten assigned architectures.
+
+Layer stacks lower as ``lax.scan`` over stacked per-group params (MaxText
+style) so even the 8B configs produce compact HLO for the 512-device
+dry-run.  The same parameter pytree serves ``forward`` (train/prefill) and
+``decode_step`` (one token + caches).
+
+Multimodal (vlm/audio) configs consume *precomputed* frontend embeddings —
+the explicit stub carve-out — interleaved before the token embeddings by
+:func:`assemble_inputs`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..nn import layers as nl
+from ..nn.attention import Sharder, no_shard
+from ..nn.param import ParamLeaf, param, split_params
+from . import blocks as B
+
+
+def _stack_params(trees: list) -> Any:
+    """Stack a list of ParamLeaf trees along a new leading 'layers' axis."""
+    def stack(*leaves: ParamLeaf) -> ParamLeaf:
+        return ParamLeaf(jnp.stack([l.value for l in leaves]),
+                         ("layers",) + leaves[0].names)
+    return jax.tree.map(stack, *trees, is_leaf=lambda x: isinstance(
+        x, ParamLeaf))
+
+
+def init_transformer(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, cfg.num_layers + 8)
+    groups = B.layer_groups(cfg)
+    params: dict = {
+        "embed": nl.init_embedding(keys[-1], cfg.padded_vocab, cfg.d_model,
+                                   dtype),
+        "final_norm": nl.init_rms_norm(cfg.d_model, plus_one=cfg.post_norm),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = param(keys[-2], (cfg.d_model, cfg.padded_vocab),
+                               ("embed", "vocab"), dtype=dtype)
+    if cfg.modality:
+        params["mm_proj"] = nl.init_dense(keys[-3], cfg.d_model,
+                                          cfg.d_model, ("embed", None),
+                                          dtype=dtype)
+    if cfg.hybrid_attn_every:
+        params["shared_block"] = B.init_block(keys[-4], cfg, "shared_attn",
+                                              dtype)
+    ki = 0
+    gparams = []
+    for g in groups:
+        reps = []
+        for r in range(g.repeats):
+            unit = []
+            for kind in g.unit:
+                if kind == "shared_attn":
+                    unit.append({})          # weight-tied → placeholder
+                else:
+                    unit.append(B.init_block(keys[ki % len(keys)], cfg,
+                                             kind, dtype))
+                    ki += 1
+            reps.append(unit)
+        if g.repeats == 1:
+            gparams.append(reps[0])
+        else:
+            gparams.append([_stack_params([reps[r][u]
+                                           for r in range(g.repeats)])
+                            if g.unit[u] != "shared_attn" else {}
+                            for u in range(len(g.unit))])
+    params["groups"] = gparams
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Input assembly (multimodal stub carve-out)
+# ---------------------------------------------------------------------------
+
+def assemble_inputs(params, cfg: ArchConfig, tokens: jax.Array,
+                    prefix_embeddings: Optional[jax.Array] = None):
+    """tokens (B, S_t) [+ prefix (B, P, D)] → embeddings (B, S, D)."""
+    table = params["embed"].value if isinstance(params["embed"], ParamLeaf) \
+        else params["embed"]
+    x = nl.embed(table.astype(jnp.float32), tokens)
+    if cfg.modality:
+        assert prefix_embeddings is not None, \
+            f"{cfg.name} needs frontend embeddings"
+        pre = nl.dense({k: v.value if isinstance(v, ParamLeaf) else v
+                        for k, v in params["mm_proj"].items()},
+                       prefix_embeddings.astype(jnp.float32))
+        x = jnp.concatenate([pre, x], axis=1)
+    x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ArchConfig, tokens: jax.Array,
+            prefix_embeddings: Optional[jax.Array] = None, *,
+            shard: Sharder = no_shard, remat: bool = True,
+            return_final_hidden: bool = False):
+    """Returns (logits (B,S,V), aux_loss)."""
+    compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = assemble_inputs(params, cfg, tokens, prefix_embeddings)
+    x = x.astype(compute_dtype)
+    x = shard(x, "act_tokens")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+    groups = B.layer_groups(cfg)
+    shared_cast = (_cast_compute(_values(params["shared_block"]),
+                                 compute_dtype)
+                   if cfg.hybrid_attn_every else None)
+
+    for gspec, gp in zip(groups, params["groups"]):
+        def unit_step(x, unit_params, gspec=gspec):
+            aux_sum = jnp.zeros((), jnp.float32)
+            for kind, p_blk in zip(gspec.unit, unit_params):
+                if kind == "shared_attn":
+                    p_blk = shared_cast
+                x, aux = B.apply_block(p_blk, cfg, kind, x, positions,
+                                       shard=shard)
+                aux_sum = aux_sum + aux
+            return x, aux_sum
+
+        if gspec.repeats == 1:
+            x, aux = unit_step(x, [_cast_compute(_values(p), compute_dtype)
+                                   for p in gp])
+            aux_total += aux
+        else:
+            stacked = [_cast_compute(_values(p), compute_dtype) if p else {}
+                       for p in gp]
+
+            def scan_body(x, unit_params):
+                x, aux = unit_step(x, unit_params)
+                return x, aux
+            if remat == "dots":   # §Perf: save matmul outputs, skip their
+                body = jax.checkpoint(  # recompute in the backward pass
+                    scan_body, policy=jax.checkpoint_policies
+                    .dots_with_no_batch_dims_saveable)
+            elif remat:
+                body = jax.checkpoint(scan_body)
+            else:
+                body = scan_body
+            x, auxs = jax.lax.scan(body, x, stacked)
+            aux_total += auxs.sum()
+
+    x = nl.rms_norm(x, _value(params["final_norm"]).astype(jnp.float32),
+                    cfg.norm_eps, plus_one=cfg.post_norm)
+    if return_final_hidden:
+        return x, aux_total
+    logits = unembed(params, cfg, x, shard=shard)
+    return logits, aux_total
+
+
+def unembed(params, cfg: ArchConfig, x, *, shard: Sharder = no_shard):
+    if cfg.tie_embeddings:
+        w = _value(params["embed"]).astype(x.dtype)
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            _value(params["head"]).astype(x.dtype))
+    logits = nl.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # pad ids can never be predicted or contribute to the lse
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return shard(logits, "act_vocab")
+
+
+def _value(x):
+    return x.value if isinstance(x, ParamLeaf) else x
+
+
+def _values(tree):
+    return jax.tree.map(_value, tree,
+                        is_leaf=lambda x: isinstance(x, ParamLeaf))
+
+
+_KEEP_F32 = ("router", "norm")   # routing logits + norm scales stay fp32
+
+
+def _cast_compute(tree, dtype):
+    """Pre-cast weights to the compute dtype OUTSIDE the layer scan.
+
+    §Perf round 2: with fp32 master weights, leaving the cast to the
+    per-use ``.astype`` inside the scan body re-converts every layer's
+    weights on every step AND again inside the remat re-forward — ~2 s of
+    the census memory term on minitron train_4k.  One hoisted cast of the
+    stacked params removes the in-loop converts (the in-block ``.astype``
+    becomes a no-op).  Router and norm scales are kept fp32."""
+    if dtype == jnp.float32:
+        return tree
+
+    def one(path, x):
+        if not hasattr(x, "dtype") or x.dtype != jnp.float32 or x.ndim < 2:
+            return x               # keep small 1-D params (biases, decay
+        for entry in reversed(path):  # rates) and anything non-fp32
+            key = getattr(entry, "key", None)
+            if isinstance(key, str):
+                if any(t in key for t in _KEEP_F32):
+                    return x
+                break
+        return x.astype(dtype)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def prefill(params, cfg: ArchConfig, tokens: jax.Array,
+            prefix_embeddings: Optional[jax.Array] = None, *,
+            max_len: int, shard: Sharder = no_shard,
+            long_context: bool = False, last_only: bool = False):
+    """Run the prompt through the stack, materializing decode caches.
+    Returns (logits (B,S,V), caches).  ``last_only=True`` unembeds only the
+    final position — (B,1,V) — which is all decode needs; skips the
+    (B,S,V) logit buffer entirely (§Perf HC1 iter 2)."""
+    compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = assemble_inputs(params, cfg, tokens, prefix_embeddings)
+    x = x.astype(compute_dtype)
+    x = shard(x, "act_tokens")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    groups = B.layer_groups(cfg)
+    caches = []
+    shared_cast = (_cast_compute(_values(params["shared_block"]),
+                                 compute_dtype)
+                   if cfg.hybrid_attn_every else None)
+
+    for gspec, gp in zip(groups, params["groups"]):
+        def unit_step(x, unit_params, gspec=gspec):
+            unit_caches = []
+            for kind, p_blk in zip(gspec.unit, unit_params):
+                if kind == "shared_attn":
+                    p_blk = shared_cast
+                x, c = B.apply_block_prefill(
+                    p_blk, cfg, kind, x, positions, max_len, shard=shard,
+                    long_context=long_context)
+                unit_caches.append(c)
+            return x, unit_caches
+
+        if gspec.repeats == 1:
+            x, uc = unit_step(x, [_cast_compute(_values(p), compute_dtype)
+                                  for p in gp])
+            caches.append(uc)
+        else:
+            stacked = [_cast_compute(_values(p), compute_dtype) if p else {}
+                       for p in gp]
+
+            def scan_body(x, unit_params):
+                return unit_step(x, unit_params)
+            x, uc = jax.lax.scan(scan_body, x, stacked)
+            caches.append(uc)
+
+    x = nl.rms_norm(x, _value(params["final_norm"]).astype(jnp.float32),
+                    cfg.norm_eps, plus_one=cfg.post_norm)
+    if last_only:
+        x = x[:, -1:]
+    logits = unembed(params, cfg, x, shard=shard)
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, stacked caches)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.float32, long_context: bool = False):
+    """Cache pytree mirroring the group structure."""
+    groups = B.layer_groups(cfg)
+    caches = []
+    for g in groups:
+        unit_caches = []
+        for kind in g.unit:
+            one = B.init_block_cache(cfg, kind, batch, max_len, dtype,
+                                     long_context)
+            if g.repeats == 1:
+                unit_caches.append(one)
+            else:
+                unit_caches.append(jax.tree.map(
+                    lambda l: jnp.broadcast_to(
+                        l, (g.repeats,) + l.shape).copy(), one))
+        caches.append(unit_caches)
+    return caches
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array, caches, *,
+                shard: Sharder = no_shard):
+    """token (B, 1) int32 → (logits (B, 1, V), new caches)."""
+    compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    table = _value(params["embed"])
+    x = nl.embed(table.astype(jnp.float32), token)
+    x = (x * jnp.sqrt(float(cfg.d_model))).astype(compute_dtype)
+    groups = B.layer_groups(cfg)
+    new_caches = []
+    for gspec, gp, gc in zip(groups, params["groups"], caches):
+        def unit_step(x, unit_params, unit_caches, gspec=gspec):
+            outs = []
+            for kind, p_blk, c_blk in zip(gspec.unit, unit_params,
+                                          unit_caches):
+                if kind == "shared_attn":
+                    p_blk = _values(params["shared_block"])
+                x, c_new = B.apply_block_decode(p_blk, cfg, kind, x, c_blk,
+                                                shard=shard)
+                outs.append(c_new)
+            return x, outs
+
+        if gspec.repeats == 1:
+            x, c_new = unit_step(x, [_values(p) for p in gp], gc)
+            new_caches.append(c_new)
+        else:
+            stacked_p = [_values(p) if p else {} for p in gp]
+
+            def scan_body(x, pc):
+                up, uc = pc
+                x, uc_new = unit_step(x, up, uc)
+                return x, uc_new
+            x, gc_new = jax.lax.scan(scan_body, x, (stacked_p, gc))
+            new_caches.append(gc_new)
+
+    x = nl.rms_norm(x, _value(params["final_norm"]).astype(jnp.float32),
+                    cfg.norm_eps, plus_one=cfg.post_norm)
+    logits = unembed(params, cfg, x, shard=shard)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: jax.Array, targets: jax.Array,
+            mask: Optional[jax.Array] = None) -> jax.Array:
+    """Next-token cross-entropy, written with vocab-dim reductions only so
+    vocab-sharded logits never need gathering."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(logits, targets[..., None],
+                                     axis=-1)[..., 0]
+    nll = lse - true_logit
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

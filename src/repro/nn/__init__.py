@@ -1,0 +1,1 @@
+from . import layers, attention, moe, ssm, param  # noqa: F401

@@ -1,0 +1,490 @@
+"""Attention: GQA (with biases/softcap/sliding-window) and DeepSeek MLA.
+
+All functions are layout-annotated through an optional ``shard`` callable
+(``repro.sharding.specs.Sharder``) so the same math serves every
+distribution strategy; with the default no-op sharder they run on a single
+device (smoke tests).
+
+Decode caches:
+  * ``KVCache``        — dense (B, S_max, H_kv, hd) k/v
+  * ``WindowKVCache``  — ring buffer of the sliding window (gemma2 local
+                         layers at long context)
+  * ``MLACache``       — compressed: (B, S_max, kv_lora) latent + shared
+                         rope key (B, S_max, rope_hd); O(S·(r+rope_hd))
+                         instead of O(S·2·H·hd) — the MLA memory win.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers as nl
+from .param import param
+
+Sharder = Callable[[jax.Array, str], jax.Array]
+
+
+def no_shard(x: jax.Array, kind: str) -> jax.Array:
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.head_dim
+    ks = jax.random.split(key, 8)
+    if cfg.use_mla:
+        r, rhd = cfg.kv_lora_rank, cfg.rope_head_dim
+        p = {
+            # queries (Lite: no q-lora): per-head nope + rope parts
+            "wq": param(ks[0], (d, hq, hd + rhd), ("embed", "heads", None),
+                        dtype=dtype),
+            # compressed kv latent + shared rope key
+            "wkv_a": param(ks[1], (d, r + rhd), ("embed", None),
+                           dtype=dtype),
+            "kv_norm": nl.init_rms_norm(r),
+            # up-projections from the latent
+            "wk_b": param(ks[2], (r, hq, hd), (None, "heads", None),
+                          dtype=dtype),
+            "wv_b": param(ks[3], (r, hq, hd), (None, "heads", None),
+                          dtype=dtype),
+            "wo": param(ks[4], (hq, hd, d), ("heads", None, "embed"),
+                        dtype=dtype),
+        }
+        return p
+    p = {
+        "wq": param(ks[0], (d, hq, hd), ("embed", "heads", None),
+                    dtype=dtype),
+        "wk": param(ks[1], (d, hkv, hd), ("embed", "kv_heads", None),
+                    dtype=dtype),
+        "wv": param(ks[2], (d, hkv, hd), ("embed", "kv_heads", None),
+                    dtype=dtype),
+        "wo": param(ks[3], (hq, hd, d), ("heads", None, "embed"),
+                    dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = param(None, (hq, hd), ("heads", None), init="zeros",
+                        dtype=dtype)
+        p["bk"] = param(None, (hkv, hd), ("kv_heads", None), init="zeros",
+                        dtype=dtype)
+        p["bv"] = param(None, (hkv, hd), ("kv_heads", None), init="zeros",
+                        dtype=dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Masks and core attention
+# ---------------------------------------------------------------------------
+
+def _causal_mask(sq: int, skv: int, q_offset) -> jax.Array:
+    qi = q_offset + jnp.arange(sq)[:, None]
+    kj = jnp.arange(skv)[None, :]
+    return kj <= qi
+
+
+def _window_mask(sq: int, skv: int, q_offset, window: int) -> jax.Array:
+    qi = q_offset + jnp.arange(sq)[:, None]
+    kj = jnp.arange(skv)[None, :]
+    return (kj <= qi) & (kj > qi - window)
+
+
+def attention_blockwise(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        q_offset: int | jax.Array = 0,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None,
+                        block_q: int = 512, block_kv: int = 1024
+                        ) -> jax.Array:
+    """Memory-efficient attention: scan over KV blocks with running
+    (max, sum, acc) — never materializes the S×S score matrix.
+
+    Beyond-paper optimization (§Perf iter 1): drops the attention working
+    set from O(B·H·S²) to O(B·H·block_q·block_kv).  On TPU this is the
+    flash-attention schedule; in pure jnp XLA fuses each block step.
+    q: (B,Sq,Hq,hd); k/v: (B,Skv,Hkv,hd).  Returns (B,Sq,Hq,hd_v).
+    """
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    hdv = v.shape[-1]
+    scale = scale if scale is not None else hd ** -0.5
+
+    q_pad = (-sq) % block_q
+    kv_pad = (-skv) % block_kv
+    qp = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    nq, nkv = qp.shape[1] // block_q, kp.shape[1] // block_kv
+
+    qb = qp.reshape(b, nq, block_q, hkv, g, hd).astype(jnp.float32) * scale
+    kb = kp.reshape(b, nkv, block_kv, hkv, hd).astype(jnp.float32)
+    vb = vp.reshape(b, nkv, block_kv, hkv, hdv).astype(jnp.float32)
+
+    q_pos = q_offset + jnp.arange(nq * block_q).reshape(nq, block_q)
+    k_pos = jnp.arange(nkv * block_kv).reshape(nkv, block_kv)
+    k_valid = (jnp.arange(nkv * block_kv) < skv).reshape(nkv, block_kv)
+
+    def q_block(qi):
+        q_i = qb[:, qi]                              # (B,bq,hkv,g,hd)
+        pos_i = q_pos[qi]
+
+        def kv_step(carry, kj):
+            m_run, l_run, acc = carry
+            k_j = kb[:, kj]
+            v_j = vb[:, kj]
+            s = jnp.einsum("bqkgh,btkh->bkgqt", q_i, k_j)
+            if softcap is not None:
+                s = softcap_ * jnp.tanh(s / softcap_)
+            msk = k_valid[kj][None, :]
+            if causal:
+                msk = msk & (k_pos[kj][None, :] <= pos_i[:, None])
+            if window is not None:
+                msk = msk & (k_pos[kj][None, :] > pos_i[:, None] - window)
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p, v_j)
+            return (m_new, l_new, acc), None
+
+        softcap_ = softcap
+        init = (jnp.full((b, hkv, g, block_q), -jnp.inf, jnp.float32),
+                jnp.zeros((b, hkv, g, block_q), jnp.float32),
+                jnp.zeros((b, hkv, g, block_q, hdv), jnp.float32))
+        (m_run, l_run, acc), _ = jax.lax.scan(
+            kv_step, init, jnp.arange(nkv))
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        return out                                   # (B,hkv,g,bq,hdv)
+
+    outs = jax.lax.map(q_block, jnp.arange(nq))      # (nq,B,hkv,g,bq,hdv)
+    out = jnp.moveaxis(outs, 0, 1)                   # (B,nq,hkv,g,bq,hdv)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(
+        b, nq * block_q, hq, hdv)
+    return out[:, :sq].astype(v.dtype)
+
+
+def attention_core(q, k, v, mask, *, softcap: Optional[float] = None,
+                   scale: Optional[float] = None) -> jax.Array:
+    """q: (B,Sq,Hq,hd), k/v: (B,Skv,Hkv,hd) with Hq % Hkv == 0.
+
+    Returns (B,Sq,Hq,hd).  ``mask`` broadcasts to (B,1,1,Sq,Skv)."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(b, sq, hkv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = nl.softcap(scores, softcap)
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, v.shape[-1])   # v head dim may differ (MLA)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train/prefill) + decode
+# ---------------------------------------------------------------------------
+
+def gqa_project_qkv(p, cfg: ArchConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = nl.apply_rope(q, positions, cfg.rope_theta)
+    k = nl.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mixing_attention(cfg: ArchConfig, q, k, v, *,
+                      window: Optional[int] = None,
+                      scale: Optional[float] = None,
+                      shard: Sharder = no_shard):
+    """Core full-sequence attention with the NeutronTP mixing-phase layout
+    (heads sharded, sequence gathered) and selectable implementation."""
+    if getattr(shard, "explicit_a2a", None):
+        out = shard.explicit_a2a(cfg, q, k, v, window=window, scale=scale)
+        if out is not None:      # None → divisibility fallback below
+            return out
+    q = shard(q, "act_heads")
+    k = shard(k, "act_kv_heads")
+    v = shard(v, "act_kv_heads")
+    if cfg.attn_impl == "flash":
+        # Pallas kernel (kernels/flash_attn): interpret on CPU, native on
+        # TPU.  The VMEM-resident score block is the §Perf HC1 fix.
+        from ..kernels.flash_attn import flash_attention
+        out = flash_attention(
+            q, k, v, causal=True, window=window, softcap=cfg.attn_softcap,
+            scale=scale, block_q=cfg.attn_block_q,
+            block_kv=cfg.attn_block_kv,
+            interpret=jax.default_backend() != "tpu")
+    elif cfg.attn_impl == "blockwise":
+        out = attention_blockwise(q, k, v, causal=True, window=window,
+                                  softcap=cfg.attn_softcap, scale=scale,
+                                  block_q=cfg.attn_block_q,
+                                  block_kv=cfg.attn_block_kv)
+    else:
+        sq = q.shape[1]
+        mask = (_window_mask(sq, sq, 0, window) if window
+                else _causal_mask(sq, sq, 0))[None]
+        out = attention_core(q, k, v, mask, softcap=cfg.attn_softcap,
+                             scale=scale)
+    return shard(out, "act_heads")
+
+
+def gqa_attention(p, cfg: ArchConfig, x, positions, *,
+                  window: Optional[int] = None, shard: Sharder = no_shard):
+    """Full-sequence attention (training / prefill)."""
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)
+    out = _mixing_attention(cfg, q, k, v, window=window, shard=shard)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard(y, "act_tokens")
+
+
+def gqa_prefill(p, cfg: ArchConfig, x, positions, max_len: int, *,
+                window: Optional[int] = None, shard: Sharder = no_shard,
+                long_context: bool = False):
+    """Full-sequence attention that also materializes the decode cache."""
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)
+    out = _mixing_attention(cfg, q, k, v, window=window, shard=shard)
+    sq = x.shape[1]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = shard(y, "act_tokens")
+
+    if window and long_context:
+        cache = _fill_window_cache(cfg, k, v, window)
+    else:
+        b = x.shape[0]
+        kc = jnp.zeros((b, max_len) + k.shape[2:], k.dtype)
+        vc = jnp.zeros_like(kc)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, 0, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, 0, axis=1)
+        cache = KVCache(k=shard(kc, "cache_seq"), v=shard(vc, "cache_seq"),
+                        length=jnp.asarray(sq, jnp.int32))
+    return y, cache
+
+
+def _fill_window_cache(cfg: ArchConfig, k, v, window: int):
+    """Scatter the last ``window`` positions into their ring slots."""
+    b, s = k.shape[:2]
+    start = max(0, s - window)
+    ps = jnp.arange(start, s)
+    slots = jnp.mod(ps, window)
+    kr = jnp.zeros((b, window) + k.shape[2:], k.dtype)
+    vr = jnp.zeros_like(kr)
+    kr = kr.at[:, slots].set(k[:, start:s])
+    vr = vr.at[:, slots].set(v[:, start:s])
+    return WindowKVCache(k=kr, v=vr, length=jnp.asarray(s, jnp.int32),
+                         window=window)
+
+
+# ---- dense KV cache -------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass, data_fields=("k", "v", "length"),
+         meta_fields=())
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array        # (B, S_max, H_kv, hd)
+    v: jax.Array
+    length: jax.Array   # () int32 — valid prefix length
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=jnp.float32) -> KVCache:
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def gqa_decode(p, cfg: ArchConfig, x, cache: KVCache, *,
+               shard: Sharder = no_shard):
+    """One-token decode against a dense cache.  x: (B, 1, D)."""
+    pos = cache.length
+    positions = pos[None, None] + jnp.zeros((x.shape[0], 1), jnp.int32)
+    q, k_new, v_new = gqa_project_qkv(p, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(
+        cache.k.dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(
+        cache.v.dtype), pos, axis=1)
+    k = shard(k, "cache_seq")
+    v = shard(v, "cache_seq")
+    skv = k.shape[1]
+    mask = (jnp.arange(skv)[None, :] <= pos)[None]         # (1, 1, skv)
+    out = attention_core(q, k, v, mask, softcap=cfg.attn_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, KVCache(k=k, v=v, length=pos + 1)
+
+
+# ---- sliding-window ring cache --------------------------------------------
+
+@partial(jax.tree_util.register_dataclass, data_fields=("k", "v", "length"),
+         meta_fields=("window",))
+@dataclasses.dataclass
+class WindowKVCache:
+    k: jax.Array        # (B, window, H_kv, hd) ring buffer
+    v: jax.Array
+    length: jax.Array   # () int32 — total tokens seen
+    window: int
+
+
+def init_window_cache(cfg: ArchConfig, batch: int,
+                      dtype=jnp.float32) -> WindowKVCache:
+    w = cfg.sliding_window
+    shape = (batch, w, cfg.num_kv_heads, cfg.head_dim)
+    return WindowKVCache(k=jnp.zeros(shape, dtype),
+                         v=jnp.zeros(shape, dtype),
+                         length=jnp.zeros((), jnp.int32), window=w)
+
+
+def gqa_decode_windowed(p, cfg: ArchConfig, x, cache: WindowKVCache, *,
+                        shard: Sharder = no_shard):
+    """One-token decode with an O(window) ring cache — the sub-quadratic
+    path that makes gemma2 local layers viable at 500k context."""
+    pos = cache.length
+    positions = pos[None, None] + jnp.zeros((x.shape[0], 1), jnp.int32)
+    q, k_new, v_new = gqa_project_qkv(p, cfg, x, positions)
+    slot = jnp.mod(pos, cache.window)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+    # ring slot j holds absolute position: j + window*floor(...) — valid iff
+    # within the last `window` tokens and <= pos
+    ring = jnp.arange(cache.window)
+    age = jnp.mod(slot - ring, cache.window)        # 0 = newest slot
+    valid = age <= jnp.minimum(pos, cache.window - 1)
+    mask = valid[None, None]                        # (1, 1, window)
+    out = attention_core(q, k, v, mask, softcap=cfg.attn_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, WindowKVCache(k=k, v=v, length=pos + 1, window=cache.window)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed-latent attention
+# ---------------------------------------------------------------------------
+
+def _mla_q(p, cfg, x, positions):
+    qfull = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope = qfull[..., : cfg.head_dim]
+    q_rope = nl.apply_rope(qfull[..., cfg.head_dim:], positions,
+                           cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, cfg, x, positions):
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    c_kv = nl.rms_norm(kv_a[..., : cfg.kv_lora_rank],
+                       p["kv_norm"].astype(jnp.float32))
+    k_rope = nl.apply_rope(kv_a[..., None, cfg.kv_lora_rank:], positions,
+                           cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_attention(p, cfg: ArchConfig, x, positions, *,
+                  shard: Sharder = no_shard):
+    """Full-sequence MLA (training / prefill)."""
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"].astype(x.dtype))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (b, s, cfg.num_heads,
+                                   cfg.rope_head_dim))], axis=-1)
+    scale = (cfg.head_dim + cfg.rope_head_dim) ** -0.5
+    out = _mixing_attention(cfg, q, k, v, scale=scale, shard=shard)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard(y, "act_tokens")
+
+
+def mla_prefill(p, cfg: ArchConfig, x, positions, max_len: int, *,
+                shard: Sharder = no_shard):
+    """MLA prefill: full-sequence attention + compressed cache fill."""
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"].astype(x.dtype))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (b, s, cfg.num_heads,
+                                   cfg.rope_head_dim))], axis=-1)
+    scale = (cfg.head_dim + cfg.rope_head_dim) ** -0.5
+    out = _mixing_attention(cfg, q, k, v, scale=scale, shard=shard)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+    ckv_buf = jnp.zeros((b, max_len, cfg.kv_lora_rank), c_kv.dtype)
+    kr_buf = jnp.zeros((b, max_len, cfg.rope_head_dim), k_rope.dtype)
+    ckv_buf = jax.lax.dynamic_update_slice_in_dim(ckv_buf, c_kv, 0, axis=1)
+    kr_buf = jax.lax.dynamic_update_slice_in_dim(kr_buf, k_rope, 0, axis=1)
+    cache = MLACache(c_kv=ckv_buf, k_rope=kr_buf,
+                     length=jnp.asarray(s, jnp.int32))
+    return y, cache
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("c_kv", "k_rope", "length"), meta_fields=())
+@dataclasses.dataclass
+class MLACache:
+    c_kv: jax.Array     # (B, S_max, kv_lora_rank) — compressed latents
+    k_rope: jax.Array   # (B, S_max, rope_head_dim) — shared rope key
+    length: jax.Array
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.float32) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def mla_decode(p, cfg: ArchConfig, x, cache: MLACache, *,
+               shard: Sharder = no_shard):
+    """One-token MLA decode on the compressed cache.
+
+    Uses the absorbed-matmul trick: queries are pulled into latent space
+    (q·W_kb) so attention runs against the (S, r) latents directly — per
+    step FLOPs O(S·(r + rope_hd)·H) and cache stays compressed."""
+    b = x.shape[0]
+    pos = cache.length
+    positions = pos[None, None] + jnp.zeros((b, 1), jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_new, kr_new = _mla_latent(p, cfg, x, positions)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), pos, axis=1)
+    c_kv = shard(c_kv, "cache_seq_latent")
+    k_rope = shard(k_rope, "cache_seq_latent")
+    # absorb: q_lat (b,1,h,r) = q_nope · W_kb^T
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(x.dtype))
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                         c_kv.astype(jnp.float32))
+              + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32)))
+    scores *= (cfg.head_dim + cfg.rope_head_dim) ** -0.5
+    mask = (jnp.arange(c_kv.shape[1])[None, :] <= pos)  # (1, S)
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhk->bshk", out_lat.astype(x.dtype),
+                     p["wv_b"].astype(x.dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, MLACache(c_kv=c_kv, k_rope=k_rope, length=pos + 1)

@@ -1,0 +1,101 @@
+"""Transformer NN primitives: norms, projections, embeddings, RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .param import ParamLeaf, param
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:                     # gemma-style (1 + w) scaling
+        w = 1.0 + w
+    return (x * w).astype(dtype)
+
+
+def init_rms_norm(d: int, plus_one: bool = False) -> ParamLeaf:
+    init = "zeros" if plus_one else "ones"
+    return param(None, (d,), ("embed",), init=init)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,s,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embedding initializers (ParamLeaf trees)
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, names: tuple,
+               bias: bool = False, dtype=jnp.float32, scale=None) -> dict:
+    p = {"w": param(key, (d_in, d_out), names, dtype=dtype, scale=scale)}
+    if bias:
+        p["b"] = param(None, (d_out,), (names[-1],), init="zeros",
+                       dtype=dtype)
+    return p
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> ParamLeaf:
+    return param(key, (vocab, d), ("vocab", "embed"), dtype=dtype, scale=1.0)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def init_mlp(key, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(k1, d, d_ff, ("embed", "mlp"), dtype=dtype),
+        "up": init_dense(k2, d, d_ff, ("embed", "mlp"), dtype=dtype),
+        "down": init_dense(k3, d_ff, d, ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    """Gated MLP (SwiGLU / GeGLU)."""
+    return dense(p["down"], activation(act)(dense(p["gate"], x))
+                 * dense(p["up"], x))

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts: top-k router + capacity-bounded sort-based dispatch.
+
+The dispatch is the MoE analogue of the paper's gather/split: tokens
+(vertex-sharded in NeutronTP terms) are exchanged into an expert-major
+layout (E, C, D) — experts sharded over the model axis — processed by
+batched expert FFNs, and combined back.  Under pjit the scatter/gather pair
+lowers to all-to-all traffic between the token and expert shardings.
+
+Sort-based dispatch (no (T, E, C) one-hot): flatten the (T·k) assignments,
+sort by expert, rank within expert via a searchsorted baseline, drop
+overflow beyond capacity.  O(T·k log(T·k)) and memory-light.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers as nl
+from .param import param
+
+Sharder = Callable[[jax.Array, str], jax.Array]
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": param(ks[0], (d, e), ("embed", None), dtype=jnp.float32),
+        "gate": param(ks[1], (e, d, f), ("experts", "embed", "mlp"),
+                      dtype=dtype, scale=scale),
+        "up": param(ks[2], (e, d, f), ("experts", "embed", "mlp"),
+                    dtype=dtype, scale=scale),
+        "down": param(ks[3], (e, f, d), ("experts", "mlp", "embed"),
+                      dtype=dtype, scale=1.0 / jnp.sqrt(f)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = nl.init_mlp(ks[4], d,
+                                  cfg.moe_d_ff * cfg.num_shared_experts,
+                                  dtype=dtype)
+    return p
+
+
+def moe_apply(p: dict, cfg: ArchConfig, x: jax.Array, *,
+              capacity_factor: float | None = None,
+              dropless: bool = False,
+              shard: Sharder = lambda a, k: a):
+    """x: (B, S, D) → (y, aux_loss).
+
+    Routing: softmax → top-k (renormalized).  Capacity per expert
+    C = ceil(T·k/E · cf); overflow tokens are dropped (their combine weight
+    is zero), matching Switch/GShard semantics.  ``dropless=True`` sets
+    C = T (decode path: bitwise-consistent with any routing history).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch eq. 4) ----
+    me = jnp.mean(probs, axis=0)                               # router mass
+    one_hot = jnp.zeros((t, e), jnp.float32).at[
+        jnp.arange(t)[:, None], top_e].add(1.0)
+    ce = jnp.mean(one_hot, axis=0) / k                         # token frac
+    aux = e * jnp.sum(me * ce)
+
+    # ---- expert-parallel dispatch (explicit all-to-all; §Perf HC2) ----
+    if not dropless and getattr(shard, "ep_moe", None):
+        y = shard.ep_moe(p, cfg, x, top_e.reshape(b, s, k),
+                         top_p.reshape(b, s, k), capacity_factor)
+        if y is not None:
+            if "shared" in p:
+                y = y + nl.mlp(p["shared"], xf, cfg.act).reshape(b, s, d)
+            return y, aux
+
+    # ---- sort-based dispatch ----
+    cap = t if dropless else int(max(1, -(-t * k // e) * capacity_factor))
+    fe = top_e.reshape(-1)                                     # (T·k,)
+    ft = jnp.repeat(jnp.arange(t), k)
+    fp = top_p.reshape(-1)
+    order = jnp.argsort(fe, stable=True)
+    se, st, sp = fe[order], ft[order], fp[order]
+    first = jnp.searchsorted(se, jnp.arange(e))                # (E,)
+    pos = jnp.arange(t * k) - first[se]                        # rank in expert
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap - 1)
+
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[se, pos_c].add(
+        jnp.where(keep[:, None], xf[st], 0).astype(x.dtype))
+    buf = shard(buf, "expert_buf")                             # (E, C, D)
+
+    # ---- batched expert FFN ----
+    act = nl.activation(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["gate"].astype(x.dtype))) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(x.dtype))
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(x.dtype))
+    y_buf = shard(y_buf, "expert_buf")
+
+    # ---- combine ----
+    gathered = y_buf[se, pos_c] * (sp * keep)[:, None].astype(x.dtype)
+    yf = jnp.zeros((t, d), x.dtype).at[st].add(gathered)
+
+    if "shared" in p:
+        yf = yf + nl.mlp(p["shared"], xf, cfg.act)
+    return yf.reshape(b, s, d), aux

@@ -1,0 +1,68 @@
+"""Parameter creation with logical axis names.
+
+Params are built as ``ParamLeaf(value, names)`` where ``names`` tags each
+array dim with a logical axis ("embed", "heads", "mlp", "vocab", ...).
+``split_params`` separates the value tree from the names tree; the sharding
+rules in :mod:`repro.sharding.specs` map logical names → mesh axes per
+distribution strategy, giving every strategy a single source of truth for
+parameter layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=("value",),
+         meta_fields=("names",))
+@dataclasses.dataclass(frozen=True)
+class ParamLeaf:
+    """Registered pytree: ``value`` is the (sole) child, ``names`` rides
+    along as static metadata — so ParamLeaf trees pass through jit /
+    eval_shape / optimizers transparently while keeping logical axes."""
+    value: Any                      # jax.Array or ShapeDtypeStruct
+    names: tuple[str | None, ...]   # one logical name per dim
+
+
+def param(key, shape, names, dtype=jnp.float32, scale: float | None = None,
+          init: str = "normal") -> ParamLeaf:
+    assert len(shape) == len(names), (shape, names)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    elif init == "normal":
+        if scale is None:
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            scale = 1.0 / np.sqrt(max(fan_in, 1))
+        v = (scale * jax.random.normal(key, shape)).astype(dtype)
+    else:
+        raise ValueError(init)
+    return ParamLeaf(v, tuple(names))
+
+
+def is_leaf(x):
+    return isinstance(x, ParamLeaf)
+
+
+def split_params(tree):
+    """(values_tree, names_tree) from a ParamLeaf tree."""
+    values = jax.tree.map(lambda l: l.value, tree, is_leaf=is_leaf)
+    names = jax.tree.map(lambda l: l.names, tree, is_leaf=is_leaf)
+    return values, names
+
+
+def map_names_to_specs(names_tree, rule):
+    """names tuple → PartitionSpec via ``rule(logical_name) -> mesh axis``."""
+    from jax.sharding import PartitionSpec as P
+
+    def to_spec(names):
+        return P(*[rule(n) for n in names])
+
+    return jax.tree.map(to_spec, names_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,268 @@
+"""Mamba2 (SSD — state-space duality) mixing layer [arXiv:2405.21060].
+
+The SSD chunked algorithm is a natural fit for the paper's chunk-scheduling
+idea: the sequence is cut into chunks; within a chunk the dual (quadratic)
+form runs on the MXU, and a tiny recurrence carries the (H, P, N) state
+between chunks — the same "bounded working set + sequential chunk schedule"
+structure NeutronTP uses for graph aggregation.
+
+Head sharding note (DESIGN §Arch-applicability): the SSD state is
+block-diagonal over heads, so sharding heads over the model axis needs *no*
+collectives inside the scan — the analogue of NeutronTP's feature slices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers as nl
+from .param import param
+
+Sharder = Callable[[jax.Array, str], jax.Array]
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state_dim
+    nh = cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection → [z, x, B, C, dt]
+        "in_proj": param(ks[0], (d, 2 * di + 2 * n + nh), ("embed", "inner"),
+                         dtype=dtype),
+        "conv_w": param(ks[1], (cfg.conv_kernel, conv_dim),
+                        (None, "inner"), dtype=dtype,
+                        scale=1.0 / cfg.conv_kernel),
+        "conv_b": param(None, (conv_dim,), ("inner",), init="zeros",
+                        dtype=dtype),
+        "a_log": param(None, (nh,), ("ssm_heads",), init="zeros",
+                       dtype=jnp.float32),
+        "d_skip": param(None, (nh,), ("ssm_heads",), init="ones",
+                        dtype=jnp.float32),
+        "dt_bias": param(None, (nh,), ("ssm_heads",), init="zeros",
+                         dtype=jnp.float32),
+        "norm": nl.init_rms_norm(di),
+        "out_proj": param(ks[2], (di, d), ("inner", "embed"), dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    di, n, nh = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C); kernel (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """L[i, j] = sum_{j < k <= i} x[k]  (−inf above diagonal)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int):
+    """SSD forward (training / prefill).
+
+    x     : (B, S, H, P)   per-head inputs
+    dt    : (B, S, H)      softplus'd step sizes
+    a     : (H,)           negative decay rates
+    b_mat : (B, S, N)      input  projection (single group)
+    c_mat : (B, S, N)      output projection
+    Returns (B, S, H, P) and the final state (B, H, P, N).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    s_orig = s
+    if s % chunk:
+        # pad tail: dt=0 ⇒ decay=1 and zero state update — numerically inert
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    # Head-major (B,nc,H,Q,·) layouts throughout so every contraction is a
+    # plain batched matmul — §Perf round 3: the 4-operand einsum forms let
+    # XLA insert (B,nc,H,Q,Q)-sized transpose/copy pairs between dots
+    # (~2e13 B/step censused on mamba2 train_4k); with consistent layouts
+    # only ONE final transpose back to sequence-major remains.
+    xc_h = x.reshape(bsz, nc, chunk, h, p).transpose(0, 1, 3, 2, 4)
+    dtc_h = dt.reshape(bsz, nc, chunk, h).transpose(0, 1, 3, 2)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+
+    da_h = dtc_h * a[:, None]                          # (B,nc,H,Q)
+    seg = _segsum(da_h)                                # (B,nc,H,Q,Q)
+    l_mat = jnp.exp(seg)
+
+    # intra-chunk (dual/quadratic) term: M = (C·Bᵀ) ⊙ L ⊙ dt, y = M·X
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)     # (B,nc,Q,Q)
+    m_mat = scores[:, :, None] * l_mat * dtc_h[..., None, :]
+    y_intra_h = m_mat @ xc_h                           # (B,nc,H,Q,P)
+
+    # per-chunk final states: state[p,n] = Σ_k w[k]·x[k,p]·b[k,n]
+    decay_to_end = jnp.exp(jnp.cumsum(da_h[..., ::-1], axis=-1)[..., ::-1]
+                           - da_h)                     # (B,nc,H,Q)
+    wb = bc[:, :, None] * (decay_to_end * dtc_h)[..., None]
+    states = jnp.einsum("bchqp,bchqn->bchpn", xc_h, wb)  # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(da_h, axis=-1))      # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                              # emit state BEFORE chunk
+
+    init = jnp.zeros((bsz, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)      # (B,nc,H,P,N)
+
+    # inter-chunk contribution: decay from chunk start
+    decay_from_start = jnp.exp(jnp.cumsum(da_h, axis=-1))  # (B,nc,H,Q)
+    ch = cc[:, :, None] * decay_from_start[..., None]      # (B,nc,H,Q,N)
+    y_inter_h = ch @ jnp.swapaxes(prev_states, -1, -2)     # (B,nc,H,Q,P)
+    y = (y_intra_h + y_inter_h).transpose(0, 1, 3, 2, 4)   # → seq-major
+    y = y.reshape(bsz, s, h, p)
+    return y[:, :s_orig], final
+
+
+def mamba2_forward(p: dict, cfg: ArchConfig, x: jax.Array, *,
+                   shard: Sharder = lambda a, k: a):
+    """Full-sequence mamba2 block (training / prefill).  x: (B, S, D)."""
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                       p["conv_b"].astype(x.dtype))
+    di, n = cfg.d_inner, cfg.ssm_state_dim
+    xs = xbc[..., :di]
+    b_mat = xbc[..., di: di + n]
+    c_mat = xbc[..., di + n:]
+    nh, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    xh = xs.reshape(*xs.shape[:2], nh, hp)
+    xh = shard(xh, "act_ssm_heads")
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    if cfg.ssm_impl == "fused":
+        from ..kernels.ssd import ssd_chunked_pallas
+        y, _ = ssd_chunked_pallas(
+            xh.astype(jnp.float32), dt_sp, a, b_mat.astype(jnp.float32),
+            c_mat.astype(jnp.float32), cfg.ssm_chunk,
+            interpret=jax.default_backend() != "tpu")
+    else:
+        y, _ = ssd_chunked(xh.astype(jnp.float32), dt_sp, a,
+                           b_mat.astype(jnp.float32),
+                           c_mat.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][:, None]   # D skip
+    y = shard(y.astype(x.dtype), "act_ssm_heads")
+    y = y.reshape(*x.shape[:2], di)
+    y = nl.rms_norm(y * jax.nn.silu(z), p["norm"].astype(jnp.float32),
+                    cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba2_prefill(p: dict, cfg: ArchConfig, x: jax.Array, *,
+                   shard: Sharder = lambda a, k: a):
+    """Full-sequence mamba2 that also returns the decode cache."""
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc_raw, p["conv_w"].astype(x.dtype),
+                       p["conv_b"].astype(x.dtype))
+    di, n = cfg.d_inner, cfg.ssm_state_dim
+    xs = xbc[..., :di]
+    b_mat = xbc[..., di: di + n]
+    c_mat = xbc[..., di + n:]
+    nh, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    xh = xs.reshape(*xs.shape[:2], nh, hp)
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, final_state = ssd_chunked(xh.astype(jnp.float32), dt_sp, a,
+                                 b_mat.astype(jnp.float32),
+                                 c_mat.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.astype(x.dtype).reshape(*x.shape[:2], di)
+    y = nl.rms_norm(y * jax.nn.silu(z), p["norm"].astype(jnp.float32),
+                    cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    k = cfg.conv_kernel
+    cache = SSMCache(
+        conv_state=xbc_raw[:, -(k - 1):].astype(x.dtype),
+        ssm_state=final_state,
+        length=jnp.asarray(x.shape[1], jnp.int32))
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state per step)
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("conv_state", "ssm_state", "length"), meta_fields=())
+@dataclasses.dataclass
+class SSMCache:
+    conv_state: jax.Array   # (B, K-1, conv_dim)
+    ssm_state: jax.Array    # (B, H, P, N)
+    length: jax.Array
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state_dim
+    return SSMCache(
+        conv_state=jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        ssm_state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                             cfg.ssm_state_dim), jnp.float32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def mamba2_decode(p: dict, cfg: ArchConfig, x: jax.Array, cache: SSMCache,
+                  *, shard: Sharder = lambda a, k: a):
+    """Single-token step.  x: (B, 1, D) → (B, 1, D), new cache."""
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc_new, dt = _split_proj(cfg, zxbcdt)          # (B,1,·)
+    window = jnp.concatenate([cache.conv_state,
+                              xbc_new.astype(cache.conv_state.dtype)],
+                             axis=1)                   # (B, K, conv)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(
+        x.dtype)
+    xbc = jax.nn.silu(conv_out)[:, None]
+    di, n = cfg.d_inner, cfg.ssm_state_dim
+    xs = xbc[..., :di]
+    b_mat = xbc[..., di: di + n][:, 0]                 # (B, N)
+    c_mat = xbc[..., di + n:][:, 0]
+    nh, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    xh = xs.reshape(x.shape[0], nh, hp).astype(jnp.float32)
+    dt_sp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt_sp * a)                         # (B, H)
+    state = cache.ssm_state * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt_sp, xh, b_mat.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", c_mat.astype(jnp.float32), state)
+    y = y + xh * p["d_skip"][:, None]
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = nl.rms_norm(y * jax.nn.silu(z), p["norm"].astype(jnp.float32),
+                    cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, SSMCache(conv_state=window[:, 1:], ssm_state=state,
+                         length=cache.length + 1)

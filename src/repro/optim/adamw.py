@@ -1,0 +1,95 @@
+"""Minimal pytree optimizers (AdamW / SGD) — no external dependencies.
+
+API mirrors optax: ``opt = adamw(lr); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params =
+apply_updates(params, updates)``.  Learning rates may be floats or
+step-indexed schedules (callables); ``state.count`` carries the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("count", "mu", "nu"), meta_fields=())
+@dataclasses.dataclass
+class OptState:
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], OptState]
+    update: Callable[..., tuple[Any, OptState]]
+
+
+def _lr_at(lr, count):
+    return lr(count) if callable(lr) else lr
+
+
+def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          grad_clip_norm: float | None = None) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return OptState(count=jnp.zeros((), jnp.int32), mu=zeros,
+                        nu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state: OptState, params=None):
+        count = state.count + 1
+        if grad_clip_norm is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * (g * g),
+                          state.nu, grads)
+        c = count.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1 ** c)
+        nu_hat_scale = 1.0 / (1 - b2 ** c)
+        lr_t = _lr_at(lr, count)
+
+        def upd(m, v, p):
+            step = lr_t * (m * mu_hat_scale) / (
+                jnp.sqrt(v * nu_hat_scale) + eps)
+            if weight_decay and p is not None and p.ndim >= 2:
+                step = step + lr_t * weight_decay * p
+            return -step
+
+        updates = jax.tree.map(upd, mu, nu,
+                               params if params is not None else mu)
+        return updates, OptState(count=count, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(count=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(jnp.zeros_like, params), nu=None)
+
+    def update(grads, state: OptState, params=None):
+        count = state.count + 1
+        lr_t = _lr_at(lr, count)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g,
+                              state.mu, grads)
+            updates = jax.tree.map(lambda m: -lr_t * m, mu)
+        else:
+            mu = state.mu
+            updates = jax.tree.map(lambda g: -lr_t * g, grads)
+        return updates, OptState(count=count, mu=mu, nu=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

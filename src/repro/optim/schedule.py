@@ -1,0 +1,25 @@
+"""Step-indexed learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_decay(peak: float, total_steps: int, floor: float = 0.0):
+    def f(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+    return f
+
+
+def linear_warmup_cosine(peak: float, warmup: int, total_steps: int,
+                         floor: float = 0.0):
+    def f(step):
+        warm = peak * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return f

@@ -1,0 +1,1 @@
+from .engine import make_serve_fns, serve_step_spec, generate  # noqa: F401

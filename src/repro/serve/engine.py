@@ -1,0 +1,89 @@
+"""Serving engine: prefill + jitted decode steps + batched generation.
+
+``serve_step`` (one token against a filled cache) is what the decode input
+shapes (decode_32k, long_500k) lower in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from ..configs.base import ArchConfig, InputShape
+from ..models import transformer as T
+from ..sharding.specs import Sharder, ShardingRules
+
+
+def make_serve_fns(cfg: ArchConfig, sharder=None, *,
+                   long_context: bool = False, last_only: bool = False):
+    """(prefill_fn, decode_fn) jit-ready closures."""
+    shard = sharder if sharder is not None else (lambda x, k: x)
+
+    def prefill_fn(params, tokens, prefix=None, *, max_len: int):
+        return T.prefill(params, cfg, tokens, prefix, max_len=max_len,
+                         shard=shard, long_context=long_context,
+                         last_only=last_only)
+
+    def decode_fn(params, token, caches):
+        return T.decode_step(params, cfg, token, caches, shard=shard)
+
+    return prefill_fn, decode_fn
+
+
+def serve_step_spec(cfg: ArchConfig, shape: InputShape,
+                    long_context: bool = False):
+    """(token_spec, cache_specs) ShapeDtypeStructs for dry-run lowering of
+    one decode step with a ``shape.seq_len``-deep cache."""
+    b = shape.global_batch
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    caches = jax.eval_shape(
+        lambda: T.init_caches(cfg, b, shape.seq_len, dtype=dtype,
+                              long_context=long_context))
+    return token, caches
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray        # (B, prompt+generated)
+    prefill_logits: Any
+
+
+def generate(params, cfg: ArchConfig, prompt: np.ndarray, n_steps: int,
+             *, prefix: Optional[np.ndarray] = None,
+             temperature: float = 0.0, seed: int = 0,
+             max_len: Optional[int] = None,
+             long_context: bool = False) -> GenerationResult:
+    """Greedy / temperature sampling for a batch of prompts (single host)."""
+    b, s = prompt.shape
+    off = cfg.num_prefix_embeddings if cfg.modality else 0
+    max_len = max_len or (s + n_steps + off)
+    prefill_fn, decode_fn = make_serve_fns(cfg, long_context=long_context)
+    prefill_jit = jax.jit(partial(prefill_fn, max_len=max_len))
+    decode_jit = jax.jit(decode_fn)
+
+    logits, caches = prefill_jit(params, jnp.asarray(prompt),
+                                 None if prefix is None
+                                 else jnp.asarray(prefix))
+    key = jax.random.PRNGKey(seed)
+    last = logits[:, -1]
+    out = [np.asarray(prompt)]
+    tok = None
+    for i in range(n_steps):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, last / temperature,
+                                         axis=-1)[:, None]
+        else:
+            tok = jnp.argmax(last, axis=-1)[:, None]
+        out.append(np.asarray(tok))
+        step_logits, caches = decode_jit(params, tok.astype(jnp.int32),
+                                         caches)
+        last = step_logits[:, -1]
+    return GenerationResult(tokens=np.concatenate(out, axis=1),
+                            prefill_logits=logits)

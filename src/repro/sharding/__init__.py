@@ -1,0 +1,2 @@
+from .specs import (ShardingRules, Sharder, make_sharder,
+                    cache_shardings)  # noqa: F401

@@ -1,0 +1,240 @@
+"""Explicit-collective sharder: the paper's gather/split as real
+``jax.lax.all_to_all`` ops inside ``shard_map`` (§Perf hillclimbs).
+
+The baseline ``Sharder`` expresses NeutronTP's layout transitions as pjit
+sharding *constraints* and lets XLA's SPMD partitioner pick the collective.
+The §Roofline baseline shows the partitioner frequently picks
+all-gather(+slice) — g× the wire bytes of the paper's all-to-all — and
+lowers the data-dependent MoE scatter into an all-reduce storm.
+
+``ExplicitSharder`` overrides the two hot transitions with hand-scheduled
+collectives, exactly the paper's design:
+
+* ``explicit_a2a``  — the attention mixing phase.  q (and k/v when head
+  counts divide) move seq-sharded → head-sharded via ONE all-to-all of
+  V·D/N per device (paper §3.1 "split"), and back via one more
+  ("gather").  GQA with kv_heads < N keeps k/v via an all-gather plus a
+  local static slice of the kv group the device's q heads need.
+* ``ep_moe``        — expert-parallel MoE dispatch.  Tokens are routed
+  locally, packed into per-expert-shard send buffers, exchanged with ONE
+  all-to-all over the model axis, processed by the local expert slice,
+  and returned with one more all-to-all.  This is gather/split with
+  "vertex set" = the routed token set.
+
+Both paths are differentiable (shard_map + collectives have transposes)
+and fall back to the constraint path when divisibility fails, so every
+architecture still lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .specs import Sharder
+
+
+def _data_spec_axis(rules):
+    return rules.data_axes if len(rules.data_axes) > 1 else rules.data_axes[0]
+
+
+@dataclasses.dataclass
+class ExplicitSharder(Sharder):
+    """Sharder whose mixing/MoE transitions are explicit collectives.
+
+    Flags allow the hillclimb to enable each mechanism independently so
+    §Perf can attribute deltas to one change at a time."""
+
+    use_a2a_mixing: bool = True
+    use_ep_moe: bool = True
+    use_ring: bool = True     # ring attention when heads % n != 0
+
+    # ------------------------------------------------------------------
+    # paper's gather/split for the attention mixing phase
+    # ------------------------------------------------------------------
+
+    @property
+    def explicit_a2a(self):
+        return self._a2a_mixing if self.use_a2a_mixing else None
+
+    def _a2a_mixing(self, cfg, q, k, v, *, window=None, scale=None):
+        """q: (B,S,Hq,hd) seq-sharded over the model axis → attention
+        output in the same layout, using all-to-all layout transitions.
+        Returns None when inapplicable (caller falls back)."""
+        from ..nn.attention import attention_blockwise, attention_core, \
+            _causal_mask, _window_mask
+
+        mesh, rules = self.mesh, self.rules
+        m = rules.model_axis
+        if rules.strategy != "neutron_tp" or m not in mesh.axis_names:
+            return None
+        n = mesh.shape[m]
+        b, s, hq, hd = q.shape
+        hkv = k.shape[2]
+        hdv = v.shape[-1]
+        if n == 1 or s % n:
+            return None             # transition undefined — constraint path
+        if hq % n:
+            # heads don't divide the TP degree (qwen 20H, internvl 14H on
+            # 16): the paper's head-sharded mixing is undefined.  Ring
+            # attention keeps the sequence sharded and rotates K/V chunks
+            # — the §4.2.2 inter-chunk pipeline applied to attention.
+            if not self.use_ring:
+                return None
+            from ..nn.ring_attention import ring_attention_local
+            d = _data_spec_axis(rules)
+            io_spec = P(d, m, None, None)
+            fn = shard_map(
+                lambda ql, kl, vl: ring_attention_local(
+                    ql, kl, vl, m, causal=True, window=window,
+                    softcap=cfg.attn_softcap, scale=scale),
+                mesh=mesh, in_specs=(io_spec, io_spec, io_spec),
+                out_specs=io_spec, check_rep=False)
+            return fn(q, k, v)
+        hq_l = hq // n
+        # static kv slice width per device: the kv groups covered by the
+        # device's contiguous hq_l q heads.  Aligned iff hq_l divides the
+        # GQA group size (or kv heads divide n, where we a2a k/v too).
+        g = hq // hkv
+        kv_a2a = hkv % n == 0
+        if not kv_a2a:
+            if g % hq_l and hq_l % g:
+                return None
+            nkv_l = max(1, (hq_l + g - 1) // g)
+
+        d = _data_spec_axis(rules)
+        io_spec = P(d, m, None, None)
+
+        def local_fn(ql, kl, vl):
+            # ql: (B_l, S/n, Hq, hd) → (B_l, S, Hq/n, hd): paper's split
+            qg = jax.lax.all_to_all(ql, m, split_axis=2, concat_axis=1,
+                                    tiled=True)
+            if kv_a2a:
+                kg = jax.lax.all_to_all(kl, m, split_axis=2, concat_axis=1,
+                                        tiled=True)
+                vg = jax.lax.all_to_all(vl, m, split_axis=2, concat_axis=1,
+                                        tiled=True)
+            else:
+                # GQA: kv heads don't divide n — gather seq, slice the
+                # kv group(s) this device's q heads attend to.
+                kg = jax.lax.all_gather(kl, m, axis=1, tiled=True)
+                vg = jax.lax.all_gather(vl, m, axis=1, tiled=True)
+                idx = jax.lax.axis_index(m)
+                start = (idx * hq_l) // g
+                kg = jax.lax.dynamic_slice_in_dim(kg, start, nkv_l, axis=2)
+                vg = jax.lax.dynamic_slice_in_dim(vg, start, nkv_l, axis=2)
+            if cfg.attn_impl == "flash":
+                from ..kernels.flash_attn import flash_attention
+                out = flash_attention(
+                    qg, kg, vg, causal=True, window=window,
+                    softcap=cfg.attn_softcap, scale=scale,
+                    block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+                    interpret=jax.default_backend() != "tpu")
+            elif cfg.attn_impl == "blockwise":
+                out = attention_blockwise(
+                    qg, kg, vg, causal=True, window=window,
+                    softcap=cfg.attn_softcap, scale=scale,
+                    block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+            else:
+                sq = qg.shape[1]
+                mask = (_window_mask(sq, sq, 0, window) if window
+                        else _causal_mask(sq, sq, 0))[None]
+                out = attention_core(qg, kg, vg, mask,
+                                     softcap=cfg.attn_softcap, scale=scale)
+            # (B_l, S, Hq/n, hdv) → (B_l, S/n, Hq, hdv): paper's gather
+            return jax.lax.all_to_all(out, m, split_axis=1, concat_axis=2,
+                                      tiled=True)
+
+        fn = shard_map(local_fn, mesh=mesh,
+                       in_specs=(io_spec, io_spec, io_spec),
+                       out_specs=io_spec, check_rep=False)
+        return fn(q, k, v)
+
+    # ------------------------------------------------------------------
+    # expert-parallel MoE dispatch (gather/split over the routed tokens)
+    # ------------------------------------------------------------------
+
+    @property
+    def ep_moe(self):
+        return self._ep_moe if self.use_ep_moe else None
+
+    def _ep_moe(self, p: dict, cfg, x: jax.Array, top_e: jax.Array,
+                top_p: jax.Array, capacity_factor: float):
+        """x: (B,S,D) token-sharded (data×model); top_e/top_p: (B,S,k)
+        routing decisions (computed globally by the caller — aux loss and
+        router semantics identical to the baseline).  Returns combined
+        expert output (B,S,D), or None when inapplicable."""
+        mesh, rules = self.mesh, self.rules
+        m = rules.model_axis
+        if rules.strategy != "neutron_tp" or m not in mesh.axis_names:
+            return None
+        n = mesh.shape[m]
+        b, s, dm = x.shape
+        e, kk = cfg.num_experts, cfg.num_experts_per_tok
+        if n == 1 or e % n or s % n:
+            return None
+        e_l = e // n
+
+        d = _data_spec_axis(rules)
+        tok_spec = P(d, m, None)
+        w_spec = P(m, None, None)   # (E, D, F): experts over model; pjit
+        #                              reshards (FSDP embed gather) outside
+
+        def local_fn(xl, tel, tpl, gate, up, down):
+            b_l, s_l, _ = xl.shape
+            t_l = b_l * s_l
+            cap = int(max(1, -(-t_l * kk // e) * capacity_factor))
+            xf = xl.reshape(t_l, dm)
+            fe = tel.reshape(-1)                         # (t_l·k,)
+            ft = jnp.repeat(jnp.arange(t_l), kk)
+            fp = tpl.reshape(-1)
+            order = jnp.argsort(fe, stable=True)
+            se, st, sp = fe[order], ft[order], fp[order]
+            first = jnp.searchsorted(se, jnp.arange(e))
+            pos = jnp.arange(t_l * kk) - first[se]
+            keep = pos < cap
+            pos_c = jnp.where(keep, pos, cap - 1)
+
+            # local send buffer (E, cap, D), expert-major
+            buf = jnp.zeros((e, cap, dm), xl.dtype)
+            buf = buf.at[se, pos_c].add(
+                jnp.where(keep[:, None], xf[st], 0).astype(xl.dtype))
+
+            # ---- paper's split: ONE all-to-all to the expert owners ----
+            sendb = buf.reshape(n, e_l, cap, dm)
+            recv = jax.lax.all_to_all(sendb, m, split_axis=0,
+                                      concat_axis=0, tiled=False)
+            # recv: (n_senders, e_l, cap, D) → (e_l, n·cap, D)
+            work = recv.transpose(1, 0, 2, 3).reshape(e_l, n * cap, dm)
+
+            # ---- local expert FFN ----
+            from ..nn import layers as nl
+            act = nl.activation(cfg.act)
+            h = act(jnp.einsum("ecd,edf->ecf", work,
+                               gate.astype(xl.dtype))) \
+                * jnp.einsum("ecd,edf->ecf", work, up.astype(xl.dtype))
+            y = jnp.einsum("ecf,efd->ecd", h, down.astype(xl.dtype))
+
+            # ---- paper's gather: ONE all-to-all back to the senders ----
+            yb = y.reshape(e_l, n, cap, dm).transpose(1, 0, 2, 3)
+            back = jax.lax.all_to_all(yb, m, split_axis=0,
+                                      concat_axis=0, tiled=False)
+            y_buf = back.reshape(e, cap, dm)
+
+            # ---- local combine ----
+            gathered = y_buf[se, pos_c] * (sp * keep)[:, None].astype(
+                xl.dtype)
+            yf = jnp.zeros((t_l, dm), xl.dtype).at[st].add(gathered)
+            return yf.reshape(b_l, s_l, dm)
+
+        fn = shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(tok_spec, tok_spec, tok_spec, w_spec, w_spec,
+                      P(m, None, None)),
+            out_specs=tok_spec, check_rep=False)
+        return fn(x, top_e, top_p, p["gate"], p["up"], p["down"])

@@ -1,0 +1,3 @@
+from .loop import (make_train_step, make_loss_fn, sharded_setup,
+                   batch_spec, batch_shardings)  # noqa: F401
+from .state import TrainState, init_train_state  # noqa: F401

@@ -1,0 +1,127 @@
+"""Distributed LM train step factory.
+
+Builds the jitted ``train_step(state, batch) -> (state, metrics)`` with the
+chosen sharding strategy applied to parameters (in_shardings) and
+activations (constraint hooks inside the model).  Works identically for
+real training on the host CPU (1 device) and for the 512-device dry-run
+lowering (ShapeDtypeStruct inputs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .. import optim
+from ..configs.base import ArchConfig, InputShape
+from ..models import transformer as T
+from ..nn.param import split_params
+from ..sharding.specs import ShardingRules, Sharder
+from .state import TrainState, init_train_state
+
+
+def batch_spec(cfg: ArchConfig, shape: InputShape,
+               rules: ShardingRules) -> dict:
+    """ShapeDtypeStructs for one global batch (dry-run input_specs)."""
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.modality:
+        batch["prefix"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_embeddings, cfg.d_model), jnp.float32)
+    return batch
+
+
+def batch_shardings(cfg: ArchConfig, rules: ShardingRules,
+                    mesh: Mesh) -> dict:
+    d = rules.data_axes if len(rules.data_axes) > 1 else rules.data_axes[0]
+    sh = {
+        "tokens": NamedSharding(mesh, P(d, None)),
+        "targets": NamedSharding(mesh, P(d, None)),
+    }
+    if cfg.modality:
+        sh["prefix"] = NamedSharding(mesh, P(d, None, None))
+    return sh
+
+
+def make_loss_fn(cfg: ArchConfig, sharder: Optional[Sharder],
+                 aux_weight: float = 0.01, remat: bool = True):
+    shard = sharder if sharder is not None else (lambda x, k: x)
+
+    def loss_fn(params, batch):
+        logits, aux = T.forward(params, cfg, batch["tokens"],
+                                batch.get("prefix"), shard=shard,
+                                remat=remat)
+        off = cfg.num_prefix_embeddings if cfg.modality else 0
+        tok_logits = logits[:, off:]
+        # batch["targets"] is pre-shifted: targets[i] = tokens[i+1]
+        loss = T.lm_loss(tok_logits, batch["targets"])
+        return loss + aux_weight * aux, (loss, aux)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, optimizer, sharder=None,
+                    aux_weight: float = 0.01, remat: bool = True,
+                    donate: bool = True, in_shardings=None):
+    loss_fn = make_loss_fn(cfg, sharder, aux_weight, remat)
+
+    def train_step(state: TrainState, batch):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        (total, (loss, aux)), grads = grad_fn(state.params, batch)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                              state.params, updates)
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               step=state.step + 1)
+        metrics = {"loss": loss, "aux_loss": aux, "total_loss": total}
+        return new_state, metrics
+
+    kwargs = {}
+    if in_shardings is not None:
+        kwargs["in_shardings"] = in_shardings
+    return jax.jit(train_step, donate_argnums=(0,) if donate else (),
+                   **kwargs)
+
+
+def sharded_setup(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                  rules: ShardingRules, lr: float = 3e-4,
+                  sharder: Optional[Sharder] = None, remat=True):
+    """Everything needed to lower (and run) a sharded train step:
+    (train_step, state_shapes+shardings, batch specs+shardings)."""
+    optimizer = optim.adamw(lr)
+    abstract = jax.eval_shape(
+        lambda k: T.init_transformer(k, cfg), jax.random.PRNGKey(0))
+    p_shapes, p_names = split_params(abstract)
+    p_shardings_vals = rules.param_shardings(p_names, p_shapes, mesh)
+    # re-wrap to the ParamLeaf tree structure (shardings apply to .value)
+    p_shardings = jax.tree.map(
+        lambda leaf_sh: leaf_sh, p_shardings_vals)
+
+    state_shapes = jax.eval_shape(
+        lambda p: init_train_state(p, optimizer), abstract)
+    # adam moments mirror the param tree exactly → same shardings
+    rep = NamedSharding(mesh, P())
+    state_shardings = TrainState(
+        params=p_shardings,
+        opt_state=optim.OptState(count=rep, mu=p_shardings, nu=p_shardings),
+        step=rep)
+
+    if sharder is None:
+        sharder = Sharder(mesh=mesh, rules=rules)
+    b_specs = batch_spec(cfg, shape, rules)
+    b_shardings = batch_shardings(cfg, rules, mesh)
+    step_fn = make_train_step(
+        cfg, optimizer, sharder, remat=remat,
+        in_shardings=(state_shardings, b_shardings))
+    return dict(train_step=step_fn, optimizer=optimizer,
+                state_shapes=state_shapes, state_shardings=state_shardings,
+                batch_specs=b_specs, batch_shardings=b_shardings,
+                sharder=sharder)

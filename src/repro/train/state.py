@@ -1,0 +1,23 @@
+"""Train state pytree."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("params", "opt_state", "step"), meta_fields=())
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_train_state(params, optimizer) -> TrainState:
+    return TrainState(params=params, opt_state=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))

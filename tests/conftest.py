@@ -1,0 +1,10 @@
+import os
+import sys
+
+# src/ layout import path (tests also work without `pip install -e .`)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS device-count forcing here — unit tests and benches run
+# on the single real CPU device.  Multi-device behaviour is covered by the
+# subprocess tests in test_distributed.py, which set
+# --xla_force_host_platform_device_count=8 for their child processes only.

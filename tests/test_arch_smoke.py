@@ -1,0 +1,168 @@
+"""Per-architecture smoke tests: REDUCED variant (≤2 eff. layers, d≤512,
+≤4 experts), one forward + one train step on CPU; asserts shapes + no NaNs.
+Decode smoke: prefill + 2 decode steps consistent shapes/finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.data import SyntheticLM
+from repro.models import transformer as T
+from repro.train import init_train_state, make_train_step
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    data = SyntheticLM(cfg.vocab_size, seed=seed)
+    item = next(data.batches(b, s, cfg))
+    return {k: jnp.asarray(v) for k, v in item.items()}
+
+
+def test_registry_complete():
+    assert len(ARCHS) == 10
+    kinds = {get_config(a).arch_type for a in ARCHS}
+    assert kinds == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    spec = {
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 10944, 102400),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == spec, (arch, got, spec)
+    assert cfg.source, f"{arch} missing source citation"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_variant_bounds(arch):
+    r = get_config(arch).reduced()
+    assert r.d_model <= 512
+    assert r.num_experts <= 4
+    # ≤ 2 effective layers (hybrid needs one full period)
+    assert r.num_layers <= max(2, 2 * max(1, r.hybrid_attn_every))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = T.init_transformer(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    logits, aux = T.forward(params, cfg, batch["tokens"],
+                            batch.get("prefix"))
+    off = cfg.num_prefix_embeddings if cfg.modality else 0
+    assert logits.shape == (2, 32 + off, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN in logits"
+
+    opt = optim.adamw(1e-3)
+    state = init_train_state(params, opt)
+    step = make_train_step(cfg, opt, donate=False)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert int(state.step) == 1
+    # params actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(state.params)[0]
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode(arch):
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    params = T.init_transformer(jax.random.PRNGKey(0), cfg)
+    b, sp = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, sp), 0,
+                                cfg.vocab_size)
+    prefix = None
+    off = 0
+    if cfg.modality:
+        off = cfg.num_prefix_embeddings
+        prefix = jax.random.normal(jax.random.PRNGKey(2),
+                                   (b, off, cfg.d_model))
+    logits, caches = T.prefill(params, cfg, tokens, prefix,
+                               max_len=sp + off + 4)
+    assert bool(jnp.isfinite(logits).all())
+    for t in range(2):
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        logits, caches = T.decode_step(params, cfg, tok, caches)
+        assert logits.shape == (b, 1, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), f"{arch} step {t}"
+
+
+@pytest.mark.parametrize("arch", sorted(["gemma2-9b", "mamba2-1.3b",
+                                         "zamba2-2.7b"]))
+def test_long_context_ring_cache_decode(arch):
+    """The sub-quadratic archs decode with long_context caches (ring window
+    for gemma2 local layers; O(1) state for SSM)."""
+    cfg = get_config(arch).reduced()
+    params = T.init_transformer(jax.random.PRNGKey(0), cfg)
+    b = 1
+    sp = 96 if cfg.sliding_window else 24   # exceed the reduced window (64)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, sp), 0,
+                                cfg.vocab_size)
+    logits, caches = T.prefill(params, cfg, tokens, max_len=sp + 8,
+                               long_context=True)
+    for _ in range(3):
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        logits, caches = T.decode_step(params, cfg, tok, caches)
+        assert bool(jnp.isfinite(logits).all())
+
+
+def test_gemma2_window_ring_matches_dense_cache():
+    """Ring-buffer decode == dense-cache decode while within the window."""
+    cfg = get_config("gemma2-9b").reduced()
+    params = T.init_transformer(jax.random.PRNGKey(0), cfg)
+    b, sp, n_gen = 1, 16, 4
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, sp + n_gen), 0,
+                                cfg.vocab_size)
+    lo_d, caches_d = T.prefill(params, cfg, tokens[:, :sp],
+                               max_len=sp + n_gen)
+    lo_r, caches_r = T.prefill(params, cfg, tokens[:, :sp],
+                               max_len=sp + n_gen, long_context=True)
+    np.testing.assert_allclose(np.asarray(lo_d), np.asarray(lo_r),
+                               atol=1e-4)
+    for t in range(n_gen):
+        tok = tokens[:, sp + t: sp + t + 1]
+        ld, caches_d = T.decode_step(params, cfg, tok, caches_d)
+        lr, caches_r = T.decode_step(params, cfg, tok, caches_r)
+        np.testing.assert_allclose(np.asarray(ld), np.asarray(lr),
+                                   atol=1e-4)
+
+
+def test_param_counts_in_expected_range():
+    """Sanity: param_count should land near the nameplate sizes."""
+    expect = {
+        "minitron-8b": (6e9, 10.5e9),
+        "qwen1.5-4b": (3e9, 5e9),
+        "gemma2-9b": (7.5e9, 11e9),
+        "internlm2-1.8b": (1.4e9, 2.3e9),
+        "mamba2-1.3b": (0.9e9, 1.7e9),
+        "deepseek-v2-lite-16b": (12e9, 18e9),
+        "zamba2-2.7b": (2.0e9, 3.4e9),
+        "granite-moe-1b-a400m": (0.8e9, 1.7e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+    # MoE active params well below total
+    ds = get_config("deepseek-v2-lite-16b")
+    assert ds.active_param_count() < 0.35 * ds.param_count()

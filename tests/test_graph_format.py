@@ -1,0 +1,128 @@
+"""Graph substrate: formats, normalization, chunking, partitioners."""
+import numpy as np
+import pytest
+
+from repro.graph import (build_graph, chunk_graph, block_sparse,
+                         sbm_power_law, barabasi_albert, chunk_partition,
+                         hash_partition, greedy_edge_cut_partition,
+                         workload_stats, tensor_parallel_stats, halo_plan)
+
+
+def small_graph(n=50, seed=0):
+    rng = np.random.default_rng(seed)
+    e = 6 * n
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    return build_graph(src, dst, n)
+
+
+def test_build_graph_sorted_and_self_loops():
+    g = small_graph()
+    assert np.all(np.diff(g.dst) >= 0)
+    # self loops present
+    self_edges = g.src == g.dst
+    assert self_edges.sum() == g.n
+    # CSR consistency
+    assert g.indptr[-1] == g.e
+    for v in [0, 7, 23, g.n - 1]:
+        seg = g.dst[g.indptr[v]:g.indptr[v + 1]]
+        assert np.all(seg == v)
+
+
+def test_sym_normalization_weights():
+    g = small_graph()
+    deg_in = g.in_degrees().astype(np.float64)
+    deg_out = g.out_degrees().astype(np.float64)
+    expect = 1.0 / np.sqrt(deg_in[g.dst] * deg_out[g.src])
+    np.testing.assert_allclose(g.weight, expect, rtol=1e-6)
+
+
+def test_mean_normalization_rows_sum_to_one():
+    rng = np.random.default_rng(1)
+    n = 40
+    src = rng.integers(0, n, 200).astype(np.int32)
+    dst = rng.integers(0, n, 200).astype(np.int32)
+    g = build_graph(src, dst, n, normalization="mean")
+    a = g.dense_adjacency()
+    np.testing.assert_allclose(a.sum(axis=1), 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n_chunks", [1, 2, 3, 5])
+def test_chunk_graph_covers_all_edges(n_chunks):
+    g = small_graph(60, seed=2)
+    cg = chunk_graph(g, n_chunks)
+    # reconstruct dense adjacency from chunks
+    a = np.zeros((cg.n_chunks * cg.chunk_size, g.n), np.float32)
+    for c in range(cg.n_chunks):
+        lo = c * cg.chunk_size
+        for s, d, w in zip(cg.src[c], cg.dst_local[c], cg.weight[c]):
+            if d < cg.chunk_size and w != 0:
+                a[lo + d, s] += w
+    np.testing.assert_allclose(a[: g.n], g.dense_adjacency(), rtol=1e-6)
+
+
+def test_chunk_new_src_dedup_union_and_disjoint():
+    g = small_graph(80, seed=3)
+    cg = chunk_graph(g, 4)
+    seen = set()
+    for c in range(cg.n_chunks):
+        fresh = cg.new_src[c][: cg.new_src_count[c]].tolist()
+        assert not (set(fresh) & seen), "src communicated twice"
+        seen |= set(fresh)
+        # every src used by this chunk was communicated by some chunk <= c
+        used = {int(s) for s, w in zip(cg.src[c], cg.weight[c]) if w != 0}
+        assert used <= seen
+    all_srcs = set(g.src.tolist())
+    assert seen == all_srcs
+
+
+@pytest.mark.parametrize("bs", [16, 32])
+def test_block_sparse_equals_dense(bs):
+    g = small_graph(70, seed=4)
+    bsg = block_sparse(g, bs=bs)
+    dense = np.zeros((bsg.n_padded, bsg.n_padded), np.float32)
+    for k in range(bsg.nnzb):
+        bi, bj = bsg.block_rows[k], bsg.block_cols[k]
+        dense[bi * bs:(bi + 1) * bs, bj * bs:(bj + 1) * bs] += bsg.blocks[k]
+    ref = g.dense_adjacency()
+    np.testing.assert_allclose(dense[: g.n, : g.n], ref, rtol=1e-6)
+    # row_first flags: exactly one per distinct destination block row
+    assert bsg.row_first.sum() == len(np.unique(bsg.block_rows))
+    assert np.all(np.diff(bsg.block_rows) >= 0)
+
+
+def test_partitioners_and_stats():
+    data = barabasi_albert(n=800, m=6, seed=0)
+    g = data.graph
+    for part in (chunk_partition(g, 4), hash_partition(g, 4),
+                 greedy_edge_cut_partition(g, 4, passes=1)):
+        assert part.owner.shape == (g.n,)
+        assert part.owner.min() >= 0 and part.owner.max() < 4
+        st = workload_stats(g, part)
+        assert st.edges.sum() == g.e
+        assert st.compute_imbalance >= 1.0
+    # TP stats: perfectly balanced by construction
+    st = tensor_parallel_stats(g, 4, d=64)
+    assert st.compute_imbalance == 1.0 and st.comm_imbalance == 1.0
+    # power-law chunk partitioning should show imbalance > TP's 1.0
+    st_chunk = workload_stats(g, chunk_partition(g, 4))
+    assert st_chunk.compute_imbalance > 1.0
+
+
+def test_halo_plan_consistency():
+    data = sbm_power_law(n=200, seed=1)
+    g = data.graph
+    part = chunk_partition(g, 4)
+    plan = halo_plan(g, part)
+    # every remote src of worker i appears exactly once in the recv plan
+    for i in range(4):
+        lo, hi = part.bounds[i], part.bounds[i + 1]
+        e_lo, e_hi = g.indptr[lo], g.indptr[hi]
+        s = g.src[e_lo:e_hi]
+        remote = np.unique(s[(s < lo) | (s >= hi)])
+        planned = plan.send_idx[:, i][plan.send_idx[:, i] >= 0]
+        assert set(planned.tolist()) == set(remote.tolist())
+        # owners actually own what they send
+        for j in range(4):
+            rows = plan.send_idx[j, i][plan.send_idx[j, i] >= 0]
+            assert np.all(part.owner[rows] == j)

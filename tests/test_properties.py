@@ -1,0 +1,246 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+Each property is a system invariant the design relies on:
+  * layout round-trips (the paper's gather/split must be lossless)
+  * online-softmax streaming == monolithic softmax (flash/ring kernels)
+  * blockwise/flash attention == dense oracle under arbitrary raggedness
+  * chunked aggregation == monolithic (chunk scheduling §4.2)
+  * graph normalization spectral bound (convergence theorem §4.1.3)
+  * MoE dispatch conservation (combine weights, dropless totals)
+  * loss invariants (shift-invariance of the vocab-sharded lse form)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+SET = dict(max_examples=15, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# gather/split layout round-trip (single-host simulation of the a2a pair)
+# ---------------------------------------------------------------------------
+
+def _sim_split(vs, n):
+    """Dense simulation of ``core.tp.split`` (tiled a2a, split_axis=1,
+    concat_axis=0): worker j ends with h[:, j·d/n:(j+1)·d/n]."""
+    d = vs.shape[-1]
+    return jnp.stack([
+        jnp.concatenate([vs[i][:, j * (d // n):(j + 1) * (d // n)]
+                         for i in range(n)], axis=0) for j in range(n)])
+
+
+def _sim_gather(ds, n):
+    """Dense simulation of ``core.tp.gather`` (tiled a2a, split_axis=0,
+    concat_axis=1): worker i ends with h[i·v/n:(i+1)·v/n, :]."""
+    v = ds.shape[1]
+    return jnp.stack([
+        jnp.concatenate([ds[j][i * (v // n):(i + 1) * (v // n), :]
+                         for j in range(n)], axis=1) for i in range(n)])
+
+
+@settings(**SET)
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(1, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_gather_split_roundtrip(n, v_mult, d_mult, seed):
+    """gather ∘ split == identity on vertex-sharded layouts, and split
+    lands every worker on its exact feature slice (paper §3.1).  The real
+    collectives run in tests/dist_progs; this pins the index math."""
+    v, d = n * v_mult, n * d_mult
+    h = jax.random.normal(jax.random.PRNGKey(seed % 2**31), (v, d))
+    vs = h.reshape(n, v // n, d)            # vertex-sharded: worker i rows
+    ds = _sim_split(vs, n)
+    for j in range(n):                      # dim-sharded: worker j cols
+        np.testing.assert_array_equal(
+            np.asarray(ds[j]),
+            np.asarray(h[:, j * (d // n):(j + 1) * (d // n)]))
+    back = _sim_gather(ds, n)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(vs))
+
+
+# ---------------------------------------------------------------------------
+# online softmax == monolithic (the flash/ring accumulation core)
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(st.integers(1, 5), st.integers(1, 12), st.integers(1, 7),
+       st.integers(0, 2 ** 31 - 1))
+def test_online_softmax_streaming(chunks, rows, cols_per_chunk, seed):
+    key = jax.random.PRNGKey(seed % 2**31)
+    s = jax.random.normal(key, (rows, chunks * cols_per_chunk)) * 10
+    v = jax.random.normal(jax.random.split(key)[0],
+                          (chunks * cols_per_chunk, 4))
+    want = jax.nn.softmax(s, axis=-1) @ v
+
+    m = jnp.full((rows,), -jnp.inf)
+    l = jnp.zeros((rows,))
+    acc = jnp.zeros((rows, 4))
+    for c in range(chunks):
+        sc = s[:, c * cols_per_chunk:(c + 1) * cols_per_chunk]
+        vc = v[c * cols_per_chunk:(c + 1) * cols_per_chunk]
+        m_new = jnp.maximum(m, sc.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[:, None])
+        l = l * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ vc
+        m = m_new
+    got = acc / l[:, None]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# blockwise + flash kernel == dense oracle under hypothesis-drawn shapes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(8, 70), st.integers(1, 3), st.integers(0, 1),
+       st.sampled_from([8, 16, 24]), st.integers(0, 2 ** 31 - 1))
+def test_blockwise_attention_matches_dense(seq, g, windowed, block, seed):
+    from repro.nn.attention import attention_blockwise, attention_core, \
+        _causal_mask, _window_mask
+    hkv, hd = 2, 8
+    hq = hkv * g
+    key = jax.random.PRNGKey(seed % 2**31)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, seq, hq, hd))
+    k = jax.random.normal(ks[1], (1, seq, hkv, hd))
+    v = jax.random.normal(ks[2], (1, seq, hkv, hd))
+    window = 16 if windowed else None
+    got = attention_blockwise(q, k, v, causal=True, window=window,
+                              block_q=block, block_kv=block)
+    mask = (_window_mask(seq, seq, 0, window) if window
+            else _causal_mask(seq, seq, 0))[None]
+    want = attention_core(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(8, 48), st.integers(8, 48), st.integers(1, 4),
+       st.sampled_from([8, 16]), st.integers(0, 2 ** 31 - 1))
+def test_flash_kernel_matches_ref(sq, skv, g, block, seed):
+    from repro.kernels.flash_attn import flash_attention
+    from repro.kernels.flash_attn.ref import flash_ref
+    hkv, hd = 2, 8
+    key = jax.random.PRNGKey(seed % 2**31)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, sq, hkv * g, hd))
+    k = jax.random.normal(ks[1], (1, skv, hkv, hd))
+    v = jax.random.normal(ks[2], (1, skv, hkv, hd))
+    got = flash_attention(q, k, v, causal=False, block_q=block,
+                          block_kv=block, interpret=True)
+    want = flash_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                     v.transpose(0, 2, 1, 3), causal=False
+                     ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked aggregation == monolithic (memory-efficient scheduling §4.2)
+# ---------------------------------------------------------------------------
+
+def _random_edges(n, deg, rng):
+    e = max(1, n * deg)
+    return (rng.integers(0, n, e, dtype=np.int32),
+            rng.integers(0, n, e, dtype=np.int32))
+
+
+@settings(**SET)
+@given(st.integers(6, 60), st.integers(1, 6), st.integers(2, 10),
+       st.integers(0, 2 ** 31 - 1))
+def test_chunked_aggregation_matches(n, n_chunks, deg, seed):
+    from repro.graph.format import build_graph, chunk_graph
+    from repro.gnn import layers as L
+    rng = np.random.default_rng(seed % 2**31)
+    src, dst = _random_edges(n, deg, rng)
+    g = build_graph(src, dst, n)
+    h = jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)
+    mono = L.aggregate(L.edge_list_dev(g), h)
+    chunked = L.aggregate_chunked(
+        L.chunked_dev(chunk_graph(g, min(n_chunks, n))), h)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(mono),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Â spectral bound — the convergence theorem's premise (§4.1.3)
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(st.integers(2, 40), st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_sym_norm_adjacency_spectral_radius_le_1(n, deg, seed):
+    from repro.graph.format import build_graph
+    rng = np.random.default_rng(seed % 2**31)
+    src, dst = _random_edges(n, deg, rng)
+    g = build_graph(src, dst, n)
+    a = np.asarray(g.dense_adjacency())
+    eig = np.max(np.abs(np.linalg.eigvals(a)))
+    assert eig <= 1.0 + 1e-5, eig
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch conservation
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(4, 40),
+       st.integers(0, 2 ** 31 - 1))
+def test_moe_dropless_conserves_tokens(e_pow, k, tokens, seed):
+    """Dropless MoE: every token's output = Σ_k p_k · expert_k(token) —
+    identical to the dense per-token oracle."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.nn import moe as moe_lib
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    e = 2 ** e_pow
+    cfg = dataclasses.replace(cfg, num_experts=e,
+                              num_experts_per_tok=min(k, e),
+                              num_shared_experts=0, d_model=16, moe_d_ff=8)
+    key = jax.random.PRNGKey(seed % 2**31)
+    p = moe_lib.init_moe(key, cfg)
+    p = jax.tree.map(lambda l: l.value if hasattr(l, "value") else l, p,
+                     is_leaf=lambda l: hasattr(l, "value"))
+    x = jax.random.normal(jax.random.split(key)[0], (1, tokens, 16))
+    y, _ = moe_lib.moe_apply(p, cfg, x, dropless=True)
+
+    # dense oracle
+    xf = x.reshape(tokens, 16)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    act = jax.nn.silu
+    want = jnp.zeros_like(xf)
+    for t in range(tokens):
+        acc = jnp.zeros((16,))
+        for j in range(cfg.num_experts_per_tok):
+            eid = top_e[t, j]
+            h = act(xf[t] @ p["gate"][eid]) * (xf[t] @ p["up"][eid])
+            acc += top_p[t, j] * (h @ p["down"][eid])
+        want = want.at[t].set(acc)
+    np.testing.assert_allclose(np.asarray(y.reshape(tokens, 16)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# loss: vocab-reduction form == naive cross-entropy, shift-invariant
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(st.integers(2, 32), st.integers(3, 50), st.floats(-50, 50),
+       st.integers(0, 2 ** 31 - 1))
+def test_lm_loss_matches_naive_and_shift_invariant(t, v, shift, seed):
+    from repro.models.transformer import lm_loss
+    key = jax.random.PRNGKey(seed % 2**31)
+    logits = jax.random.normal(key, (1, t, v)) * 5
+    targets = jax.random.randint(jax.random.split(key)[0], (1, t), 0, v)
+    got = lm_loss(logits, targets)
+    probs = jax.nn.log_softmax(logits, -1)
+    want = -jnp.take_along_axis(probs, targets[..., None], -1).mean()
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5,
+                               atol=1e-5)
+    got_shifted = lm_loss(logits + shift, targets)
+    np.testing.assert_allclose(float(got_shifted), float(want), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,95 @@
+"""TP engine semantics on the single-device mesh (N=1 degenerate collectives);
+true multi-worker behaviour is covered by test_distributed.py subprocesses."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import optim
+from repro.core import decouple as D
+from repro.core import tp
+from repro.gnn import models as M
+from repro.graph import sbm_power_law
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = sbm_power_law(n=500, num_classes=5, feat_dim=24, avg_degree=8,
+                         seed=0)
+    bundle = D.prepare_bundle(data, n_workers=1, n_chunks=3)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("model",))
+    return data, bundle, mesh
+
+
+def test_split_gather_roundtrip(setup):
+    _, _, mesh = setup
+    h = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    f = jax.shard_map(lambda x: tp.gather(tp.split(x)), mesh=mesh,
+                      in_specs=P("model", None), out_specs=P("model", None),
+                      check_vma=False)
+    np.testing.assert_array_equal(f(h), h)
+
+
+@pytest.mark.parametrize("model", ["gcn", "gat"])
+@pytest.mark.parametrize("pipelined", [False, True])
+def test_tp_forward_matches_reference(setup, model, pipelined):
+    data, bundle, mesh = setup
+    cfg = D.padded_gnn_config(data, bundle, model=model, hidden_dim=32,
+                              num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    g = bundle.graph
+    ref = M.decoupled_forward(params, cfg, g.edges, bundle.features)
+    f = jax.shard_map(
+        lambda p, gr, x: D.tp_decoupled_forward(p, cfg, gr, x,
+                                                pipelined=pipelined),
+        mesh=mesh, in_specs=(P(), P(), P("model", None)),
+        out_specs=P("model", None), check_vma=False)
+    out = f(params, g, bundle.features)
+    np.testing.assert_allclose(out[: data.graph.n], ref[: data.graph.n],
+                               atol=1e-4)
+
+
+def test_naive_tp_matches_coupled_reference(setup):
+    data, bundle, mesh = setup
+    cfg = D.padded_gnn_config(data, bundle, model="gcn", hidden_dim=32,
+                              num_layers=2)
+    cfg_ref = M.GNNConfig(**{**cfg.__dict__, "decoupled": False})
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    g = bundle.graph
+    ref = M.coupled_forward(params, cfg_ref, g.edges, bundle.features)
+    f = jax.shard_map(
+        lambda p, gr, x: D.tp_naive_forward(p, cfg, gr, x),
+        mesh=mesh, in_specs=(P(), P(), P("model", None)),
+        out_specs=P("model", None), check_vma=False)
+    out = f(params, g, bundle.features)
+    np.testing.assert_allclose(out[: data.graph.n], ref[: data.graph.n],
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["decoupled", "decoupled_pipelined",
+                                  "naive"])
+def test_tp_training_converges(setup, mode):
+    data, bundle, mesh = setup
+    cfg = D.padded_gnn_config(data, bundle, model="gcn", hidden_dim=32,
+                              num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = optim.adamw(1e-2)
+    step, ev = D.make_tp_train_fns(cfg, bundle, mesh, opt, mode=mode)
+    o = opt.init(params)
+    p = params
+    losses = []
+    for _ in range(25):
+        p, o, loss = step(p, o)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5
+    _, acc = ev(p, "test")
+    assert float(acc) > 0.8
+
+
+def test_padding_divisibility_properties():
+    assert tp.padded_size(10, 4) == 12
+    assert tp.padded_size(8, 4) == 8
+    x = jnp.ones((10, 3))
+    assert tp.pad_to_multiple(x, 4, axis=0).shape == (12, 3)
+    assert tp.pad_to_multiple(x, 3, axis=1).shape == (10, 3)
