@@ -33,8 +33,6 @@ def main():
     args = ap.parse_args()
 
     import jax
-    import numpy as np
-    from jax.sharding import Mesh
 
     from repro import optim
     from repro.core import decouple as D
@@ -42,9 +40,10 @@ def main():
     from repro.gnn import models as M
     from repro.graph import barabasi_albert, sbm_power_law
     from repro.launch.roofline import hlo_census
+    from repro.runtime import tp_mesh
 
     k = len(jax.devices())
-    mesh = Mesh(np.array(jax.devices()), ("model",))
+    mesh = tp_mesh(k)
     gen = sbm_power_law if args.graph == "sbm" else barabasi_albert
     kw = dict(n=args.n, num_classes=args.classes, feat_dim=args.feat_dim,
               seed=7)

@@ -5,7 +5,7 @@ Two measurements:
   * analytic bytes/epoch from the paper's formulas instantiated on the real
     graph + halo plan (what Fig. 10(b) plots), and
   * measured collective wire bytes from the compiled 8-worker HLO (census
-    over the actual shard_map programs).
+    over the actual runtime-engine sharded programs).
 """
 from __future__ import annotations
 

@@ -7,13 +7,12 @@ degenerate); for a real multi-worker run:
         PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import numpy as np
-from jax.sharding import Mesh
 
 from repro import optim
 from repro.core import decouple as D
 from repro.gnn import models as M
 from repro.graph import sbm_power_law
+from repro.runtime import tp_mesh
 
 
 def main():
@@ -35,7 +34,7 @@ def main():
                               num_layers=2)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     opt = optim.adamw(1e-2)
-    mesh = Mesh(np.array(jax.devices()), ("model",))
+    mesh = tp_mesh(n_workers)
     train_step, evaluate = D.make_tp_train_fns(
         cfg, bundle, mesh, opt, mode="decoupled_pipelined")
 

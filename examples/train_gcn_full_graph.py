@@ -19,12 +19,12 @@ import time  # noqa: E402
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import Mesh  # noqa: E402
 
 from repro import checkpoint, optim  # noqa: E402
 from repro.core import decouple as D  # noqa: E402
 from repro.gnn import models as M  # noqa: E402
 from repro.graph import sbm_power_law  # noqa: E402
+from repro.runtime import tp_mesh  # noqa: E402
 
 
 def main():
@@ -58,7 +58,7 @@ def main():
                               num_layers=args.layers)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     opt = optim.adamw(args.lr, weight_decay=5e-4)
-    mesh = Mesh(np.array(jax.devices()), ("model",))
+    mesh = tp_mesh(k)
     train_step, evaluate = D.make_tp_train_fns(cfg, bundle, mesh, opt,
                                                mode=args.mode)
     opt_state = opt.init(params)

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one invocation (the ROADMAP's tier-1 command,
+# reproducible):
+#
+#   scripts/ci.sh            # fast lane, then the 8-device subprocess lane
+#   scripts/ci.sh --fast     # fast lane only (-m "not slow")
+#
+# The main pytest process stays on the single real device.  The "slow"
+# tests launch child processes via tests/conftest.py::run_dist_prog, which
+# pins XLA_FLAGS=--xla_force_host_platform_device_count=8 (the single
+# definition lives in conftest.DIST_XLA_FLAGS; the dist_progs assert on
+# it) so the runtime-engine collectives execute across 8 real device
+# buffers.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q -m "not slow"
+
+if [[ "${1:-}" != "--fast" ]]; then
+    python -m pytest -q -m slow
+fi

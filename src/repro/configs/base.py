@@ -78,7 +78,7 @@ class ArchConfig:
     attn_block_q: int = 512
     attn_block_kv: int = 1024
     moe_impl: str = "gather"           # gather | expert_parallel (a2a)
-    explicit_a2a: bool = False         # shard_map gather/split for mixing
+    explicit_a2a: bool = False         # runtime.smap gather/split for mixing
 
     # citation for the exact numbers above
     source: str = ""

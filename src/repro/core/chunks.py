@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.format import ChunkedGraph
+from ..runtime import collectives as C
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -83,7 +84,7 @@ def build_chunk_comm_plan(cg: ChunkedGraph, n_workers: int,
 
 
 # ---------------------------------------------------------------------------
-# Device-side chunk collectives (inside shard_map)
+# Device-side chunk collectives (inside a runtime.engine body)
 # ---------------------------------------------------------------------------
 
 def chunk_split_step(h_local: jax.Array, rows_c: jax.Array,
@@ -94,8 +95,8 @@ def chunk_split_step(h_local: jax.Array, rows_c: jax.Array,
     rows_c  : (N, M)     global ids; rows_c[i] are owned by worker i (pad -1)
     zbuf    : (V, D/N)   dim-sharded destination buffer (carried by the scan)
     """
-    n = jax.lax.axis_size(axis)
-    i = jax.lax.axis_index(axis)
+    n = C.axis_size(axis)
+    i = C.axis_index(axis)
     shard = zbuf.shape[0] // n
     ds = zbuf.shape[1]
     mine = rows_c[i]                              # (M,) rows I own
@@ -103,7 +104,7 @@ def chunk_split_step(h_local: jax.Array, rows_c: jax.Array,
     rows = jnp.take(h_local, local, axis=0, mode="clip")
     rows = jnp.where((mine >= 0)[:, None], rows, 0.0)     # (M, D)
     send = rows.reshape(rows.shape[0], n, ds).transpose(1, 0, 2)  # (N, M, Ds)
-    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    recv = C.all_to_all(send, axis, split_axis=0, concat_axis=0)
     # recv[j] = slices (this worker's dims) of rows owned by worker j
     ids = rows_c.reshape(-1)
     ids = jnp.where(ids >= 0, ids, zbuf.shape[0])          # pad → dropped
@@ -119,8 +120,8 @@ def chunk_gather_step(z_chunk: jax.Array, rows_c: jax.Array,
     rows_c  : (N, M)             global dst ids grouped by owner (pad -1)
     h_out   : (V/N, D)           vertex-sharded output buffer
     """
-    n = jax.lax.axis_size(axis)
-    i = jax.lax.axis_index(axis)
+    n = C.axis_size(axis)
+    i = C.axis_index(axis)
     shard = h_out.shape[0]          # h_out is already the per-device shard
     ds = z_chunk.shape[1]
     # send[j] = my dim-slice of the rows worker j owns
@@ -128,7 +129,7 @@ def chunk_gather_step(z_chunk: jax.Array, rows_c: jax.Array,
     send = jnp.take(z_chunk, in_chunk.reshape(-1), axis=0, mode="clip")
     send = jnp.where((rows_c >= 0).reshape(-1, 1), send, 0.0)
     send = send.reshape(n, rows_c.shape[1], ds)
-    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    recv = C.all_to_all(send, axis, split_axis=0, concat_axis=0)
     # recv[j] = worker j's dim-slice of MY rows → concat along features
     full = recv.transpose(1, 0, 2).reshape(rows_c.shape[1], n * ds)  # (M, D)
     mine = rows_c[i]

@@ -16,7 +16,10 @@ Three execution modes:
   * ``naive``                — coupled layers with gather/split per layer
                                (paper's "TP" baseline, Figs. 8/10)
 
-Everything runs inside ``shard_map`` over one mesh axis; backward passes are
+Everything enters sharded execution through :func:`repro.runtime.engine`
+(the repo's version-portable shard_map wrapper) over one mesh axis; the
+``mesh`` argument of :func:`make_tp_train_fns` may be a
+:class:`repro.runtime.TPMesh` or a raw jax Mesh.  Backward passes are
 derived by autodiff, which emits exactly the mirrored split/gather
 collectives of Algorithm 1's lines 15–24.
 """
@@ -35,6 +38,8 @@ from ..gnn import layers as L
 from ..gnn import models as M
 from ..graph import format as gf
 from ..graph.synthetic import GraphData
+from ..runtime import collectives as C
+from ..runtime import engine
 from . import chunks as CH
 from . import tp
 
@@ -174,7 +179,7 @@ def _propagate_plain(cg: L.ChunkedDev, z, w_chunk, rounds: int):
 def _round_split_pipelined(h_local, cg: L.ChunkedDev, plan: CH.ChunkCommPlan,
                            w_chunk, axis: str):
     """First propagation round with per-chunk split interleaved (§4.2.2)."""
-    n = jax.lax.axis_size(axis)
+    n = C.axis_size(axis)
     ds = h_local.shape[1] // n
     zbuf0 = jnp.zeros((plan.n_padded, ds), h_local.dtype)
 
@@ -192,7 +197,7 @@ def _round_split_pipelined(h_local, cg: L.ChunkedDev, plan: CH.ChunkCommPlan,
 def _round_gather_pipelined(z, cg: L.ChunkedDev, plan: CH.ChunkCommPlan,
                             w_chunk, d_full: int, axis: str):
     """Last propagation round with per-chunk gather interleaved."""
-    n = jax.lax.axis_size(axis)
+    n = C.axis_size(axis)
     h_out0 = jnp.zeros((plan.n_padded // n, d_full), z.dtype)
     starts = jnp.arange(plan.gather_rows.shape[0], dtype=jnp.int32) \
         * cg.chunk_size
@@ -213,7 +218,7 @@ def _round_split_gather_pipelined(h_local, cg: L.ChunkedDev,
                                   plan: CH.ChunkCommPlan, w_chunk,
                                   d_full: int, axis: str):
     """Single-round case: split, aggregate, gather all chunk-interleaved."""
-    n = jax.lax.axis_size(axis)
+    n = C.axis_size(axis)
     ds = h_local.shape[1] // n
     zbuf0 = jnp.zeros((plan.n_padded, ds), h_local.dtype)
     h_out0 = jnp.zeros((plan.n_padded // n, d_full), h_local.dtype)
@@ -248,8 +253,8 @@ def _edge_weights_tp(params, cfg: M.GNNConfig, edges: L.EdgeListDev,
     all-gather of two (V,) vectors — O(V) communication, not O(E·D)."""
     if cfg.model == "gat":
         p = params["layers"][-1]
-        sl = jax.lax.all_gather(h_local @ p["a_l"], axis, tiled=True)
-        sr = jax.lax.all_gather(h_local @ p["a_r"], axis, tiled=True)
+        sl = C.all_gather(h_local @ p["a_l"], axis)
+        sr = C.all_gather(h_local @ p["a_r"], axis)
         e = jax.nn.leaky_relu(sl[edges.src] + sr[edges.dst], 0.2)
         alpha = L.segment_softmax(e, edges.dst, sl.shape[0])
         return cfg.gamma * alpha
@@ -295,8 +300,8 @@ def tp_naive_forward(params, cfg: M.GNNConfig, graph: TPGraph,
         if cfg.model == "gat":
             p = params["layers"][i]
             hw = h @ p["w"]
-            sl = jax.lax.all_gather(hw @ p["a_l"], axis, tiled=True)
-            sr = jax.lax.all_gather(hw @ p["a_r"], axis, tiled=True)
+            sl = C.all_gather(hw @ p["a_l"], axis)
+            sr = C.all_gather(hw @ p["a_r"], axis)
             e = jax.nn.leaky_relu(sl[graph.edges.src] + sr[graph.edges.dst],
                                   0.2)
             alpha = L.segment_softmax(e, graph.edges.dst, sl.shape[0])
@@ -352,17 +357,16 @@ def make_tp_train_fns(cfg: M.GNNConfig, bundle: TPBundle, mesh,
         logits = fwd(params, cfg, graph, x_local, axis=axis)
         loss_sum, correct, cnt = _masked_loss_and_acc(
             logits, labels_local, mask_local, graph.num_classes)
-        loss_sum = jax.lax.psum(loss_sum, axis)
-        correct = jax.lax.psum(correct, axis)
-        cnt = jax.lax.psum(cnt, axis)
+        loss_sum = C.psum(loss_sum, axis)
+        correct = C.psum(correct, axis)
+        cnt = C.psum(cnt, axis)
         return loss_sum / jnp.maximum(cnt, 1.0), correct / jnp.maximum(cnt,
                                                                        1.0)
 
-    smapped = jax.shard_map(
+    smapped = engine(
         shard_loss, mesh=mesh,
         in_specs=(P(), P(), P(axis, None), P(axis), P(axis)),
-        out_specs=(P(), P()),
-        check_vma=False)
+        out_specs=(P(), P()))
 
     def loss_fn(params, mask):
         loss, _ = smapped(params, bundle.graph, bundle.features,

@@ -11,9 +11,12 @@ tensor-parallel axis:
 ``split``  : vertex-sharded → dim-sharded   (paper's "split")
 ``gather`` : dim-sharded  → vertex-sharded  (paper's "gather")
 
-Both are single ``all_to_all`` collectives moving ``V·D/N`` elements per
+Both are single all-to-all collectives moving ``V·D/N`` elements per
 device regardless of graph topology — the paper's load-balance argument.
-These functions must be called inside ``shard_map`` with ``axis`` bound.
+These functions must run inside a body entered via
+:func:`repro.runtime.engine` (or :func:`repro.runtime.smap`) with ``axis``
+bound on the mesh; the collectives themselves come from
+:mod:`repro.runtime.collectives`, the repo's single communication layer.
 
 On TPU the all-to-all runs over ICI instead of NCCL/Ethernet; under ``pjit``
 the same transition can be expressed as a sharding constraint
@@ -25,24 +28,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..runtime import collectives as C
+from ..runtime.mesh import padded_size  # noqa: F401  (canonical home)
+
 
 def split(h: jax.Array, axis: str = "model") -> jax.Array:
     """vertex-sharded (V/N, D) → dim-sharded (V, D/N)."""
-    return jax.lax.all_to_all(h, axis, split_axis=1, concat_axis=0,
-                              tiled=True)
+    return C.all_to_all(h, axis, split_axis=1, concat_axis=0, tiled=True)
 
 
 def gather(z: jax.Array, axis: str = "model") -> jax.Array:
     """dim-sharded (V, D/N) → vertex-sharded (V/N, D)."""
-    return jax.lax.all_to_all(z, axis, split_axis=0, concat_axis=1,
-                              tiled=True)
+    return C.all_to_all(z, axis, split_axis=0, concat_axis=1, tiled=True)
 
 
 def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0) -> jax.Array:
     """Pad ``axis`` up to a multiple (vertex count and feature dim must both
     divide by the TP degree for rectangular all-to-alls)."""
     size = x.shape[axis]
-    target = -(-size // multiple) * multiple
+    target = padded_size(size, multiple)
     if target == size:
         return x
     pad = [(0, 0)] * x.ndim
@@ -50,13 +54,9 @@ def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0) -> jax.Array:
     return jnp.pad(x, pad)
 
 
-def padded_size(size: int, multiple: int) -> int:
-    return -(-size // multiple) * multiple
-
-
 def local_slice(n: int, axis: str = "model") -> tuple[jax.Array, jax.Array]:
     """(start, size) of this device's vertex range in vertex-sharded layout."""
-    idx = jax.lax.axis_index(axis)
-    num = jax.lax.axis_size(axis)
+    idx = C.axis_index(axis)
+    num = C.axis_size(axis)
     size = n // num
     return idx * size, size

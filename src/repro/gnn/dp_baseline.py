@@ -10,7 +10,8 @@ tensor parallelism.
 The halo exchange is a static, rectangular all-to-all built from
 :func:`repro.graph.partition.halo_plan`; per-worker edge lists are padded to
 the max across workers and sharded on the worker axis, so the whole model
-runs inside one ``shard_map``.
+runs inside one :func:`repro.runtime.engine` body (the repo's
+version-portable shard_map entry point).
 """
 from __future__ import annotations
 
@@ -25,6 +26,8 @@ from jax.sharding import PartitionSpec as P
 from ..graph import partition as gp
 from ..graph.format import Graph
 from ..graph.synthetic import GraphData
+from ..runtime import collectives as C
+from ..runtime import engine
 from . import models as M
 
 
@@ -119,18 +122,18 @@ def prepare_dp_bundle(data: GraphData, k: int,
 
 
 # ---------------------------------------------------------------------------
-# Device-side halo exchange + aggregation (inside shard_map)
+# Device-side halo exchange + aggregation (inside a runtime.engine body)
 # ---------------------------------------------------------------------------
 
 def halo_exchange(h_local: jax.Array, g: DPGraph, axis: str) -> jax.Array:
     """DepComm: fetch remote in-neighbor rows.  Returns (halo_size+1, D)."""
-    i = jax.lax.axis_index(axis)
+    i = C.axis_index(axis)
     send_rows = g.send_idx_local[i]                      # (k, m) local ids
     take_ids = jnp.where(send_rows >= 0, send_rows, 0)
     send = jnp.take(h_local, take_ids.reshape(-1), axis=0, mode="clip")
     send = jnp.where((send_rows >= 0).reshape(-1, 1), send, 0.0)
     send = send.reshape(g.k, g.m, h_local.shape[1])
-    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    recv = C.all_to_all(send, axis, split_axis=0, concat_axis=0)
     # recv[j] = rows worker j sent me; land them in my halo buffer
     pos = g.recv_pos[i].reshape(-1)                      # (k*m,)
     halo = jnp.zeros((g.halo_size + 1, h_local.shape[1]), h_local.dtype)
@@ -140,7 +143,7 @@ def halo_exchange(h_local: jax.Array, g: DPGraph, axis: str) -> jax.Array:
 def dp_aggregate(h_local: jax.Array, g: DPGraph, axis: str,
                  edge_weight: jax.Array | None = None) -> jax.Array:
     """One full aggregation round: halo exchange + local weighted SpMM."""
-    i = jax.lax.axis_index(axis)
+    i = C.axis_index(axis)
     halo = halo_exchange(h_local, g, axis)[:-1]          # drop pad slot
     h_ext = jnp.concatenate([h_local, halo], axis=0)
     w = g.weight[i] if edge_weight is None else edge_weight
@@ -179,22 +182,19 @@ def make_dp_train_fns(cfg: M.GNNConfig, bundle: DPBundle, mesh,
             logits = logits.at[:, bundle.num_classes:].add(-1e9)
         logp = jax.nn.log_softmax(logits)
         nll = -jnp.take_along_axis(logp, labels_local[:, None], axis=1)[:, 0]
-        mask = mask_local * g.valid_rows[jax.lax.axis_index(axis)]
-        loss_sum = jax.lax.psum(jnp.sum(nll * mask), axis)
+        mask = mask_local * g.valid_rows[C.axis_index(axis)]
+        loss_sum = C.psum(jnp.sum(nll * mask), axis)
         pred = jnp.argmax(logits, axis=-1)
-        correct = jax.lax.psum(
+        correct = C.psum(
             jnp.sum((pred == labels_local).astype(jnp.float32) * mask), axis)
-        cnt = jax.lax.psum(jnp.sum(mask), axis)
+        cnt = C.psum(jnp.sum(mask), axis)
         return loss_sum / jnp.maximum(cnt, 1.0), \
             correct / jnp.maximum(cnt, 1.0)
 
-    smapped = jax.shard_map(
+    smapped = engine(
         shard_loss, mesh=mesh,
         in_specs=(P(), P(), P(axis, None, None), P(axis, None), P(axis, None)),
-        out_specs=(P(), P()), check_vma=False)
-
-    def _squeeze(x):  # (k, n_local, ...) sharded on axis → per-device (n,...)
-        return x
+        out_specs=(P(), P()))
 
     def loss_fn(params, mask):
         loss, _ = smapped(params, bundle.graph, bundle.features,

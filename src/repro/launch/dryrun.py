@@ -54,7 +54,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
     §Perf knobs (default = paper-faithful baseline):
       attn_impl   — override cfg.attn_impl ("blockwise" = flash schedule)
       logits_last — prefill unembeds only the final position
-      mixing      — "a2a": explicit shard_map all-to-alls for the
+      mixing      — "a2a": explicit runtime.smap all-to-alls for the
                     seq↔heads transitions (the paper's gather/split)
       moe         — "ep": expert-parallel dispatch via all-to-all
       cache_seq   — "model"/"data": shard the KV cache sequence dim

@@ -16,14 +16,17 @@ paper's inter-chunk pipelining (§4.2.2 / Fig. 9c) applied to attention:
 chunk-level communication tasks overlapped with chunk compute, layer-wise
 synchronization preserved.
 
-Differentiable (lax.scan + ppermute transpose).  Must be called inside
-``shard_map`` with ``axis_name`` bound; all heads local, seq sharded."""
+Differentiable (lax.scan + ppermute transpose).  Must be called inside a
+:func:`repro.runtime.engine`/``smap`` body with ``axis_name`` bound; all
+heads local, seq sharded."""
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from ..runtime import collectives as C
 
 
 def ring_attention_local(ql, kl, vl, axis_name: str, *,
@@ -39,8 +42,8 @@ def ring_attention_local(ql, kl, vl, axis_name: str, *,
     g = hq // hkv
     scale = scale if scale is not None else hd ** -0.5
 
-    idx = jax.lax.axis_index(axis_name)
-    n = jax.lax.axis_size(axis_name)
+    idx = C.axis_index(axis_name)
+    n = C.axis_size(axis_name)
     q_pos = idx * sc + jnp.arange(sc)                   # global positions
 
     qg = ql.reshape(b, sc, hkv, g, hd).astype(jnp.float32) * scale
@@ -68,8 +71,8 @@ def ring_attention_local(ql, kl, vl, axis_name: str, *,
         acc_new = acc * alpha[..., None] + jnp.einsum(
             "bkgqt,btkh->bkgqh", p, v_c.astype(jnp.float32))
         # rotate: device i sends its current chunk to i+1 (receives i−1's)
-        k_nxt = jax.lax.ppermute(k_c, axis_name, perm)
-        v_nxt = jax.lax.ppermute(v_c, axis_name, perm)
+        k_nxt = C.ppermute(k_c, axis_name, perm=perm)
+        v_nxt = C.ppermute(v_c, axis_name, perm=perm)
         return (k_nxt, v_nxt, m_new, l_new, acc_new), None
 
     init = (kl, vl,

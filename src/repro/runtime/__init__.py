@@ -1,0 +1,37 @@
+"""repro.runtime — the single owner of meshes and sharded execution.
+
+Public surface:
+
+* :func:`engine`       — the one way to enter sharded execution
+                         (version-portable shard_map + spec validation)
+* :func:`smap`         — same, with an explicit mesh argument required
+* :class:`TPMesh` / :func:`tp_mesh` — the paper's 1-D "model" mesh with
+                         the divisibility/padding contract attached
+* :mod:`collectives`   — axis_index / axis_size / psum / all_gather /
+                         all_to_all used inside engine bodies
+
+No other module may call ``shard_map`` (any spelling) directly.
+"""
+from . import collectives  # noqa: F401
+from .mesh import (  # noqa: F401
+    DEFAULT_AXIS,
+    TPMesh,
+    as_mesh,
+    padded_size,
+    tp_mesh,
+)
+from .smap import (  # noqa: F401
+    CHECK_KW,
+    JAX_VERSION,
+    SUPPORTED_JAX,
+    engine,
+    resolve_shard_map,
+    smap,
+    validate_specs,
+)
+
+__all__ = [
+    "DEFAULT_AXIS", "TPMesh", "as_mesh", "padded_size", "tp_mesh",
+    "CHECK_KW", "JAX_VERSION", "SUPPORTED_JAX", "engine",
+    "resolve_shard_map", "smap", "validate_specs", "collectives",
+]

@@ -1,0 +1,63 @@
+"""Axis collectives used inside :func:`repro.runtime.engine` bodies.
+
+Thin, named wrappers over ``jax.lax`` so the rest of the repo has exactly
+one import for "talk across the TP axis" — the dedicated communication
+layer that distributed-GNN systems factor out (NeutronTP's gather/split,
+DepComm halo exchanges, EP MoE dispatch all reduce to these five ops).
+Keeping them in one module is what makes a future second backend
+(pjit constraints, explicit device buffers, a real multi-host launcher)
+a local change instead of a repo-wide one.
+
+All functions must be called *inside* a mapped body with ``axis`` bound.
+
+Version portability lives here too: ``jax.lax.axis_size`` only exists on
+newer JAX lines, so :func:`axis_size` falls back to the classic
+``psum(1, axis)`` idiom (which constant-folds to the static axis size) on
+0.4.x.
+"""
+from __future__ import annotations
+
+import jax
+
+from .mesh import DEFAULT_AXIS
+
+_HAS_AXIS_SIZE = hasattr(jax.lax, "axis_size")
+
+
+def axis_index(axis: str = DEFAULT_AXIS) -> jax.Array:
+    """This worker's coordinate on ``axis``."""
+    return jax.lax.axis_index(axis)
+
+
+def axis_size(axis: str = DEFAULT_AXIS) -> int:
+    """Number of workers on ``axis`` (a static int under tracing)."""
+    if _HAS_AXIS_SIZE:
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def psum(x, axis: str = DEFAULT_AXIS):
+    """Sum-reduce ``x`` across the axis (loss/metric reductions)."""
+    return jax.lax.psum(x, axis)
+
+
+def all_gather(x: jax.Array, axis: str = DEFAULT_AXIS, *,
+               gather_axis: int = 0, tiled: bool = True) -> jax.Array:
+    """Concatenate every worker's ``x`` along ``gather_axis``."""
+    return jax.lax.all_gather(x, axis, axis=gather_axis, tiled=tiled)
+
+
+def ppermute(x: jax.Array, axis: str = DEFAULT_AXIS, *,
+             perm: list[tuple[int, int]]) -> jax.Array:
+    """Point-to-point rotation (ring pipelines: (src, dst) pairs)."""
+    return jax.lax.ppermute(x, axis, perm)
+
+
+def all_to_all(x: jax.Array, axis: str = DEFAULT_AXIS, *,
+               split_axis: int, concat_axis: int,
+               tiled: bool = False) -> jax.Array:
+    """The gather/split workhorse: exchange equal blocks of ``split_axis``
+    for equal blocks of ``concat_axis`` (V·D/N bytes per device, graph- and
+    skew-independent — the paper's load-balance argument)."""
+    return jax.lax.all_to_all(x, axis, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=tiled)

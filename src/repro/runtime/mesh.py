@@ -1,0 +1,105 @@
+"""Device meshes for the TP engine.
+
+``TPMesh`` owns the paper's 1-D "model" axis: it builds the mesh, knows the
+TP degree, and validates the divisibility/padding contract that the
+rectangular gather/split all-to-alls rely on — an (V, D) activation matrix
+can only move vertex-sharded ↔ dim-sharded when both V and D divide the TP
+degree (pad first with :func:`padded_size` / ``core.tp.pad_to_multiple``).
+
+Everything that runs sharded code goes through :func:`repro.runtime.engine`,
+which accepts either a raw :class:`jax.sharding.Mesh` or a ``TPMesh``
+(via :func:`as_mesh`), so callers can hold whichever is convenient.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+DEFAULT_AXIS = "model"
+
+
+def padded_size(size: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= ``size``."""
+    return -(-size // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class TPMesh:
+    """A 1-D tensor-parallel mesh plus its axis name and degree.
+
+    The single owner of "how many workers" questions: divisibility
+    validation and padded sizes.
+    """
+
+    mesh: Mesh
+    axis: str = DEFAULT_AXIS
+
+    def __post_init__(self):
+        if self.axis not in self.mesh.axis_names:
+            raise ValueError(
+                f"TPMesh axis {self.axis!r} not in mesh axes "
+                f"{self.mesh.axis_names}")
+
+    @property
+    def size(self) -> int:
+        """TP degree N (number of workers on the model axis)."""
+        return self.mesh.shape[self.axis]
+
+    @property
+    def devices(self):
+        return tuple(self.mesh.devices.flat)
+
+    # ---- padding / divisibility contract -------------------------------
+
+    def padded(self, size: int, chunks: int = 1) -> int:
+        """``size`` padded so it divides N (and optionally N·chunks)."""
+        return padded_size(size, self.size * chunks)
+
+    def validate_divisible(self, n_vertices: int | None = None,
+                           dim: int | None = None) -> None:
+        """Raise with a padding hint when (V, D) violate the TP contract."""
+        n = self.size
+        problems = []
+        if n_vertices is not None and n_vertices % n:
+            problems.append(
+                f"vertex count {n_vertices} % {n} != 0 "
+                f"(pad to {padded_size(n_vertices, n)})")
+        if dim is not None and dim % n:
+            problems.append(
+                f"feature dim {dim} % {n} != 0 "
+                f"(pad to {padded_size(dim, n)})")
+        if problems:
+            raise ValueError(
+                "TPMesh divisibility violated — rectangular gather/split "
+                "all-to-alls need both dims to divide the TP degree: "
+                + "; ".join(problems)
+                + ". Use core.tp.pad_to_multiple / runtime.padded_size.")
+
+
+def tp_mesh(n_workers: int | None = None, axis: str = DEFAULT_AXIS,
+            devices=None) -> TPMesh:
+    """Build the paper's 1-D model mesh over local devices.
+
+    ``n_workers`` defaults to every visible device; passing more than exist
+    is an error (forcing host devices is the launcher's job — see
+    ``XLA_FLAGS=--xla_force_host_platform_device_count``).
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n_workers = len(devices) if n_workers is None else int(n_workers)
+    if n_workers < 1 or n_workers > len(devices):
+        raise ValueError(
+            f"n_workers={n_workers} but only {len(devices)} devices visible")
+    return TPMesh(Mesh(np.array(devices[:n_workers]), (axis,)), axis=axis)
+
+
+def as_mesh(mesh) -> Mesh:
+    """Coerce TPMesh | Mesh → the underlying jax Mesh."""
+    if isinstance(mesh, TPMesh):
+        return mesh.mesh
+    if isinstance(mesh, Mesh):
+        return mesh
+    raise TypeError(f"expected TPMesh or jax.sharding.Mesh, got "
+                    f"{type(mesh).__name__}")

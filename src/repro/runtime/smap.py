@@ -1,0 +1,122 @@
+"""Version-portable ``shard_map``: one entry point for sharded execution.
+
+JAX has moved (and re-keyworded) shard_map across releases:
+
+* 0.4.x       — ``jax.experimental.shard_map.shard_map(...)`` with the
+                replication-check flag spelled ``check_rep``;
+* newer lines — ``jax.shard_map(...)`` at top level, with the flag renamed
+                ``check_vma`` (varying-manual-axes checking).
+
+The split/gather collectives in ``core.tp`` produce outputs whose
+replication the checker cannot always infer, so every call site in this
+repo disables the check.  Rather than copy the version probe into each
+subsystem, :func:`resolve_shard_map` runs once at import time and
+:func:`smap` / :func:`engine` present a single stable signature.
+
+``engine(fn, in_specs, out_specs, mesh=...)`` is the only way repo code
+should enter sharded execution; specs are validated eagerly against the
+mesh so a bad axis name fails at build time with a readable error instead
+of deep inside jax tracing.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .mesh import as_mesh, tp_mesh
+
+JAX_VERSION = jax.__version__
+
+#: JAX release lines the shim is known to resolve on (see CHANGES.md).
+SUPPORTED_JAX = ">=0.4.30 (check_rep spelling) and >=0.5 (check_vma spelling)"
+
+
+def resolve_shard_map() -> tuple[Callable, str | None]:
+    """Locate shard_map on the installed JAX and its check-flag keyword.
+
+    Returns ``(impl, check_kw)`` where ``check_kw`` is ``"check_vma"``,
+    ``"check_rep"``, or ``None`` when the installed signature has neither
+    (the flag is simply dropped).
+    """
+    impl = getattr(jax, "shard_map", None)
+    if impl is None:
+        from jax.experimental.shard_map import shard_map as impl
+    try:
+        params = inspect.signature(impl).parameters
+    except (TypeError, ValueError):  # C-level or wrapped callables
+        params = {}
+    if "check_vma" in params:
+        return impl, "check_vma"
+    if "check_rep" in params:
+        return impl, "check_rep"
+    return impl, None
+
+
+_SHARD_MAP, CHECK_KW = resolve_shard_map()
+
+
+def _iter_spec_leaves(specs):
+    """Yield PartitionSpec/None leaves of a specs pytree.
+
+    PartitionSpec is a tuple subclass, so generic flattening would walk
+    *into* it; stop at P (and None) explicitly.
+    """
+    leaves, _ = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: x is None or isinstance(x, P))
+    return leaves
+
+
+def validate_specs(mesh, specs, name: str = "specs") -> None:
+    """Eagerly reject malformed specs with an error naming the culprit."""
+    mesh = as_mesh(mesh)
+    axes = set(mesh.axis_names)
+    for leaf in _iter_spec_leaves(specs):
+        if leaf is None:
+            continue
+        if not isinstance(leaf, P):
+            raise TypeError(
+                f"{name}: expected PartitionSpec (or None) leaves, got "
+                f"{type(leaf).__name__}: {leaf!r}")
+        used: list[str] = []
+        for entry in leaf:
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for ax in names:
+                if ax not in axes:
+                    raise ValueError(
+                        f"{name}: {leaf} names mesh axis {ax!r} but the "
+                        f"mesh only has axes {sorted(axes)}")
+                if ax in used:
+                    raise ValueError(
+                        f"{name}: {leaf} uses mesh axis {ax!r} on more "
+                        f"than one dimension")
+                used.append(ax)
+
+
+def smap(fn: Callable, mesh, in_specs, out_specs, *,
+         check: bool = False, validate: bool = True) -> Callable:
+    """Portable shard_map with the check flag translated per JAX version."""
+    mesh = as_mesh(mesh)
+    if validate:
+        validate_specs(mesh, in_specs, "in_specs")
+        validate_specs(mesh, out_specs, "out_specs")
+    kwargs: dict[str, Any] = {CHECK_KW: check} if CHECK_KW else {}
+    return _SHARD_MAP(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def engine(fn: Callable, in_specs, out_specs, *, mesh=None,
+           check: bool = False) -> Callable:
+    """The repo-wide sharded-execution entry point.
+
+    ``mesh`` may be a TPMesh, a raw jax Mesh, or None (a fresh 1-D "model"
+    mesh over every visible device).  Returns the mapped callable; wrap in
+    ``jax.jit`` at the call site as usual.
+    """
+    if mesh is None:
+        mesh = tp_mesh()
+    return smap(fn, mesh, in_specs, out_specs, check=check)

@@ -1,5 +1,6 @@
 """Explicit-collective sharder: the paper's gather/split as real
-``jax.lax.all_to_all`` ops inside ``shard_map`` (§Perf hillclimbs).
+all-to-all collectives inside :func:`repro.runtime.smap` bodies
+(§Perf hillclimbs).
 
 The baseline ``Sharder`` expresses NeutronTP's layout transitions as pjit
 sharding *constraints* and lets XLA's SPMD partitioner pick the collective.
@@ -21,9 +22,12 @@ collectives, exactly the paper's design:
   and returned with one more all-to-all.  This is gather/split with
   "vertex set" = the routed token set.
 
-Both paths are differentiable (shard_map + collectives have transposes)
-and fall back to the constraint path when divisibility fails, so every
-architecture still lowers.
+Both paths are differentiable (the runtime's sharded-execution entry and
+its collectives all have transposes) and fall back to the constraint path
+when divisibility fails, so every architecture still lowers.  All sharded
+execution here enters through :func:`repro.runtime.smap` — never a raw,
+version-pinned ``shard_map`` import — and the collectives come from
+:mod:`repro.runtime.collectives`.
 """
 from __future__ import annotations
 
@@ -34,8 +38,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
+from ..runtime import collectives as C
+from ..runtime import smap
 from .specs import Sharder
 
 
@@ -89,12 +94,12 @@ class ExplicitSharder(Sharder):
             from ..nn.ring_attention import ring_attention_local
             d = _data_spec_axis(rules)
             io_spec = P(d, m, None, None)
-            fn = shard_map(
+            fn = smap(
                 lambda ql, kl, vl: ring_attention_local(
                     ql, kl, vl, m, causal=True, window=window,
                     softcap=cfg.attn_softcap, scale=scale),
-                mesh=mesh, in_specs=(io_spec, io_spec, io_spec),
-                out_specs=io_spec, check_rep=False)
+                mesh, in_specs=(io_spec, io_spec, io_spec),
+                out_specs=io_spec)
             return fn(q, k, v)
         hq_l = hq // n
         # static kv slice width per device: the kv groups covered by the
@@ -112,19 +117,19 @@ class ExplicitSharder(Sharder):
 
         def local_fn(ql, kl, vl):
             # ql: (B_l, S/n, Hq, hd) → (B_l, S, Hq/n, hd): paper's split
-            qg = jax.lax.all_to_all(ql, m, split_axis=2, concat_axis=1,
-                                    tiled=True)
+            qg = C.all_to_all(ql, m, split_axis=2, concat_axis=1,
+                              tiled=True)
             if kv_a2a:
-                kg = jax.lax.all_to_all(kl, m, split_axis=2, concat_axis=1,
-                                        tiled=True)
-                vg = jax.lax.all_to_all(vl, m, split_axis=2, concat_axis=1,
-                                        tiled=True)
+                kg = C.all_to_all(kl, m, split_axis=2, concat_axis=1,
+                                  tiled=True)
+                vg = C.all_to_all(vl, m, split_axis=2, concat_axis=1,
+                                  tiled=True)
             else:
                 # GQA: kv heads don't divide n — gather seq, slice the
                 # kv group(s) this device's q heads attend to.
-                kg = jax.lax.all_gather(kl, m, axis=1, tiled=True)
-                vg = jax.lax.all_gather(vl, m, axis=1, tiled=True)
-                idx = jax.lax.axis_index(m)
+                kg = C.all_gather(kl, m, gather_axis=1)
+                vg = C.all_gather(vl, m, gather_axis=1)
+                idx = C.axis_index(m)
                 start = (idx * hq_l) // g
                 kg = jax.lax.dynamic_slice_in_dim(kg, start, nkv_l, axis=2)
                 vg = jax.lax.dynamic_slice_in_dim(vg, start, nkv_l, axis=2)
@@ -147,12 +152,12 @@ class ExplicitSharder(Sharder):
                 out = attention_core(qg, kg, vg, mask,
                                      softcap=cfg.attn_softcap, scale=scale)
             # (B_l, S, Hq/n, hdv) → (B_l, S/n, Hq, hdv): paper's gather
-            return jax.lax.all_to_all(out, m, split_axis=1, concat_axis=2,
-                                      tiled=True)
+            return C.all_to_all(out, m, split_axis=1, concat_axis=2,
+                                tiled=True)
 
-        fn = shard_map(local_fn, mesh=mesh,
-                       in_specs=(io_spec, io_spec, io_spec),
-                       out_specs=io_spec, check_rep=False)
+        fn = smap(local_fn, mesh,
+                  in_specs=(io_spec, io_spec, io_spec),
+                  out_specs=io_spec)
         return fn(q, k, v)
 
     # ------------------------------------------------------------------
@@ -207,8 +212,7 @@ class ExplicitSharder(Sharder):
 
             # ---- paper's split: ONE all-to-all to the expert owners ----
             sendb = buf.reshape(n, e_l, cap, dm)
-            recv = jax.lax.all_to_all(sendb, m, split_axis=0,
-                                      concat_axis=0, tiled=False)
+            recv = C.all_to_all(sendb, m, split_axis=0, concat_axis=0)
             # recv: (n_senders, e_l, cap, D) → (e_l, n·cap, D)
             work = recv.transpose(1, 0, 2, 3).reshape(e_l, n * cap, dm)
 
@@ -222,8 +226,7 @@ class ExplicitSharder(Sharder):
 
             # ---- paper's gather: ONE all-to-all back to the senders ----
             yb = y.reshape(e_l, n, cap, dm).transpose(1, 0, 2, 3)
-            back = jax.lax.all_to_all(yb, m, split_axis=0,
-                                      concat_axis=0, tiled=False)
+            back = C.all_to_all(yb, m, split_axis=0, concat_axis=0)
             y_buf = back.reshape(e, cap, dm)
 
             # ---- local combine ----
@@ -232,9 +235,9 @@ class ExplicitSharder(Sharder):
             yf = jnp.zeros((t_l, dm), xl.dtype).at[st].add(gathered)
             return yf.reshape(b_l, s_l, dm)
 
-        fn = shard_map(
-            local_fn, mesh=mesh,
+        fn = smap(
+            local_fn, mesh,
             in_specs=(tok_spec, tok_spec, tok_spec, w_spec, w_spec,
                       P(m, None, None)),
-            out_specs=tok_spec, check_rep=False)
+            out_specs=tok_spec)
         return fn(x, top_e, top_p, p["gate"], p["up"], p["down"])

@@ -1,10 +1,33 @@
 import os
+import subprocess
 import sys
 
 # src/ layout import path (tests also work without `pip install -e .`)
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, SRC)
 
 # NOTE: no XLA_FLAGS device-count forcing here — unit tests and benches run
 # on the single real CPU device.  Multi-device behaviour is covered by the
-# subprocess tests in test_distributed.py, which set
-# --xla_force_host_platform_device_count=8 for their child processes only.
+# subprocess checks under tests/dist_progs/, launched via ``run_dist_prog``
+# below, whose children pin DIST_XLA_FLAGS so the runtime-engine
+# collectives (all_to_all gather/split, halo exchange, psum) execute
+# across 8 real device buffers.
+
+#: The one place the forced device count is spelled; the dist_progs assert
+#: they were launched with exactly this value.
+DIST_XLA_FLAGS = "--xla_force_host_platform_device_count=8"
+
+PROGS = os.path.join(os.path.dirname(__file__), "dist_progs")
+
+
+def run_dist_prog(name: str, timeout: int = 600) -> None:
+    """Run tests/dist_progs/<name> as a child with pinned XLA_FLAGS."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = DIST_XLA_FLAGS
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(PROGS, name)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, \
+        f"{name} failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert proc.stdout.strip().endswith(f"OK {name[:-3]}")

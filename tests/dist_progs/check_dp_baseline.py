@@ -7,29 +7,30 @@ assert "--xla_force_host_platform_device_count=8" in \
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import optim  # noqa: E402
 from repro.gnn import dp_baseline as DP  # noqa: E402
 from repro.gnn import layers as L  # noqa: E402
 from repro.gnn import models as M  # noqa: E402
 from repro.graph import chunk_partition, sbm_power_law  # noqa: E402
+from repro.runtime import engine, tp_mesh  # noqa: E402
 
 assert len(jax.devices()) == 8
 
 data = sbm_power_law(n=616, num_classes=5, feat_dim=24, avg_degree=8, seed=0)
 bundle = DP.prepare_dp_bundle(data, k=8)
-mesh = Mesh(np.array(jax.devices()), ("model",))
+mesh = tp_mesh(8)
 cfg = M.GNNConfig(model="gcn", in_dim=24, hidden_dim=32, num_classes=5,
                   num_layers=2, decoupled=False)
 params = M.init_params(jax.random.PRNGKey(1), cfg)
 
 gd = L.edge_list_dev(data.graph)
 ref = M.coupled_forward(params, cfg, gd, jnp.asarray(data.features))
-f = jax.shard_map(
+f = engine(
     lambda p, g, x: DP.dp_coupled_forward(p, cfg, g, x[0], axis="model")[None],
     mesh=mesh, in_specs=(P(), P(), P("model", None, None)),
-    out_specs=P("model", None, None), check_vma=False)
+    out_specs=P("model", None, None))
 out = np.asarray(f(params, bundle.graph, bundle.features))
 
 part = chunk_partition(data.graph, 8)

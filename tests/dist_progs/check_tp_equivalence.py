@@ -7,19 +7,19 @@ assert "--xla_force_host_platform_device_count=8" in \
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import optim  # noqa: E402
 from repro.core import decouple as D  # noqa: E402
 from repro.gnn import models as M  # noqa: E402
 from repro.graph import sbm_power_law  # noqa: E402
+from repro.runtime import engine, tp_mesh  # noqa: E402
 
 assert len(jax.devices()) == 8
 
 data = sbm_power_law(n=616, num_classes=5, feat_dim=24, avg_degree=8, seed=0)
 bundle = D.prepare_bundle(data, n_workers=8, n_chunks=4)
-mesh = Mesh(np.array(jax.devices()), ("model",))
+mesh = tp_mesh(8)
 g = bundle.graph
 n = data.graph.n
 
@@ -29,11 +29,11 @@ for model in ("gcn", "gat"):
                                   num_layers=3)
         params = M.init_params(jax.random.PRNGKey(1), cfg)
         ref = M.decoupled_forward(params, cfg, g.edges, bundle.features)
-        f = jax.shard_map(
+        f = engine(
             lambda p, gr, x, c=cfg, pl=pipelined:
                 D.tp_decoupled_forward(p, c, gr, x, pipelined=pl),
             mesh=mesh, in_specs=(P(), P(), P("model", None)),
-            out_specs=P("model", None), check_vma=False)
+            out_specs=P("model", None))
         out = f(params, g, bundle.features)
         err = float(jnp.abs(ref[:n] - out[:n]).max())
         assert err < 1e-4, (model, pipelined, err)
@@ -44,9 +44,9 @@ cfg = D.padded_gnn_config(data, bundle, model="gcn", hidden_dim=32,
 cfg_ref = M.GNNConfig(**{**cfg.__dict__, "decoupled": False})
 params = M.init_params(jax.random.PRNGKey(2), cfg)
 ref = M.coupled_forward(params, cfg_ref, g.edges, bundle.features)
-f = jax.shard_map(lambda p, gr, x: D.tp_naive_forward(p, cfg, gr, x),
-                  mesh=mesh, in_specs=(P(), P(), P("model", None)),
-                  out_specs=P("model", None), check_vma=False)
+f = engine(lambda p, gr, x: D.tp_naive_forward(p, cfg, gr, x),
+           mesh=mesh, in_specs=(P(), P(), P("model", None)),
+           out_specs=P("model", None))
 out = f(params, g, bundle.features)
 err = float(jnp.abs(ref[:n] - out[:n]).max())
 assert err < 1e-4, ("naive", err)

@@ -1,44 +1,26 @@
 """Multi-worker correctness via child processes with 8 forced host devices.
 
-The main pytest process stays on 1 device (see conftest); each child sets
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the shard_map
-collectives (all_to_all gather/split, halo exchange, psum) execute across 8
-real device buffers.
+The main pytest process stays on 1 device; each child runs with the pinned
+``conftest.DIST_XLA_FLAGS`` (``--xla_force_host_platform_device_count=8``)
+so the runtime-engine collectives (all_to_all gather/split, halo exchange,
+psum) execute across 8 real device buffers.
 """
-import os
-import subprocess
-import sys
-
 import pytest
 
-HERE = os.path.dirname(__file__)
-SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
-PROGS = os.path.join(HERE, "dist_progs")
-
-
-def run_prog(name, timeout=600):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    proc = subprocess.run(
-        [sys.executable, os.path.join(PROGS, name)],
-        capture_output=True, text=True, timeout=timeout, env=env)
-    assert proc.returncode == 0, \
-        f"{name} failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
-    assert proc.stdout.strip().endswith(f"OK {name[:-3]}")
+from conftest import run_dist_prog
 
 
 @pytest.mark.slow
 def test_tp_equivalence_8_workers():
-    run_prog("check_tp_equivalence.py")
+    run_dist_prog("check_tp_equivalence.py")
 
 
 @pytest.mark.slow
 def test_dp_baseline_8_workers():
-    run_prog("check_dp_baseline.py")
+    run_dist_prog("check_dp_baseline.py")
 
 
 @pytest.mark.slow
 def test_explicit_collectives_8_workers():
-    """shard_map a2a mixing + EP MoE ≡ constraint path ≡ 1-device oracle."""
-    run_prog("check_explicit_collectives.py")
+    """runtime.smap a2a mixing + EP MoE ≡ constraint path ≡ 1-device oracle."""
+    run_dist_prog("check_explicit_collectives.py")

@@ -12,7 +12,11 @@ Each property is a system invariant the design relies on:
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 SET = dict(max_examples=15, deadline=None)
 

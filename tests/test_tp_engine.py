@@ -1,16 +1,20 @@
 """TP engine semantics on the single-device mesh (N=1 degenerate collectives);
-true multi-worker behaviour is covered by test_distributed.py subprocesses."""
+true multi-worker behaviour is covered by test_distributed.py subprocesses.
+
+All sharded execution enters via ``repro.runtime.engine`` — the split/gather
+round-trip of the underlying collectives is covered by test_runtime.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import optim
 from repro.core import decouple as D
-from repro.core import tp
 from repro.gnn import models as M
 from repro.graph import sbm_power_law
+from repro.runtime import engine, tp_mesh
 
 
 @pytest.fixture(scope="module")
@@ -18,17 +22,8 @@ def setup():
     data = sbm_power_law(n=500, num_classes=5, feat_dim=24, avg_degree=8,
                          seed=0)
     bundle = D.prepare_bundle(data, n_workers=1, n_chunks=3)
-    mesh = Mesh(np.array(jax.devices()[:1]), ("model",))
+    mesh = tp_mesh(1)
     return data, bundle, mesh
-
-
-def test_split_gather_roundtrip(setup):
-    _, _, mesh = setup
-    h = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
-    f = jax.shard_map(lambda x: tp.gather(tp.split(x)), mesh=mesh,
-                      in_specs=P("model", None), out_specs=P("model", None),
-                      check_vma=False)
-    np.testing.assert_array_equal(f(h), h)
 
 
 @pytest.mark.parametrize("model", ["gcn", "gat"])
@@ -40,11 +35,11 @@ def test_tp_forward_matches_reference(setup, model, pipelined):
     params = M.init_params(jax.random.PRNGKey(1), cfg)
     g = bundle.graph
     ref = M.decoupled_forward(params, cfg, g.edges, bundle.features)
-    f = jax.shard_map(
+    f = engine(
         lambda p, gr, x: D.tp_decoupled_forward(p, cfg, gr, x,
                                                 pipelined=pipelined),
         mesh=mesh, in_specs=(P(), P(), P("model", None)),
-        out_specs=P("model", None), check_vma=False)
+        out_specs=P("model", None))
     out = f(params, g, bundle.features)
     np.testing.assert_allclose(out[: data.graph.n], ref[: data.graph.n],
                                atol=1e-4)
@@ -58,10 +53,10 @@ def test_naive_tp_matches_coupled_reference(setup):
     params = M.init_params(jax.random.PRNGKey(2), cfg)
     g = bundle.graph
     ref = M.coupled_forward(params, cfg_ref, g.edges, bundle.features)
-    f = jax.shard_map(
+    f = engine(
         lambda p, gr, x: D.tp_naive_forward(p, cfg, gr, x),
         mesh=mesh, in_specs=(P(), P(), P("model", None)),
-        out_specs=P("model", None), check_vma=False)
+        out_specs=P("model", None))
     out = f(params, g, bundle.features)
     np.testing.assert_allclose(out[: data.graph.n], ref[: data.graph.n],
                                atol=1e-4)
@@ -88,6 +83,7 @@ def test_tp_training_converges(setup, mode):
 
 
 def test_padding_divisibility_properties():
+    from repro.core import tp
     assert tp.padded_size(10, 4) == 12
     assert tp.padded_size(8, 4) == 8
     x = jnp.ones((10, 3))
