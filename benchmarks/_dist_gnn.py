@@ -1,10 +1,14 @@
 """Child-process body for the distributed GNN benchmarks.
 
 Invoked by run.py / bench modules with a forced host device count; times
-one full-graph training epoch per (mode, model, graph, layers, dims)
-combination passed on the command line.  Prints CSV rows:
+one full-graph training epoch per (mode, backend, model, graph, layers,
+dims) combination passed on the command line.  Prints CSV rows:
 
     <tag>,<us_per_epoch>,<derived>
+
+Tags are ``<prefix><mode>`` for the default explicit backend and
+``<prefix><mode>_constraint`` for the constraint backend, so existing
+consumers of the explicit rows are unaffected.
 """
 from __future__ import annotations
 
@@ -17,6 +21,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--modes", default="dp,naive,decoupled,"
                                        "decoupled_pipelined")
+    ap.add_argument("--backends", default="explicit",
+                    help="comma list of engine backends "
+                         "(explicit,constraint)")
     ap.add_argument("--model", default="gcn")
     ap.add_argument("--n", type=int, default=4096)
     ap.add_argument("--feat-dim", type=int, default=128)
@@ -55,46 +62,52 @@ def main():
     opt = optim.adamw(1e-2)
 
     for mode in args.modes.split(","):
+        # graph prep / config / params are backend-independent — only the
+        # engine-mapped step differs per backend
         if mode == "dp":
             bundle = DP.prepare_dp_bundle(data, k=k)
             cfg = M.GNNConfig(model=args.model, in_dim=args.feat_dim,
                               hidden_dim=args.hidden,
                               num_classes=args.classes,
                               num_layers=args.layers, decoupled=False)
-            step, _ = DP.make_dp_train_fns(cfg, bundle, mesh, opt)
-            params = M.init_params(jax.random.PRNGKey(0), cfg)
         else:
             bundle = D.prepare_bundle(data, n_workers=k,
                                       n_chunks=args.chunks)
             cfg = D.padded_gnn_config(data, bundle, model=args.model,
                                       hidden_dim=args.hidden,
                                       num_layers=args.layers)
-            step, _ = D.make_tp_train_fns(cfg, bundle, mesh, opt,
-                                          mode=mode)
-            params = M.init_params(jax.random.PRNGKey(0), cfg)
-        o = opt.init(params)
-        p = params
-        # warmup (compile)
-        p, o, loss = step(p, o)
-        jax.block_until_ready(loss)
-        t0 = time.perf_counter()
-        for _ in range(args.epochs):
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        for backend in args.backends.split(","):
+            if mode == "dp":
+                step, _ = DP.make_dp_train_fns(cfg, bundle, mesh, opt,
+                                               backend=backend)
+            else:
+                step, _ = D.make_tp_train_fns(cfg, bundle, mesh, opt,
+                                              mode=mode, backend=backend)
+            o = opt.init(params)
+            p = params
+            # warmup (compile)
             p, o, loss = step(p, o)
-        jax.block_until_ready(loss)
-        dt = (time.perf_counter() - t0) / args.epochs
-        derived = f"workers={k};loss={float(loss):.3f}"
-        if args.census:
-            try:
-                txt = step.lower(p, o).compile().as_text()
-                cb = hlo_census(txt)["collectives"]
-                derived += (f";coll_bytes={cb['total']:.3e}"
-                            f";a2a={cb['all-to-all']:.3e}"
-                            f";ag={cb['all-gather']:.3e}"
-                            f";ar={cb['all-reduce']:.3e}")
-            except Exception as e:  # noqa: BLE001
-                derived += f";census_error={type(e).__name__}"
-        print(f"{args.tag_prefix}{mode},{dt*1e6:.1f},{derived}",
-              flush=True)
+            jax.block_until_ready(loss)
+            t0 = time.perf_counter()
+            for _ in range(args.epochs):
+                p, o, loss = step(p, o)
+            jax.block_until_ready(loss)
+            dt = (time.perf_counter() - t0) / args.epochs
+            derived = f"workers={k};loss={float(loss):.3f}"
+            if args.census:
+                try:
+                    txt = step.lower(p, o).compile().as_text()
+                    cb = hlo_census(txt)["collectives"]
+                    derived += (f";coll_bytes={cb['total']:.3e}"
+                                f";a2a={cb['all-to-all']:.3e}"
+                                f";ag={cb['all-gather']:.3e}"
+                                f";ar={cb['all-reduce']:.3e}")
+                except Exception as e:  # noqa: BLE001
+                    derived += f";census_error={type(e).__name__}"
+            tag = mode if backend == "explicit" else f"{mode}_{backend}"
+            print(f"{args.tag_prefix}{tag},{dt*1e6:.1f},{derived}",
+                  flush=True)
 
 
 if __name__ == "__main__":

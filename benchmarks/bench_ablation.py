@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import re
 
-from .common import emit, run_subprocess_bench
+from .common import emit, record_output, run_subprocess_bench, write_json
 
 
 def main():
@@ -15,7 +15,7 @@ def main():
                   "--graph", graph,
                   "--tag-prefix", f"ablation_{graph}_"])
         rows = {}
-        for line in out.strip().splitlines():
+        for line in record_output(out).strip().splitlines():
             parts = line.split(",")
             rows[parts[0]] = float(parts[1])
             print(line)
@@ -28,6 +28,8 @@ def main():
                 if t:
                     emit(f"ablation_{graph}_speedup_{label}", t,
                          f"speedup_vs_baseline={base / t:.2f}x")
+
+    write_json("ablation")
 
 
 if __name__ == "__main__":

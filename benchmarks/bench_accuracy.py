@@ -2,7 +2,7 @@
 reach comparable accuracy (single device, identical data/splits)."""
 from __future__ import annotations
 
-from .common import emit
+from .common import emit, write_json
 
 
 def main():
@@ -24,6 +24,8 @@ def main():
              curve)
     emit("accuracy_gap", 0.0,
          f"|coupled-decoupled|={abs(results['coupled'] - results['decoupled']):.4f}")
+
+    write_json("accuracy")
 
 
 if __name__ == "__main__":

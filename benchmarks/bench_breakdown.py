@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import time
 
-from .common import emit
+from .common import emit, write_json
 
 
 def main():
@@ -90,6 +90,8 @@ def main():
          f"fraction={(t_nn + t_agg) / total_lp:.2f}")
     emit("breakdown_lp_score_and_loss", (t_score + t_lploss) * 1e6,
          f"fraction={(t_score + t_lploss) / total_lp:.2f}")
+
+    write_json("breakdown")
 
 
 if __name__ == "__main__":

@@ -5,47 +5,134 @@ Two measurements:
   * analytic bytes/epoch from the paper's formulas instantiated on the real
     graph + halo plan (what Fig. 10(b) plots), and
   * measured collective wire bytes from the compiled 8-worker HLO (census
-    over the actual runtime-engine sharded programs).
+    over the actual runtime-engine sharded programs), reported for BOTH
+    engine backends side by side: the explicit shard_map path and the
+    pjit/constraint path must show identical all-to-all wire bytes — the
+    constraint backend changes who *schedules* the collectives, not what
+    goes over the wire.
+
+``--analytic-only`` skips the subprocess census (used by scripts/ci.sh as
+a fast formula-regression smoke).
 """
 from __future__ import annotations
 
-from .common import emit, run_subprocess_bench
+import argparse
+
+from .common import emit, record_output, run_subprocess_bench, write_json
+
+F32 = 4
 
 
-def main():
-    import numpy as np
+def analytic_volumes(n: int, feat: int, hidden: int, classes: int, L: int,
+                     halo_rows: int) -> dict:
+    """Forward-pass bytes/epoch summed over all workers (paper §3.2).
+
+    ``dims`` are the per-layer *input* dims [feat, hidden, ..., hidden]:
+    ``tp_naive_forward`` splits/gathers the activations entering layer i
+    (shape V × dims[i]) — layer *outputs* only ever move as the next
+    layer's input, so summing output dims would both drop the feat-dim
+    move (the largest) and double-count nothing in its place.
+    """
+    dims = [feat] + [hidden] * (L - 1) + [classes]
+    return {
+        # naive TP: split + gather per layer at the layer-input dim
+        "naive": sum(2 * n * d * F32 for d in dims[:-1]),
+        # decoupled: one split + one gather at the class (NN-output) dim
+        "decoupled": n * classes * F32 * 2,
+        # DP: per layer, every remote src row at the layer-input dim
+        "dp": sum(halo_rows * d * F32 for d in dims[:-1]),
+        # all-to-all collectives per epoch: forward + mirrored backward
+        "naive_per_epoch": 4 * L,
+        "decoupled_per_epoch": 4,
+    }
+
+
+def main(argv=()):
+    # default () so run.py's ``main()`` never sees run.py's own sys.argv;
+    # the CLI entry below passes sys.argv[1:] explicitly.
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--analytic-only", action="store_true",
+                    help="skip the 8-device subprocess HLO census")
+    args = ap.parse_args(argv)
+
     from repro.graph import chunk_partition, halo_plan, sbm_power_law
 
     n, feat, hidden, classes, L, k = 4096, 128, 64, 16, 2, 8
     data = sbm_power_law(n=n, num_classes=classes, feat_dim=feat,
                          avg_degree=16, seed=7)
     g = data.graph
-    f32 = 4
 
     # --- analytic (paper §3.2) ---
-    # naive TP: 2 collectives per layer, each V·D_layer/N per worker → total
-    dims = [feat] + [hidden] * (L - 1) + [classes]
-    naive = sum(2 * g.n * d * f32 for d in dims[1:]) * 1  # per epoch (fwd)
-    # decoupled: one split at embedding dim + one gather at class dim (fwd)
-    dec = g.n * classes * f32 * 2
-    # DP: per layer, every remote src row of dim d
     plan = halo_plan(g, chunk_partition(g, k))
     halo_rows = int((plan.send_idx >= 0).sum())
-    dp = sum(halo_rows * d * f32 for d in dims[:-1])
-    emit("comm_volume_analytic_naive_tp", 0.0, f"bytes_fwd={naive:.3e}")
-    emit("comm_volume_analytic_decoupled_tp", 0.0, f"bytes_fwd={dec:.3e}")
-    emit("comm_volume_analytic_dp", 0.0,
-         f"bytes_fwd={dp:.3e};halo_rows={halo_rows}")
-    emit("comm_frequency", 0.0,
-         f"naive_per_epoch={2 * L + 2};decoupled_per_epoch=4")
+    vols = analytic_volumes(n=g.n, feat=feat, hidden=hidden,
+                            classes=classes, L=L, halo_rows=halo_rows)
+    # regression pins for the standard workload (ci.sh smoke): naive moves
+    # the feat-dim activations — 2·4096·(128+64)·4 — not the output dims.
+    assert vols["naive"] == 2 * 4096 * (128 + 64) * 4, vols["naive"]
+    assert vols["decoupled"] == 2 * 4096 * 16 * 4, vols["decoupled"]
+    assert vols["naive"] > vols["decoupled"] > 0
+    assert vols["dp"] > 0 and vols["naive_per_epoch"] == 8
 
-    # --- measured from compiled HLO (full train step, fwd+bwd) ---
-    out = run_subprocess_bench(
-        "benchmarks._dist_gnn", devices=8,
-        args=["--modes", "dp,naive,decoupled", "--census",
-              "--tag-prefix", "comm_volume_measured_"])
-    print(out, end="")
+    emit("comm_volume_analytic_naive_tp", 0.0,
+         f"bytes_fwd={vols['naive']:.3e}")
+    emit("comm_volume_analytic_decoupled_tp", 0.0,
+         f"bytes_fwd={vols['decoupled']:.3e}")
+    emit("comm_volume_analytic_dp", 0.0,
+         f"bytes_fwd={vols['dp']:.3e};halo_rows={halo_rows}")
+    emit("comm_frequency", 0.0,
+         f"naive_per_epoch={vols['naive_per_epoch']};"
+         f"decoupled_per_epoch={vols['decoupled_per_epoch']}")
+
+    # --- measured from compiled HLO (full train step, fwd+bwd), both
+    # engine backends: identical a2a wire bytes, different scheduler ---
+    if not args.analytic_only:
+        out = run_subprocess_bench(
+            "benchmarks._dist_gnn", devices=8,
+            args=["--modes", "dp,naive,decoupled", "--census",
+                  "--backends", "explicit,constraint",
+                  "--tag-prefix", "comm_volume_measured_"])
+        print(record_output(out), end="")
+        _check_backend_parity(out)
+
+    write_json("comm_volume")
+
+
+def _a2a_bytes(derived: str) -> float | None:
+    for field in derived.split(";"):
+        if field.startswith("a2a="):
+            return float(field[4:])
+    return None
+
+
+def _check_backend_parity(out: str) -> None:
+    """The constraint backend moves who *schedules* the all-to-alls, not
+    what crosses the wire: per mode, measured a2a bytes must be identical
+    across backends."""
+    from .common import parse_rows
+
+    a2a = {}
+    for row in parse_rows(out):
+        b = _a2a_bytes(row["derived"])
+        if b is not None:
+            a2a[row["name"]] = b
+    mismatches = []
+    for mode in ("dp", "naive", "decoupled"):
+        e = a2a.get(f"comm_volume_measured_{mode}")
+        c = a2a.get(f"comm_volume_measured_{mode}_constraint")
+        # e > 0 guards the census itself: a parser regression that zeroes
+        # a2a bytes on both backends would otherwise pass as 0.0 == 0.0
+        ok = e is not None and e > 0 and e == c
+        emit(f"comm_volume_backend_parity_{mode}", 0.0,
+             f"explicit_a2a={e};constraint_a2a={c};equal={ok}")
+        if not ok:
+            mismatches.append((mode, e, c))
+    # emit every mode's parity row before failing so a mismatch report
+    # shows the full picture, not just the first mode
+    assert not mismatches, mismatches
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(sys.argv[1:])

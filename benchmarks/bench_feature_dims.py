@@ -1,7 +1,7 @@
 """Paper Fig. 14: per-epoch runtime vs input feature dimension."""
 from __future__ import annotations
 
-from .common import run_subprocess_bench
+from .common import record_output, run_subprocess_bench, write_json
 
 
 def main():
@@ -11,7 +11,9 @@ def main():
             args=["--modes", "dp,decoupled_pipelined",
                   "--feat-dim", str(dim), "--n", "2048",
                   "--tag-prefix", f"featdim_{dim}_"])
-        print(out, end="")
+        print(record_output(out), end="")
+
+    write_json("feature_dims")
 
 
 if __name__ == "__main__":

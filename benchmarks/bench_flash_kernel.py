@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import time
 
-from .common import emit
+from .common import emit, write_json
 
 
 def main():
@@ -61,6 +61,8 @@ def main():
          f"hbm_model_bytes={kernel_bytes:.3e};"
          f"naive_score_bytes={naive_bytes:.3e};"
          f"traffic_reduction={naive_bytes / kernel_bytes:.1f}x")
+
+    write_json("flash_kernel")
 
 
 if __name__ == "__main__":

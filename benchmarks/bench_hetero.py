@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import time
 
-from .common import emit
+from .common import emit, write_json
 
 
 def main():
@@ -64,6 +64,8 @@ def main():
     emit("hetero_rgcn_decoupled_commuted", t_d * 1e6,
          f"speed_ratio={t_c / t_d:.2f}")
     assert err < 1e-3, err
+
+    write_json("hetero")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 with L because its comm frequency is depth-independent)."""
 from __future__ import annotations
 
-from .common import run_subprocess_bench
+from .common import record_output, run_subprocess_bench, write_json
 
 
 def main():
@@ -12,7 +12,9 @@ def main():
             args=["--modes", "dp,decoupled_pipelined",
                   "--layers", str(layers),
                   "--tag-prefix", f"layers_L{layers}_"])
-        print(out, end="")
+        print(record_output(out), end="")
+
+    write_json("layers")
 
 
 if __name__ == "__main__":

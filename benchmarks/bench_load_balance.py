@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import emit
+from .common import emit, write_json
 
 
 def main():
@@ -34,6 +34,8 @@ def main():
          f"compute_imbalance={st.compute_imbalance:.3f};"
          f"comm_imbalance={st.comm_imbalance:.3f};"
          "note=exact_by_construction")
+
+    write_json("load_balance")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,13 @@
 """Paper Table 2 analog: per-epoch runtime, GCN + GAT, all systems.
 
 Systems: DP baseline (DepComm halo exchange), naive TP, decoupled TP (DT),
-decoupled+pipelined (DT+IP) — on 8 workers (forced host devices).
+decoupled+pipelined (DT+IP) — on 8 workers (forced host devices), each on
+both engine backends (explicit shard_map vs pjit/constraint: same wire
+bytes, XLA-scheduled overlap may shift wall-clock).
 """
 from __future__ import annotations
 
-from .common import run_subprocess_bench
+from .common import record_output, run_subprocess_bench, write_json
 
 
 def main():
@@ -15,8 +17,10 @@ def main():
         out = run_subprocess_bench(
             "benchmarks._dist_gnn", devices=8,
             args=["--modes", modes, "--model", model,
+                  "--backends", "explicit,constraint",
                   "--tag-prefix", f"overall_{model}_"])
-        print(out, end="")
+        print(record_output(out), end="")
+    write_json("overall")
 
 
 if __name__ == "__main__":

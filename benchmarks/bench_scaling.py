@@ -1,7 +1,7 @@
 """Paper Fig. 12: per-epoch runtime vs cluster size (2/4/8 workers)."""
 from __future__ import annotations
 
-from .common import run_subprocess_bench
+from .common import record_output, run_subprocess_bench, write_json
 
 
 def main():
@@ -10,7 +10,9 @@ def main():
             "benchmarks._dist_gnn", devices=k,
             args=["--modes", "dp,decoupled_pipelined",
                   "--tag-prefix", f"scaling_k{k}_"])
-        print(out, end="")
+        print(record_output(out), end="")
+
+    write_json("scaling")
 
 
 if __name__ == "__main__":

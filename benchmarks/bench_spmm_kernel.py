@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import time
 
-from .common import emit
+from .common import emit, write_json
 
 
 def main():
@@ -50,6 +50,8 @@ def main():
     emit("spmm_pallas_interpret", t_pl * 1e6,
          f"nnzb={bsg.nnzb};density={bsg.density():.3f};"
          f"tile_flops={flops:.3e};vmem_per_step_kb={vmem_tile_kb:.0f}")
+
+    write_json("spmm_kernel")
 
 
 if __name__ == "__main__":

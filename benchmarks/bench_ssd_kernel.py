@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import time
 
-from .common import emit
+from .common import emit, write_json
 
 
 def main():
@@ -53,6 +53,8 @@ def main():
          f"err_vs_dense={err_p:.2e};vmem_per_step_kb={vmem_kb:.0f};"
          f"hbm_model_bytes={kernel_bytes:.3e};"
          f"qq_traffic_avoided={qq_bytes:.3e}")
+
+    write_json("ssd_kernel")
 
 
 if __name__ == "__main__":

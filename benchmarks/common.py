@@ -3,19 +3,73 @@
 Multi-worker benchmarks run as child processes with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=<k>`` so the main bench
 process keeps the single real CPU device (per the dry-run isolation rule).
+
+Every row a bench prints (directly via :func:`emit` or collected from a
+child's stdout via :func:`record_output`) is also buffered; calling
+:func:`write_json` at the end of a bench main persists the run as
+``results/BENCH_<name>.json`` so the perf trajectory is machine-readable
+instead of stdout-only.
 """
 from __future__ import annotations
 
+import json
 import os
+import re
 import subprocess
 import sys
 import time
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+RESULTS_DIR = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "results"))
+
+#: Rows buffered for :func:`write_json` (cleared on each write).
+_ROWS: list[dict] = []
+
+_ROW_RE = re.compile(r"^([\w+.\-]+),([0-9.eE+\-]+),(.*)$")
+
+
+def reset_rows() -> None:
+    """Drop buffered rows.  run.py calls this between bench modules so a
+    bench that died mid-run can't leak its rows into the next module's
+    JSON (write_json only clears on success)."""
+    _ROWS.clear()
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    _ROWS.append({"name": name, "us_per_call": float(us_per_call),
+                  "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def parse_rows(text: str) -> list[dict]:
+    """CSV rows (``tag,us,derived``) in ``text`` → list of row dicts."""
+    rows = []
+    for line in text.splitlines():
+        m = _ROW_RE.match(line.strip())
+        if m:
+            rows.append({"name": m.group(1),
+                         "us_per_call": float(m.group(2)),
+                         "derived": m.group(3)})
+    return rows
+
+
+def record_output(text: str) -> str:
+    """Buffer the CSV rows of a child bench's stdout; returns ``text`` so
+    callers can keep printing it."""
+    _ROWS.extend(parse_rows(text))
+    return text
+
+
+def write_json(bench_name: str, out_dir: str = RESULTS_DIR) -> str:
+    """Persist the buffered rows as ``<out_dir>/BENCH_<bench_name>.json``."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{bench_name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": bench_name, "entries": list(_ROWS)}, f, indent=2)
+        f.write("\n")
+    _ROWS.clear()
+    return path
 
 
 def time_epochs(step_fn, *args, warmup: int = 2, iters: int = 3) -> float:

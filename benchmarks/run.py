@@ -26,6 +26,8 @@ import sys
 import time
 import traceback
 
+from . import common
+
 MODULES = [
     "bench_load_balance",
     "bench_comm_volume",
@@ -54,6 +56,7 @@ def main() -> None:
     for name in mods:
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
+        common.reset_rows()
         try:
             importlib.import_module(f"benchmarks.{name}").main()
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)

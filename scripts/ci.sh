@@ -2,8 +2,9 @@
 # Tier-1 verification in one invocation (the ROADMAP's tier-1 command,
 # reproducible):
 #
-#   scripts/ci.sh            # fast lane, then the 8-device subprocess lane
-#   scripts/ci.sh --fast     # fast lane only (-m "not slow")
+#   scripts/ci.sh            # fast lane + bench smoke, then the 8-device
+#                            # subprocess lane
+#   scripts/ci.sh --fast     # fast lane + bench smoke only (-m "not slow")
 #
 # The main pytest process stays on the single real device.  The "slow"
 # tests launch child processes via tests/conftest.py::run_dist_prog, which
@@ -11,12 +12,20 @@
 # definition lives in conftest.DIST_XLA_FLAGS; the dist_progs assert on
 # it) so the runtime-engine collectives execute across 8 real device
 # buffers.
+#
+# The bench smoke runs the analytic half of bench_comm_volume (no
+# subprocess HLO census) so comm-volume formula regressions — like naive
+# TP summing layer-output dims instead of layer-input dims — fail tier-1
+# instead of silently skewing the Fig. 8 comparison.  Its asserts live in
+# benchmarks/bench_comm_volume.py.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -q -m "not slow"
+
+python -m benchmarks.bench_comm_volume --analytic-only
 
 if [[ "${1:-}" != "--fast" ]]; then
     python -m pytest -q -m slow

@@ -3,5 +3,7 @@
 # engine, and the chunk-based task scheduler with inter-chunk pipelining.
 from . import tp, chunks, decouple  # noqa: F401
 from .decouple import (TPBundle, TPGraph, prepare_bundle, padded_gnn_config,
-                       make_tp_train_fns, tp_decoupled_forward,
-                       tp_naive_forward)  # noqa: F401
+                       make_tp_loss_fn, make_tp_train_fns,
+                       tp_decoupled_forward, tp_decoupled_forward_constraint,
+                       tp_naive_forward,
+                       tp_naive_forward_constraint)  # noqa: F401

@@ -17,11 +17,20 @@ Three execution modes:
                                (paper's "TP" baseline, Figs. 8/10)
 
 Everything enters sharded execution through :func:`repro.runtime.engine`
-(the repo's version-portable shard_map wrapper) over one mesh axis; the
-``mesh`` argument of :func:`make_tp_train_fns` may be a
-:class:`repro.runtime.TPMesh` or a raw jax Mesh.  Backward passes are
+over one mesh axis; the ``mesh`` argument of :func:`make_tp_train_fns` may
+be a :class:`repro.runtime.TPMesh` or a raw jax Mesh.  Backward passes are
 derived by autodiff, which emits exactly the mirrored split/gather
 collectives of Algorithm 1's lines 15–24.
+
+Every mode runs on either engine backend (``backend="explicit"`` |
+``"constraint"``).  The explicit backend maps the per-shard bodies below
+through shard_map; the constraint backend traces the global-view
+``*_constraint`` forwards under jit, where the same transitions are
+sharding constraints XLA lowers to identical all-to-alls but may overlap.
+Under the constraint backend ``decoupled_pipelined`` is an alias of
+``decoupled``: §4.2.2's manual chunk interleaving exists to overlap comm
+with compute, which is exactly the scheduling freedom the constraint
+lowering hands to XLA, so there is no separate program to write.
 """
 from __future__ import annotations
 
@@ -39,6 +48,7 @@ from ..gnn import models as M
 from ..graph import format as gf
 from ..graph.synthetic import GraphData
 from ..runtime import collectives as C
+from ..runtime import constraint as K
 from ..runtime import engine
 from . import chunks as CH
 from . import tp
@@ -323,50 +333,193 @@ def tp_naive_forward(params, cfg: M.GNNConfig, graph: TPGraph,
 
 
 # ---------------------------------------------------------------------------
+# Global-view forwards for the constraint backend
+# ---------------------------------------------------------------------------
+
+def _aggregate_chunked_constraint(cg: L.ChunkedDev, z, w_chunk, axis: str):
+    """Chunk-scanned aggregation with the dim-sharded layout anchored
+    inside the scan body.
+
+    Without the in-scan anchors the SPMD partitioner is free to pick its
+    own shardings for the per-chunk intermediates, and in multi-layer
+    programs it drifts into replicate-everything plans (all-gathers +
+    "involuntary full rematerialization") that break the wire-byte parity
+    with the explicit backend.  Constraints are free when already
+    satisfied, so this is the same program when the partitioner behaves.
+    """
+    cs = cg.chunk_size
+
+    def body(_, chunk):
+        src, dst_local, w = chunk
+        msg = z[src] * w[:, None]
+        msg = K.constrain(msg, P(None, axis))
+        out = jax.ops.segment_sum(msg, dst_local, num_segments=cs + 1)
+        out = K.constrain(out, P(None, axis))
+        return None, out[:cs]
+
+    _, outs = jax.lax.scan(body, None, (cg.src, cg.dst_local, w_chunk))
+    outs = K.constrain(outs, P(None, None, axis))
+    out = outs.reshape(-1, z.shape[1])[: z.shape[0]]
+    return K.constrain(out, P(None, axis))
+
+
+def _edge_weights_constraint(params, cfg: M.GNNConfig, edges: L.EdgeListDev,
+                             h, axis: str):
+    """Global-view analog of :func:`_edge_weights_tp`: the GAT score
+    vectors are constrained replicated — the explicit backend's O(V)
+    all-gather share, as a layout fact the partitioner must realize —
+    before the O(E) per-edge indexing."""
+    if cfg.model == "gat":
+        p = params["layers"][-1]
+        sl = K.constrain(h @ p["a_l"], P(None))
+        sr = K.constrain(h @ p["a_r"], P(None))
+        e = jax.nn.leaky_relu(sl[edges.src] + sr[edges.dst], 0.2)
+        alpha = L.segment_softmax(e, edges.dst, sl.shape[0])
+        return cfg.gamma * alpha
+    return cfg.gamma * edges.weight
+
+
+def tp_decoupled_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
+                                    x, axis: str = "model"):
+    """Decoupled TP forward in global-view semantics for
+    ``engine(..., backend="constraint")``: same math as
+    :func:`tp_decoupled_forward`, with the split/gather all-to-alls
+    expressed as layout constraints.  Returns (V, C_pad) logits laid out
+    vertex-sharded ``P(axis, None)``."""
+    cg = graph.chunked
+    h = M.mlp_phase(params, cfg, x)                    # NN phase (V, C)
+    h = K.constrain(h, P(axis, None))                  # anchor: vertex-sharded
+    w_flat = _edge_weights_constraint(params, cfg, graph.edges, h, axis)
+    w_chunk = L.rechunk_edge_values(cg, w_flat)
+    z = tp.split_constraint(h, axis)                   # → dim-sharded
+    for _ in range(cfg.num_layers):
+        z = _aggregate_chunked_constraint(cg, z, w_chunk, axis)
+    return tp.gather_constraint(z, axis)               # → vertex-sharded
+
+
+def tp_naive_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
+                                x, axis: str = "model"):
+    """Coupled ("naive") TP in global-view semantics: gather/split
+    constraints per layer — the same 2L all-to-alls per forward as
+    :func:`tp_naive_forward`, scheduled by XLA."""
+    cg = graph.chunked
+    h = K.constrain(x, P(axis, None))                  # (V, D) vertex-sharded
+    n_layers = cfg.num_layers
+    for i in range(n_layers):
+        if cfg.model == "gat":
+            p = params["layers"][i]
+            hw = K.constrain(h @ p["w"], P(axis, None))
+            sl = K.constrain(hw @ p["a_l"], P(None))   # O(V) score share
+            sr = K.constrain(hw @ p["a_r"], P(None))
+            e = jax.nn.leaky_relu(sl[graph.edges.src] + sr[graph.edges.dst],
+                                  0.2)
+            alpha = L.segment_softmax(e, graph.edges.dst, sl.shape[0])
+            w_chunk = L.rechunk_edge_values(cg, alpha)
+            z = tp.split_constraint(hw, axis)
+            z = _aggregate_chunked_constraint(cg, z, w_chunk, axis)
+            h = tp.gather_constraint(z, axis)
+            if i < n_layers - 1:
+                h = jax.nn.elu(h)
+        else:
+            z = tp.split_constraint(h, axis)           # dim-sharded
+            z = _aggregate_chunked_constraint(cg, z, cg.weight, axis)
+            a = tp.gather_constraint(z, axis)          # vertex-sharded
+            p = params["layers"][i]
+            h = a @ p["w"] + p["b"]
+            if i < n_layers - 1:
+                # relu spelled multiplicatively: select-form relu transposes
+                # to select(mask, ct, 0) whose literal-zero branch the SPMD
+                # partitioner materializes dim-sharded and re-shards — a
+                # whole extra all-to-all of zeros.  h·(h>0) is the same
+                # function with a multiplicative transpose (ct·mask): no
+                # zero branch, and the backward matches the explicit
+                # path's collective schedule byte for byte.
+                h = h * (h > 0)
+            h = K.constrain(h, P(axis, None))
+    return h
+
+
+# ---------------------------------------------------------------------------
 # Loss / metrics / train-step factory
 # ---------------------------------------------------------------------------
 
-def _masked_loss_and_acc(logits, labels, mask, num_classes):
-    c_pad = logits.shape[-1]
-    if c_pad > num_classes:
-        neg = jnp.full((c_pad - num_classes,), -1e9, logits.dtype)
-        logits = logits.at[:, num_classes:].add(neg)
-    logp = jax.nn.log_softmax(logits)
-    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
-    loss_sum = jnp.sum(nll * mask)
-    pred = jnp.argmax(logits, axis=-1)
-    correct = jnp.sum((pred == labels).astype(jnp.float32) * mask)
-    return loss_sum, correct, jnp.sum(mask)
+def _make_tp_loss_and_acc(cfg: M.GNNConfig, mesh, axis: str, mode: str,
+                          backend: str):
+    """Engine-mapped (params, graph, x, labels, mask) → (loss, acc).
+
+    The one place both backends are built: per-shard body + psums under
+    ``"explicit"``, global-view body + constraint forwards under
+    ``"constraint"`` (identical numerics, see test_constraint_backend)."""
+    if backend == "constraint":
+        fwd_c = {
+            "decoupled": tp_decoupled_forward_constraint,
+            # XLA owns the comm schedule under this backend — manual chunk
+            # interleaving has nothing left to pipeline (module docstring).
+            "decoupled_pipelined": tp_decoupled_forward_constraint,
+            "naive": tp_naive_forward_constraint,
+        }[mode]
+
+        def global_loss(params, graph, x, labels, mask):
+            logits = fwd_c(params, cfg, graph, x, axis=axis)
+            loss_sum, correct, cnt = M.masked_loss_and_acc(
+                logits, labels, mask, graph.num_classes)
+            return (loss_sum / jnp.maximum(cnt, 1.0),
+                    correct / jnp.maximum(cnt, 1.0))
+
+        body = global_loss
+    else:
+        fwd = {
+            "decoupled": partial(tp_decoupled_forward, pipelined=False),
+            "decoupled_pipelined": partial(tp_decoupled_forward,
+                                           pipelined=True),
+            "naive": tp_naive_forward,
+        }[mode]
+
+        def shard_loss(params, graph, x_local, labels_local, mask_local):
+            logits = fwd(params, cfg, graph, x_local, axis=axis)
+            loss_sum, correct, cnt = M.masked_loss_and_acc(
+                logits, labels_local, mask_local, graph.num_classes)
+            loss_sum = C.psum(loss_sum, axis)
+            correct = C.psum(correct, axis)
+            cnt = C.psum(cnt, axis)
+            return (loss_sum / jnp.maximum(cnt, 1.0),
+                    correct / jnp.maximum(cnt, 1.0))
+
+        body = shard_loss
+
+    return engine(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(axis, None), P(axis), P(axis)),
+        out_specs=(P(), P()), backend=backend)
+
+
+def make_tp_loss_fn(cfg: M.GNNConfig, bundle: TPBundle, mesh,
+                    axis: str = "model", mode: str = "decoupled_pipelined",
+                    backend: str = "explicit"):
+    """Differentiable (params, mask) → scalar loss for a given backend.
+
+    The handle backend-equivalence tests take grads through."""
+    smapped = _make_tp_loss_and_acc(cfg, mesh, axis, mode, backend)
+
+    def loss_fn(params, mask):
+        loss, _ = smapped(params, bundle.graph, bundle.features,
+                          bundle.labels, mask)
+        return loss
+
+    return loss_fn
 
 
 def make_tp_train_fns(cfg: M.GNNConfig, bundle: TPBundle, mesh,
                       optimizer, axis: str = "model",
-                      mode: str = "decoupled_pipelined"):
-    """Build jitted (init_state, train_step, eval_fn) for TP training.
+                      mode: str = "decoupled_pipelined",
+                      backend: str = "explicit"):
+    """Build jitted (train_step, eval_fn) for TP training.
 
-    ``mode`` ∈ {decoupled, decoupled_pipelined, naive}.
+    ``mode`` ∈ {decoupled, decoupled_pipelined, naive};
+    ``backend`` ∈ {explicit, constraint} selects the engine path.
     Params are replicated; activations/labels are vertex-sharded on ``axis``.
     """
-    fwd = {
-        "decoupled": partial(tp_decoupled_forward, pipelined=False),
-        "decoupled_pipelined": partial(tp_decoupled_forward, pipelined=True),
-        "naive": tp_naive_forward,
-    }[mode]
-
-    def shard_loss(params, graph, x_local, labels_local, mask_local):
-        logits = fwd(params, cfg, graph, x_local, axis=axis)
-        loss_sum, correct, cnt = _masked_loss_and_acc(
-            logits, labels_local, mask_local, graph.num_classes)
-        loss_sum = C.psum(loss_sum, axis)
-        correct = C.psum(correct, axis)
-        cnt = C.psum(cnt, axis)
-        return loss_sum / jnp.maximum(cnt, 1.0), correct / jnp.maximum(cnt,
-                                                                       1.0)
-
-    smapped = engine(
-        shard_loss, mesh=mesh,
-        in_specs=(P(), P(), P(axis, None), P(axis), P(axis)),
-        out_specs=(P(), P()))
+    smapped = _make_tp_loss_and_acc(cfg, mesh, axis, mode, backend)
 
     def loss_fn(params, mask):
         loss, _ = smapped(params, bundle.graph, bundle.features,

@@ -13,22 +13,30 @@ tensor-parallel axis:
 
 Both are single all-to-all collectives moving ``V·D/N`` elements per
 device regardless of graph topology — the paper's load-balance argument.
-These functions must run inside a body entered via
-:func:`repro.runtime.engine` (or :func:`repro.runtime.smap`) with ``axis``
-bound on the mesh; the collectives themselves come from
-:mod:`repro.runtime.collectives`, the repo's single communication layer.
+Each transition exists in two spellings, one per engine backend:
 
-On TPU the all-to-all runs over ICI instead of NCCL/Ethernet; under ``pjit``
-the same transition can be expressed as a sharding constraint
-``P(None, axis) → P(axis, None)`` which lowers to an identical all-to-all HLO
-(used by the fused "beyond-paper" path so XLA may overlap it).
+* :func:`split` / :func:`gather` — explicit all-to-alls from
+  :mod:`repro.runtime.collectives`; must run inside a per-shard body
+  entered via ``runtime.engine(..., backend="explicit")`` (or
+  :func:`repro.runtime.smap`) with ``axis`` bound on the mesh.
+* :func:`split_constraint` / :func:`gather_constraint` — the same
+  transitions as layout re-shardings (``P(axis, None) ↔ P(None, axis)``)
+  for global-view bodies traced by ``runtime.engine(...,
+  backend="constraint")`` (:mod:`repro.runtime.constraint`).  XLA lowers
+  each to an identical all-to-all HLO — same wire bytes, verified by
+  ``benchmarks.bench_comm_volume`` — but is free to schedule and overlap
+  it with compute.
+
+On TPU the all-to-all runs over ICI instead of NCCL/Ethernet.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from ..runtime import collectives as C
+from ..runtime import constraint as K
 from ..runtime.mesh import padded_size  # noqa: F401  (canonical home)
 
 
@@ -40,6 +48,24 @@ def split(h: jax.Array, axis: str = "model") -> jax.Array:
 def gather(z: jax.Array, axis: str = "model") -> jax.Array:
     """dim-sharded (V, D/N) → vertex-sharded (V/N, D)."""
     return C.all_to_all(z, axis, split_axis=0, concat_axis=1, tiled=True)
+
+
+def split_constraint(h: jax.Array, axis: str = "model") -> jax.Array:
+    """Constraint-backend split: global (V, D) re-laid P(axis,·) → P(·,axis).
+
+    Must run inside a body traced by ``runtime.engine(...,
+    backend="constraint")``; a no-op outside one (single-device reference).
+    Both sides of the transition are anchored so the transposed constraint
+    pair reshards the cotangent exactly where autodiff of the explicit
+    :func:`split` puts its mirrored all-to-all (see
+    :func:`repro.runtime.constraint.layout_cast`).
+    """
+    return K.layout_cast(h, P(None, axis), src_spec=P(axis, None))
+
+
+def gather_constraint(z: jax.Array, axis: str = "model") -> jax.Array:
+    """Constraint-backend gather: global (V, D) re-laid P(·,axis) → P(axis,·)."""
+    return K.layout_cast(z, P(axis, None), src_spec=P(None, axis))
 
 
 def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0) -> jax.Array:

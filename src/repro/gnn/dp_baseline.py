@@ -27,6 +27,7 @@ from ..graph import partition as gp
 from ..graph.format import Graph
 from ..graph.synthetic import GraphData
 from ..runtime import collectives as C
+from ..runtime import constraint as K
 from ..runtime import engine
 from . import models as M
 
@@ -167,34 +168,119 @@ def dp_coupled_forward(params, cfg: M.GNNConfig, g: DPGraph, x_local,
     return h
 
 
+# ---------------------------------------------------------------------------
+# Global-view forward for the constraint backend
+# ---------------------------------------------------------------------------
+
+def _halo_exchange_constraint(h: jax.Array, g: DPGraph,
+                              axis: str) -> jax.Array:
+    """Global-view DepComm: (k, n_local_max, D) → (k, halo_size, D).
+
+    The explicit path's per-worker send buffers become one (k, k, m, D)
+    tensor whose axis-0↔1 transpose, re-constrained onto the worker axis,
+    is the halo all-to-all for XLA's partitioner to lower and schedule."""
+    d = h.shape[-1]
+    take = jnp.where(g.send_idx_local >= 0, g.send_idx_local, 0)
+    send = jax.vmap(
+        lambda hj, tj: jnp.take(hj, tj.reshape(-1), axis=0, mode="clip"))(
+        h, take)                                        # (k, k·m, D)
+    send = jnp.where((g.send_idx_local >= 0).reshape(g.k, -1, 1), send, 0.0)
+    send = K.constrain(send.reshape(g.k, g.k, g.m, d),
+                       P(axis, None, None, None))       # [sender, receiver]
+    recv = send.transpose(1, 0, 2, 3)                   # [receiver, sender]
+    recv = K.constrain(recv, P(axis, None, None, None))
+    halo = jnp.zeros((g.k, g.halo_size + 1, d), h.dtype)
+    halo = jax.vmap(lambda hb, pos, r: hb.at[pos].set(r, mode="drop"))(
+        halo, g.recv_pos.reshape(g.k, -1), recv.reshape(g.k, -1, d))
+    return halo[:, :-1]
+
+
+def dp_coupled_forward_constraint(params, cfg: M.GNNConfig, g: DPGraph, x,
+                                  axis: str = "model"):
+    """Coupled DP-GNN in global-view semantics for
+    ``engine(..., backend="constraint")``: same math as
+    :func:`dp_coupled_forward` on the stacked (k, n_local_max, ·) layout."""
+
+    def agg_one(h_ext_i, src_i, dst_i, w_i):
+        msg = jnp.take(h_ext_i, src_i, axis=0) * w_i[:, None]
+        return jax.ops.segment_sum(
+            msg, dst_i, num_segments=g.n_local_max + 1)[: g.n_local_max]
+
+    h = x
+    for i in range(cfg.num_layers):
+        h = K.constrain(h, P(axis, None, None))
+        halo = _halo_exchange_constraint(h, g, axis)
+        h_ext = jnp.concatenate([h, halo], axis=1)
+        a = jax.vmap(agg_one)(h_ext, g.src, g.dst, g.weight)
+        p = params["layers"][i]
+        h = a @ p["w"] + p["b"]
+        if i < cfg.num_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def _make_dp_loss_and_acc(cfg: M.GNNConfig, num_classes: int, mesh,
+                          axis: str, backend: str):
+    """Engine-mapped (params, g, x, labels, mask) → (loss, acc)."""
+    if backend == "constraint":
+
+        def global_loss(params, g, x, labels, mask):
+            logits = dp_coupled_forward_constraint(params, cfg, g, x,
+                                                   axis=axis)
+            mask = mask * g.valid_rows
+            loss_sum, correct, cnt = M.masked_loss_and_acc(
+                logits, labels, mask, num_classes)
+            return (loss_sum / jnp.maximum(cnt, 1.0),
+                    correct / jnp.maximum(cnt, 1.0))
+
+        body = global_loss
+    else:
+
+        def shard_loss(params, g, x_local, labels_local, mask_local):
+            # sharded args arrive with a leading worker axis of size 1
+            x_local = x_local[0]
+            labels_local = labels_local[0]
+            mask_local = mask_local[0]
+            logits = dp_coupled_forward(params, cfg, g, x_local, axis=axis)
+            mask = mask_local * g.valid_rows[C.axis_index(axis)]
+            loss_sum, correct, cnt = M.masked_loss_and_acc(
+                logits, labels_local, mask, num_classes)
+            return (C.psum(loss_sum, axis) / jnp.maximum(
+                        C.psum(cnt, axis), 1.0),
+                    C.psum(correct, axis) / jnp.maximum(
+                        C.psum(cnt, axis), 1.0))
+
+        body = shard_loss
+
+    return engine(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(axis, None, None), P(axis, None),
+                  P(axis, None)),
+        out_specs=(P(), P()), backend=backend)
+
+
+def make_dp_loss_fn(cfg: M.GNNConfig, bundle: DPBundle, mesh,
+                    axis: str = "model", backend: str = "explicit"):
+    """Differentiable (params, mask) → scalar loss for a given backend."""
+    smapped = _make_dp_loss_and_acc(cfg, bundle.num_classes, mesh, axis,
+                                    backend)
+
+    def loss_fn(params, mask):
+        loss, _ = smapped(params, bundle.graph, bundle.features,
+                          bundle.labels, mask)
+        return loss
+
+    return loss_fn
+
+
 def make_dp_train_fns(cfg: M.GNNConfig, bundle: DPBundle, mesh,
-                      optimizer, axis: str = "model"):
-    """Jitted (train_step, evaluate) for the DP baseline (GCN)."""
+                      optimizer, axis: str = "model",
+                      backend: str = "explicit"):
+    """Jitted (train_step, evaluate) for the DP baseline (GCN).
 
-    def shard_loss(params, g, x_local, labels_local, mask_local):
-        # sharded args arrive with a leading worker axis of size 1
-        x_local = x_local[0]
-        labels_local = labels_local[0]
-        mask_local = mask_local[0]
-        logits = dp_coupled_forward(params, cfg, g, x_local, axis=axis)
-        c_pad = logits.shape[-1]
-        if c_pad > bundle.num_classes:
-            logits = logits.at[:, bundle.num_classes:].add(-1e9)
-        logp = jax.nn.log_softmax(logits)
-        nll = -jnp.take_along_axis(logp, labels_local[:, None], axis=1)[:, 0]
-        mask = mask_local * g.valid_rows[C.axis_index(axis)]
-        loss_sum = C.psum(jnp.sum(nll * mask), axis)
-        pred = jnp.argmax(logits, axis=-1)
-        correct = C.psum(
-            jnp.sum((pred == labels_local).astype(jnp.float32) * mask), axis)
-        cnt = C.psum(jnp.sum(mask), axis)
-        return loss_sum / jnp.maximum(cnt, 1.0), \
-            correct / jnp.maximum(cnt, 1.0)
-
-    smapped = engine(
-        shard_loss, mesh=mesh,
-        in_specs=(P(), P(), P(axis, None, None), P(axis, None), P(axis, None)),
-        out_specs=(P(), P()))
+    ``backend`` ∈ {explicit, constraint} selects the engine path."""
+    smapped = _make_dp_loss_and_acc(cfg, bundle.num_classes, mesh, axis,
+                                    backend)
 
     def loss_fn(params, mask):
         loss, _ = smapped(params, bundle.graph, bundle.features,

@@ -168,6 +168,23 @@ def forward(params, cfg: GNNConfig, g: EdgeListDev, x,
     return coupled_forward(params, cfg, g, x, etypes)
 
 
+def masked_loss_and_acc(logits, labels, mask, num_classes):
+    """Masked NLL sum, correct count, and mask count over the trailing
+    class dim (padded classes beyond ``num_classes`` are nulled with a
+    -1e9 offset).  Works on (V, C) and stacked (k, n_local, C) layouts;
+    the distributed engines either psum the three sums per shard
+    (explicit backend) or take them globally (constraint backend)."""
+    c_pad = logits.shape[-1]
+    if c_pad > num_classes:
+        logits = logits.at[..., num_classes:].add(-1e9)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss_sum = jnp.sum(nll * mask)
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == labels).astype(jnp.float32) * mask)
+    return loss_sum, correct, jnp.sum(mask)
+
+
 def cross_entropy(logits, labels, mask):
     logp = jax.nn.log_softmax(logits)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]

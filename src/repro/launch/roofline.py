@@ -34,7 +34,27 @@ _OP_RE = re.compile(
     r"=\s+(\(?[^=]*?)\s*"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
     r"(-start|-done)?\(")
+# replica_groups appears in three spellings: the compact iota form
+# `replica_groups=[G,S]<=[N]` (G groups of size S), the literal form
+# `replica_groups={{0,1,...},{...}}` (size = ids in the first group), and
+# the empty literal `replica_groups={}` (one group of ALL participants —
+# resolved from the module's num_partitions).
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_EMPTY_RE = re.compile(r"replica_groups=\{\s*\}")
+_NUM_PARTITIONS_RE = re.compile(r"num_partitions=(\d+)")
+
+
+def _group_size(line: str, all_participants: int = 1) -> int:
+    gm = _GROUPS_RE.search(line)
+    if gm:
+        return int(gm.group(2))
+    gm = _GROUPS_LIT_RE.search(line)
+    if gm:
+        return len(gm.group(1).split(","))
+    if _GROUPS_EMPTY_RE.search(line):
+        return all_participants
+    return 1
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
@@ -53,8 +73,11 @@ _WHILE_RE = re.compile(r"while\(.*?condition=%?([\w\.\-]+),\s*"
                        r"body=%?([\w\.\-]+)")
 _CONST_RE = re.compile(r"=\s+s32\[\]\s+constant\((\d+)\)")
 _CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+# Result type is a plain shape or a tuple type; tuple types contain no
+# nested parens but DO contain `/*index=5*/` comments (with `=` and `*`),
+# so the tuple branch must run to the first `)`, not stop at `=`.
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
-                     r"((?:\([^=]*?\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+                     r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+"
                      r"([\w\-]+)\(")
 _OPERAND_RE = re.compile(r"%([\w\.\-]+)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
@@ -131,6 +154,8 @@ def hlo_census(hlo_text: str) -> dict:
     """
     comps, entry = _split_computations(hlo_text)
     mult = _multipliers(comps, entry)
+    pm = _NUM_PARTITIONS_RE.search(hlo_text)
+    num_partitions = int(pm.group(1)) if pm else 1
 
     flops = 0.0
     bytes_accessed = 0.0
@@ -170,8 +195,7 @@ def hlo_census(hlo_text: str) -> dict:
             if base in _COLLECTIVES:
                 if op.endswith("-done"):
                     continue
-                gm = _GROUPS_RE.search(line)
-                g = int(gm.group(2)) if gm else 1
+                g = _group_size(line, num_partitions)
                 coll[base] += rbytes * _wire_factor(base, g) * f_comp
                 coll_counts[base] += f_comp
                 bytes_accessed += 2 * rbytes * f_comp

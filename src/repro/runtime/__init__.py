@@ -2,17 +2,37 @@
 
 Public surface:
 
-* :func:`engine`       — the one way to enter sharded execution
-                         (version-portable shard_map + spec validation)
-* :func:`smap`         — same, with an explicit mesh argument required
+* :func:`engine`       — the one way to enter sharded execution.  Two
+                         selectable backends behind one contract:
+                         ``engine(fn, in_specs, out_specs, mesh=...,
+                         backend="explicit"|"constraint")``.
+                         ``"explicit"`` (default) is version-portable
+                         shard_map: ``fn`` is a per-shard body and every
+                         collective is spelled by hand via
+                         :mod:`collectives`.  ``"constraint"`` is
+                         ``jax.jit`` + ``with_sharding_constraint``
+                         (:mod:`constraint`): ``fn`` has global-view
+                         semantics, layout transitions are requested with
+                         :func:`constrain`, and XLA schedules/overlaps the
+                         lowered collectives (same wire bytes, different
+                         freedom — see benchmarks/bench_comm_volume.py).
+* :func:`smap`         — explicit backend with a required mesh argument
+* :func:`constrain`    — the constraint backend's layout-transition op
 * :class:`TPMesh` / :func:`tp_mesh` — the paper's 1-D "model" mesh with
                          the divisibility/padding contract attached
 * :mod:`collectives`   — axis_index / axis_size / psum / all_gather /
-                         all_to_all used inside engine bodies
+                         all_to_all used inside explicit engine bodies
 
 No other module may call ``shard_map`` (any spelling) directly.
 """
 from . import collectives  # noqa: F401
+from .constraint import (  # noqa: F401
+    constrain,
+    constraint_engine,
+    current_mesh,
+    layout_cast,
+    mesh_context,
+)
 from .mesh import (  # noqa: F401
     DEFAULT_AXIS,
     TPMesh,
@@ -34,4 +54,6 @@ __all__ = [
     "DEFAULT_AXIS", "TPMesh", "as_mesh", "padded_size", "tp_mesh",
     "CHECK_KW", "JAX_VERSION", "SUPPORTED_JAX", "engine",
     "resolve_shard_map", "smap", "validate_specs", "collectives",
+    "constrain", "constraint_engine", "current_mesh", "layout_cast",
+    "mesh_context",
 ]

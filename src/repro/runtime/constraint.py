@@ -1,0 +1,136 @@
+"""Constraint-backend engine: ``jax.jit`` + ``with_sharding_constraint``.
+
+The explicit backend (:mod:`repro.runtime.smap`) enters shard_map and the
+body spells every collective by hand — the all-to-alls are real ops the
+scheduler must run where they stand, serialized against compute.  This
+module implements the same ``engine(fn, in_specs, out_specs, mesh=...)``
+contract a second way: the function keeps *global* (automatic-sharding)
+semantics, inputs/outputs are laid out via jit shardings, and the paper's
+gather/split layout transitions become :func:`constrain` re-shardings
+(``P(axis, None) → P(None, axis)``).  XLA's SPMD partitioner lowers each
+transition to the identical all-to-all HLO (same wire bytes — verified by
+``benchmarks.bench_comm_volume``'s census) but owns its *schedule*, so it
+may hoist, fuse, and overlap the collectives with compute instead of
+running them inline.
+
+Semantics contract (the one real difference between backends):
+
+* ``backend="explicit"`` — ``fn`` is a per-shard body; arrays arrive as
+  local shards and cross-worker traffic uses
+  :mod:`repro.runtime.collectives`.
+* ``backend="constraint"`` — ``fn`` is a global-view function; arrays
+  arrive whole, reductions are plain ``jnp`` ops, and layout transitions
+  are requested with :func:`constrain` (no manual collectives).
+
+While the engine traces ``fn`` the mesh is exposed through a context
+variable so :func:`constrain` (and the ``core.tp`` constraint variants
+built on it) can name mesh axes without threading a mesh argument through
+every call.  Outside an active context :func:`constrain` is a no-op, so
+global-semantics code also runs unmodified on a single device.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .mesh import as_mesh, tp_mesh
+from .smap import validate_specs
+
+#: Mesh visible to :func:`constrain` while a constraint engine traces.
+_ACTIVE_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_constraint_mesh", default=None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    """Expose ``mesh`` to :func:`constrain` for the duration of a trace."""
+    token = _ACTIVE_MESH.set(as_mesh(mesh))
+    try:
+        yield
+    finally:
+        _ACTIVE_MESH.reset(token)
+
+
+def current_mesh():
+    """The mesh of the innermost active constraint engine (or None)."""
+    return _ACTIVE_MESH.get()
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """Request layout ``spec`` for ``x`` on the active constraint mesh.
+
+    This is the constraint backend's "collective": constraining an array
+    whose producer laid it out differently makes the SPMD partitioner
+    materialize the transition (``P(axis, None) → P(None, axis)`` lowers
+    to the paper's all-to-all).  No-op when no constraint engine is
+    tracing, so shared code also runs under the explicit backend's
+    reference path or on a single device.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def layout_cast(x: jax.Array, spec: P,
+                src_spec: P | None = None) -> jax.Array:
+    """A layout *transition*: anchor ``x`` at ``src_spec``, then at ``spec``.
+
+    A single ``with_sharding_constraint`` only pins the target side, and —
+    being its own transpose — pins the *cotangent* to the target layout
+    too, which is the wrong direction for a transition (autodiff of the
+    explicit backend's all-to-all emits the mirrored collective, laid out
+    like the transition's input).  Anchoring both sides is self-mirroring:
+    the transposed pair constrains the cotangent back to ``src_spec`` at
+    exactly this point, so the backward program reshards where the
+    explicit path's transposed all-to-all sits.  No-op outside an active
+    constraint engine.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if src_spec is not None:
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, src_spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _is_spec_leaf(x) -> bool:
+    return x is None or isinstance(x, P)
+
+
+def _shardings(mesh, specs):
+    """specs pytree (PartitionSpec/None leaves) → NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda s: None if s is None else NamedSharding(mesh, s),
+        specs, is_leaf=_is_spec_leaf)
+
+
+def constraint_engine(fn: Callable, in_specs, out_specs, *,
+                      mesh=None) -> Callable:
+    """``engine(..., backend="constraint")`` implementation.
+
+    ``fn`` must have global-view semantics (see module docstring).  The
+    specs carry the same meaning as the explicit backend's: the global
+    layout of each argument/output on ``mesh`` — here they become jit
+    ``in_shardings``/``out_shardings`` instead of shard_map specs.
+    Returns a jitted callable (composable under further ``jax.jit`` and
+    autodiff, where the inner shardings act as constraints).
+    """
+    if mesh is None:
+        mesh = tp_mesh()
+    m = as_mesh(mesh)
+    validate_specs(m, in_specs, "in_specs")
+    validate_specs(m, out_specs, "out_specs")
+
+    def traced(*args):
+        with mesh_context(m):
+            return fn(*args)
+
+    return jax.jit(traced, in_shardings=_shardings(m, in_specs),
+                   out_shardings=_shardings(m, out_specs))

@@ -110,13 +110,39 @@ def smap(fn: Callable, mesh, in_specs, out_specs, *,
 
 
 def engine(fn: Callable, in_specs, out_specs, *, mesh=None,
-           check: bool = False) -> Callable:
+           check: bool = False, backend: str = "explicit") -> Callable:
     """The repo-wide sharded-execution entry point.
 
     ``mesh`` may be a TPMesh, a raw jax Mesh, or None (a fresh 1-D "model"
     mesh over every visible device).  Returns the mapped callable; wrap in
     ``jax.jit`` at the call site as usual.
+
+    ``backend`` selects how sharded execution is realized:
+
+    * ``"explicit"`` (default) — shard_map; ``fn`` is a per-shard body
+      using :mod:`repro.runtime.collectives` for cross-worker traffic.
+    * ``"constraint"`` — ``jax.jit`` + ``with_sharding_constraint``
+      (:mod:`repro.runtime.constraint`); ``fn`` has global-view semantics
+      and expresses layout transitions via
+      :func:`repro.runtime.constraint.constrain`, letting XLA schedule
+      and overlap the lowered collectives.
+
+    The two backends expect *differently written* ``fn`` bodies (per-shard
+    vs global) but share the spec vocabulary and produce matching numerics
+    — see ``tests/test_constraint_backend.py``.
     """
+    if backend == "constraint":
+        if check:
+            raise ValueError(
+                "check=True is a shard_map replication check; the "
+                "constraint backend has no per-shard bodies to check — "
+                "drop the flag or use backend='explicit'")
+        from .constraint import constraint_engine
+        return constraint_engine(fn, in_specs, out_specs, mesh=mesh)
+    if backend != "explicit":
+        raise ValueError(
+            f"engine backend must be 'explicit' or 'constraint', "
+            f"got {backend!r}")
     if mesh is None:
         mesh = tp_mesh()
     return smap(fn, mesh, in_specs, out_specs, check=check)
