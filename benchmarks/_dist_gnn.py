@@ -8,7 +8,11 @@ dims) combination passed on the command line.  Prints CSV rows:
 
 Tags are ``<prefix><mode>`` for the default explicit backend and
 ``<prefix><mode>_constraint`` for the constraint backend, so existing
-consumers of the explicit rows are unaffected.
+consumers of the explicit rows are unaffected.  ``--data R`` trains on a
+hybrid (data=R, model=devices/R) mesh instead of pure TP; hybrid rows
+get a ``_d<R>x<model>`` suffix and report ``replicas=R`` so the census
+columns (a2a = model-axis gather/split, ar = reductions incl. the
+data-axis grad all-reduce) can be split by axis kind.
 """
 from __future__ import annotations
 
@@ -37,6 +41,9 @@ def main():
     ap.add_argument("--tag-prefix", default="")
     ap.add_argument("--census", action="store_true",
                     help="also report collective wire bytes per epoch")
+    ap.add_argument("--data", type=int, default=1,
+                    help="replica-group count: (data, model) hybrid mesh "
+                         "with model = devices/data; 1 = pure TP")
     args = ap.parse_args()
 
     import jax
@@ -47,10 +54,15 @@ def main():
     from repro.gnn import models as M
     from repro.graph import barabasi_albert, sbm_power_law
     from repro.launch.roofline import hlo_census
-    from repro.runtime import tp_mesh
+    from repro.runtime import hybrid_mesh, tp_mesh
 
-    k = len(jax.devices())
-    mesh = tp_mesh(k)
+    n_dev = len(jax.devices())
+    if args.data > 1:
+        mesh = hybrid_mesh(data=args.data)   # model inferred, strict
+        k, replicas = mesh.size, mesh.data_size
+    else:
+        mesh = tp_mesh(n_dev)
+        k, replicas = n_dev, 1
     gen = sbm_power_law if args.graph == "sbm" else barabasi_albert
     kw = dict(n=args.n, num_classes=args.classes, feat_dim=args.feat_dim,
               seed=7)
@@ -65,14 +77,15 @@ def main():
         # graph prep / config / params are backend-independent — only the
         # engine-mapped step differs per backend
         if mode == "dp":
-            bundle = DP.prepare_dp_bundle(data, k=k)
+            bundle = DP.prepare_dp_bundle(data, k=k, n_replicas=replicas)
             cfg = M.GNNConfig(model=args.model, in_dim=args.feat_dim,
                               hidden_dim=args.hidden,
                               num_classes=args.classes,
                               num_layers=args.layers, decoupled=False)
         else:
             bundle = D.prepare_bundle(data, n_workers=k,
-                                      n_chunks=args.chunks)
+                                      n_chunks=args.chunks,
+                                      n_replicas=replicas)
             cfg = D.padded_gnn_config(data, bundle, model=args.model,
                                       hidden_dim=args.hidden,
                                       num_layers=args.layers)
@@ -94,7 +107,8 @@ def main():
                 p, o, loss = step(p, o)
             jax.block_until_ready(loss)
             dt = (time.perf_counter() - t0) / args.epochs
-            derived = f"workers={k};loss={float(loss):.3f}"
+            derived = f"workers={k};replicas={replicas};" \
+                      f"loss={float(loss):.3f}"
             if args.census:
                 try:
                     txt = step.lower(p, o).compile().as_text()
@@ -106,6 +120,8 @@ def main():
                 except Exception as e:  # noqa: BLE001
                     derived += f";census_error={type(e).__name__}"
             tag = mode if backend == "explicit" else f"{mode}_{backend}"
+            if replicas > 1:
+                tag += f"_d{replicas}x{k}"
             print(f"{args.tag_prefix}{tag},{dt*1e6:.1f},{derived}",
                   flush=True)
 

@@ -24,7 +24,8 @@ F32 = 4
 
 
 def analytic_volumes(n: int, feat: int, hidden: int, classes: int, L: int,
-                     halo_rows: int) -> dict:
+                     halo_rows: int, data: int = 1, model: int | None = None,
+                     param_bytes: int = 0) -> dict:
     """Forward-pass bytes/epoch summed over all workers (paper §3.2).
 
     ``dims`` are the per-layer *input* dims [feat, hidden, ..., hidden]:
@@ -32,18 +33,43 @@ def analytic_volumes(n: int, feat: int, hidden: int, classes: int, L: int,
     (shape V × dims[i]) — layer *outputs* only ever move as the next
     layer's input, so summing output dims would both drop the feat-dim
     move (the largest) and double-count nothing in its place.
+
+    Hybrid DP×TP changes both columns of the fleet total.  Model-axis:
+    every replica group redundantly runs the same gather/split
+    all-to-alls (after ``replica_gather`` each group holds the full
+    activation block), so the fleet a2a bytes scale with ``data``.
+    Data-axis: each of the ``model`` groups ring-all-reduces the
+    replicated parameter gradients — ``2·(data−1)·param_bytes`` wire
+    bytes per group, zero for pure TP (``data=1``).  The *per-group*
+    a2a volume is what the paper's formulas give and is
+    replica-count-independent; keeping the two kinds of bytes in
+    separate keys (scaled to the same fleet-total convention) is what
+    lets the benches expose the a2a-vs-grad-allreduce tradeoff.
     """
+    if data > 1 and model is None:
+        raise ValueError(
+            "hybrid accounting (data > 1) needs the model-group count — "
+            "pass model=<TP degree> (a silent default would undercount "
+            "grad_allreduce_data by the group factor)")
+    if data > 1 and param_bytes <= 0:
+        raise ValueError(
+            "hybrid accounting (data > 1) needs param_bytes > 0 — a "
+            "defaulted 0 would silently zero the data-axis "
+            "grad_allreduce_data term")
     dims = [feat] + [hidden] * (L - 1) + [classes]
     return {
-        # naive TP: split + gather per layer at the layer-input dim
-        "naive": sum(2 * n * d * F32 for d in dims[:-1]),
+        # naive TP: split + gather per layer at the layer-input dim,
+        # executed once per replica group
+        "naive": data * sum(2 * n * d * F32 for d in dims[:-1]),
         # decoupled: one split + one gather at the class (NN-output) dim
-        "decoupled": n * classes * F32 * 2,
+        "decoupled": data * n * classes * F32 * 2,
         # DP: per layer, every remote src row at the layer-input dim
-        "dp": sum(halo_rows * d * F32 for d in dims[:-1]),
+        "dp": data * sum(halo_rows * d * F32 for d in dims[:-1]),
         # all-to-all collectives per epoch: forward + mirrored backward
         "naive_per_epoch": 4 * L,
         "decoupled_per_epoch": 4,
+        # data-axis grad all-reduce (ring), summed over the model groups
+        "grad_allreduce_data": 2 * (data - 1) * param_bytes * (model or 1),
     }
 
 
@@ -65,14 +91,32 @@ def main(argv=()):
     # --- analytic (paper §3.2) ---
     plan = halo_plan(g, chunk_partition(g, k))
     halo_rows = int((plan.send_idx >= 0).sum())
+    # GCN params for the standard workload (grad bytes of the data axis)
+    param_bytes = (feat * hidden + hidden + hidden * classes + classes) * F32
     vols = analytic_volumes(n=g.n, feat=feat, hidden=hidden,
                             classes=classes, L=L, halo_rows=halo_rows)
+    # hybrid DP×TP on the same 8 devices: (data=2, model=4)
+    hyb = analytic_volumes(n=g.n, feat=feat, hidden=hidden,
+                           classes=classes, L=L, halo_rows=halo_rows,
+                           data=2, model=4, param_bytes=param_bytes)
     # regression pins for the standard workload (ci.sh smoke): naive moves
     # the feat-dim activations — 2·4096·(128+64)·4 — not the output dims.
     assert vols["naive"] == 2 * 4096 * (128 + 64) * 4, vols["naive"]
     assert vols["decoupled"] == 2 * 4096 * 16 * 4, vols["decoupled"]
     assert vols["naive"] > vols["decoupled"] > 0
     assert vols["dp"] > 0 and vols["naive_per_epoch"] == 8
+    # data-axis pins: pure TP has no grad all-reduce term; two replica
+    # groups of four workers ring-reduce the replicated grads — the bytes
+    # are a *data-axis* quantity, invisible to the model-axis formulas.
+    assert vols["grad_allreduce_data"] == 0, vols["grad_allreduce_data"]
+    assert param_bytes == 37184, param_bytes
+    assert hyb["grad_allreduce_data"] == 2 * 1 * param_bytes * 4, \
+        hyb["grad_allreduce_data"]
+    # fleet-total convention: every replica group redundantly runs the
+    # model-axis all-to-alls, so hybrid a2a bytes are data× the pure run
+    assert hyb["naive"] == 2 * vols["naive"] and \
+        hyb["decoupled"] == 2 * vols["decoupled"], \
+        "hybrid fleet a2a must scale with the replica count"
 
     emit("comm_volume_analytic_naive_tp", 0.0,
          f"bytes_fwd={vols['naive']:.3e}")
@@ -80,6 +124,9 @@ def main(argv=()):
          f"bytes_fwd={vols['decoupled']:.3e}")
     emit("comm_volume_analytic_dp", 0.0,
          f"bytes_fwd={vols['dp']:.3e};halo_rows={halo_rows}")
+    emit("comm_volume_analytic_hybrid_d2x4", 0.0,
+         f"bytes_a2a_fwd={hyb['decoupled']:.3e};"
+         f"bytes_grad_ar_data={hyb['grad_allreduce_data']:.3e}")
     emit("comm_frequency", 0.0,
          f"naive_per_epoch={vols['naive_per_epoch']};"
          f"decoupled_per_epoch={vols['decoupled_per_epoch']}")
@@ -95,14 +142,55 @@ def main(argv=()):
         print(record_output(out), end="")
         _check_backend_parity(out)
 
+        # hybrid (data=2, model=4) on the same 8 devices: the a2a column
+        # is model-axis gather/split traffic; the data axis shows up as
+        # all-gather bytes (replica_gather) that pure-TP GCN rows never
+        # have — the discriminating signal that the replica plumbing ran
+        hyb_out = run_subprocess_bench(
+            "benchmarks._dist_gnn", devices=8,
+            args=["--modes", "decoupled,naive", "--census",
+                  "--data", "2",
+                  "--tag-prefix", "comm_volume_measured_"])
+        print(record_output(hyb_out), end="")
+        _check_hybrid_census(hyb_out, out)
+
     write_json("comm_volume")
 
 
-def _a2a_bytes(derived: str) -> float | None:
+def _census_field(derived: str, key: str) -> float | None:
     for field in derived.split(";"):
-        if field.startswith("a2a="):
-            return float(field[4:])
+        if field.startswith(key + "="):
+            return float(field[len(key) + 1:])
     return None
+
+
+def _check_hybrid_census(hyb_out: str, pure_out: str) -> None:
+    """Hybrid rows must show *data-axis* traffic on top of the model-axis
+    all-to-alls.  The discriminator is the all-gather column: explicit
+    GCN decoupled/naive on pure TP emit no all-gathers at all (split and
+    gather are a2a, reductions are ar), so ``hybrid ag > pure ag`` holds
+    iff the replica_gather/psum-scatter plumbing actually ran — a
+    silently-dropped data axis (``data_axes=()``) would zero it while
+    leaving a2a and ar plausible-looking."""
+    from .common import parse_rows
+
+    hyb = {r["name"]: r["derived"] for r in parse_rows(hyb_out)}
+    pure = {r["name"]: r["derived"] for r in parse_rows(pure_out)}
+    problems = []
+    for mode in ("decoupled", "naive"):
+        derived = hyb.get(f"comm_volume_measured_{mode}_d2x4")
+        a2a = _census_field(derived, "a2a") if derived else None
+        ag = _census_field(derived, "ag") if derived else None
+        pure_derived = pure.get(f"comm_volume_measured_{mode}")
+        pure_ag = _census_field(pure_derived, "ag") if pure_derived \
+            else None
+        ok = (a2a is not None and a2a > 0 and ag is not None
+              and pure_ag is not None and ag > pure_ag)
+        emit(f"comm_volume_hybrid_census_{mode}", 0.0,
+             f"a2a={a2a};ag={ag};pure_ag={pure_ag};ok={ok}")
+        if not ok:
+            problems.append((mode, a2a, ag, pure_ag))
+    assert not problems, problems
 
 
 def _check_backend_parity(out: str) -> None:
@@ -113,7 +201,7 @@ def _check_backend_parity(out: str) -> None:
 
     a2a = {}
     for row in parse_rows(out):
-        b = _a2a_bytes(row["derived"])
+        b = _census_field(row["derived"], "a2a")
         if b is not None:
             a2a[row["name"]] = b
     mismatches = []

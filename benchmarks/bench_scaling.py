@@ -1,4 +1,7 @@
-"""Paper Fig. 12: per-epoch runtime vs cluster size (2/4/8 workers)."""
+"""Paper Fig. 12: per-epoch runtime vs cluster size (2/4/8 workers),
+plus hybrid DP×TP shapes of the 8-device budget — (data=2, model=4) and
+(data=4, model=2) — so the scaling table shows how the same devices trade
+model-axis a2a volume against data-axis grad all-reduce volume."""
 from __future__ import annotations
 
 from .common import record_output, run_subprocess_bench, write_json
@@ -10,6 +13,16 @@ def main():
             "benchmarks._dist_gnn", devices=k,
             args=["--modes", "dp,decoupled_pipelined",
                   "--tag-prefix", f"scaling_k{k}_"])
+        print(record_output(out), end="")
+
+    # hybrid factorizations of the 8-device budget (rows carry a
+    # _d<data>x<model> suffix from _dist_gnn)
+    for data in (2, 4):
+        out = run_subprocess_bench(
+            "benchmarks._dist_gnn", devices=8,
+            args=["--modes", "dp,decoupled_pipelined",
+                  "--data", str(data),
+                  "--tag-prefix", "scaling_k8_"])
         print(record_output(out), end="")
 
     write_json("scaling")

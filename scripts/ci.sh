@@ -17,7 +17,17 @@
 # subprocess HLO census) so comm-volume formula regressions — like naive
 # TP summing layer-output dims instead of layer-input dims — fail tier-1
 # instead of silently skewing the Fig. 8 comparison.  Its asserts live in
-# benchmarks/bench_comm_volume.py.
+# benchmarks/bench_comm_volume.py and now cover the data-axis terms of
+# hybrid DP×TP (grad_allreduce_data pins: zero for pure TP, ring-bytes
+# per model group for (data=2, model=4); model-axis a2a volumes must not
+# change with the replica count).
+#
+# The slow lane includes the hybrid DP×TP equivalence dist prog
+# (tests/dist_progs/check_hybrid_mesh.py via tests/test_hybrid_mesh.py):
+# (data=2, model=4) and (data=4, model=2) hybrid training must match
+# pure TP (model=8) and a single-device reference — losses AND grads to
+# atol 1e-5 — for GCN/GAT × all four modes × both engine backends, so
+# hybrid regressions fail tier-1.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -16,11 +16,20 @@ Three execution modes:
   * ``naive``                — coupled layers with gather/split per layer
                                (paper's "TP" baseline, Figs. 8/10)
 
-Everything enters sharded execution through :func:`repro.runtime.engine`
-over one mesh axis; the ``mesh`` argument of :func:`make_tp_train_fns` may
-be a :class:`repro.runtime.TPMesh` or a raw jax Mesh.  Backward passes are
-derived by autodiff, which emits exactly the mirrored split/gather
-collectives of Algorithm 1's lines 15–24.
+Everything enters sharded execution through :func:`repro.runtime.engine`;
+the ``mesh`` argument of :func:`make_tp_train_fns` may be a
+:class:`repro.runtime.TPMesh` or a raw jax Mesh — 1-D ``("model",)`` for
+the paper's pure TP, or a multi-axis ``hybrid_mesh`` for hybrid DP×TP.
+Under a hybrid (data, model) / (pod, data, model) mesh the vertex
+dimension shards over *every* device (``P(("model",) + data_axes)``,
+model-major): the NN phase runs data-parallel across replicas, the
+replica shards are gathered (``collectives.replica_gather``) into each
+model worker's contiguous pure-TP block, the gather/split all-to-alls
+stay on the model axis, and the loss/metric psums span
+``("model",) + data_axes`` — whose autodiff transpose is exactly the
+cross-replica gradient all-reduce.  Backward passes are derived by
+autodiff, which emits the mirrored split/gather collectives of
+Algorithm 1's lines 15–24 plus the data-axis psum-scatter.
 
 Every mode runs on either engine backend (``backend="explicit"`` |
 ``"constraint"``).  The explicit backend maps the per-shard bodies below
@@ -123,9 +132,12 @@ def _pad_graph(g: gf.Graph, n_padded: int) -> gf.Graph:
 
 
 def prepare_bundle(data: GraphData, n_workers: int,
-                   n_chunks: int = 4) -> TPBundle:
+                   n_chunks: int = 4, n_replicas: int = 1) -> TPBundle:
+    """Host-side prep.  ``n_workers`` is the model (TP) degree; under a
+    hybrid mesh ``n_replicas`` is the replica-group count (``data_size``)
+    so the vertex dim pads to a multiple of every device."""
     g = data.graph
-    n_padded = tp.padded_size(g.n, n_workers * n_chunks)
+    n_padded = tp.padded_size(g.n, n_workers * n_chunks * n_replicas)
     gp = _pad_graph(g, n_padded)
     cg = gf.chunk_graph(gp, n_chunks)
     assert cg.n_chunks * cg.chunk_size == n_padded
@@ -277,10 +289,22 @@ def _edge_weights_tp(params, cfg: M.GNNConfig, edges: L.EdgeListDev,
 
 def tp_decoupled_forward(params, cfg: M.GNNConfig, graph: TPGraph,
                          x_local, axis: str = "model",
-                         pipelined: bool = True):
-    """Decoupled TP forward: returns vertex-sharded logits (V/N, C_pad)."""
+                         pipelined: bool = True,
+                         data_axes: tuple[str, ...] = ()):
+    """Decoupled TP forward: returns vertex-sharded logits.
+
+    Pure TP (``data_axes=()``): ``x_local`` is this model worker's
+    (V/N, D) block and the result is (V/N, C_pad).  Hybrid DP×TP:
+    ``x_local`` carries only this replica's rows (V/(N·R), D), the NN
+    phase — the FLOPs-heavy dense part — runs on them *before* the
+    replica shards are gathered into the model worker's contiguous
+    block (exact: the MLP is row-wise, so it commutes with the gather),
+    and the result is sliced back to this replica's (V/(N·R), C_pad)
+    rows, whose autodiff transpose psum-scatters the data-axis grads.
+    """
     cg, plan = graph.chunked, graph.comm_plan
-    h = M.mlp_phase(params, cfg, x_local)              # NN phase (V/N, C)
+    h = M.mlp_phase(params, cfg, x_local)              # NN phase, local rows
+    h = C.replica_gather(h, data_axes)                 # (V/N, C)
     w_flat = _edge_weights_tp(params, cfg, graph.edges, h, axis)
     w_chunk = L.rechunk_edge_values(cg, w_flat)
     n_rounds = cfg.num_layers
@@ -289,27 +313,38 @@ def tp_decoupled_forward(params, cfg: M.GNNConfig, graph: TPGraph,
     if not pipelined:
         z = tp.split(h, axis)                          # (V, C/N)
         z = _propagate_plain(cg, z, w_chunk, n_rounds)
-        return tp.gather(z, axis)                      # (V/N, C)
-
-    if n_rounds == 1:
-        return _round_split_gather_pipelined(
+        out = tp.gather(z, axis)                       # (V/N, C)
+    elif n_rounds == 1:
+        out = _round_split_gather_pipelined(
             h, cg, plan, w_chunk, d_full, axis)
-    z = _round_split_pipelined(h, cg, plan, w_chunk, axis)
-    z = _propagate_plain(cg, z, w_chunk, n_rounds - 2) if n_rounds > 2 else z
-    return _round_gather_pipelined(z, cg, plan, w_chunk, d_full, axis)
+    else:
+        z = _round_split_pipelined(h, cg, plan, w_chunk, axis)
+        z = _propagate_plain(cg, z, w_chunk, n_rounds - 2) \
+            if n_rounds > 2 else z
+        out = _round_gather_pipelined(z, cg, plan, w_chunk, d_full, axis)
+    return C.replica_slice(out, data_axes)
 
 
 def tp_naive_forward(params, cfg: M.GNNConfig, graph: TPGraph,
-                     x_local, axis: str = "model"):
+                     x_local, axis: str = "model",
+                     data_axes: tuple[str, ...] = ()):
     """Coupled ("naive") TP: gather/split per layer — 2L+ collectives/epoch
-    (Fig. 8's baseline).  GCN and GAT supported."""
+    (Fig. 8's baseline).  GCN and GAT supported.
+
+    Hybrid DP×TP: like :func:`dp_coupled_forward`, each layer keeps only
+    this replica's rows between layers, gathering the replica shards
+    for the graph-aggregation phase (which needs the model worker's full
+    block) and slicing back before the dense update so the matmuls
+    divide over every device.
+    """
     cg = graph.chunked
-    h = x_local                                        # (V/N, D)
+    h = x_local                                        # local rows, D feats
     n_layers = cfg.num_layers
     for i in range(n_layers):
         if cfg.model == "gat":
             p = params["layers"][i]
-            hw = h @ p["w"]
+            hw = h @ p["w"]                            # dense on local rows
+            hw = C.replica_gather(hw, data_axes)       # (V/N, D')
             sl = C.all_gather(hw @ p["a_l"], axis)
             sr = C.all_gather(hw @ p["a_r"], axis)
             e = jax.nn.leaky_relu(sl[graph.edges.src] + sr[graph.edges.dst],
@@ -318,15 +353,17 @@ def tp_naive_forward(params, cfg: M.GNNConfig, graph: TPGraph,
             w_chunk = L.rechunk_edge_values(cg, alpha)
             z = tp.split(hw, axis)
             z = L.aggregate_chunked(cg, z, edge_weight=w_chunk)
-            h = tp.gather(z, axis)
+            h = C.replica_slice(tp.gather(z, axis), data_axes)
             if i < n_layers - 1:
                 h = jax.nn.elu(h)
         else:
-            z = tp.split(h, axis)                      # dim-sharded
+            hf = C.replica_gather(h, data_axes)        # (V/N, D) block
+            z = tp.split(hf, axis)                     # dim-sharded
             z = L.aggregate_chunked(cg, z)
             a = tp.gather(z, axis)                     # vertex-sharded
+            a = C.replica_slice(a, data_axes)          # this replica's rows
             p = params["layers"][i]
-            h = a @ p["w"] + p["b"]
+            h = a @ p["w"] + p["b"]                    # dense on local rows
             if i < n_layers - 1:
                 h = jax.nn.relu(h)
     return h
@@ -380,50 +417,56 @@ def _edge_weights_constraint(params, cfg: M.GNNConfig, edges: L.EdgeListDev,
 
 
 def tp_decoupled_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
-                                    x, axis: str = "model"):
+                                    x, axis: str = "model",
+                                    data_axes: tuple[str, ...] = ()):
     """Decoupled TP forward in global-view semantics for
     ``engine(..., backend="constraint")``: same math as
     :func:`tp_decoupled_forward`, with the split/gather all-to-alls
     expressed as layout constraints.  Returns (V, C_pad) logits laid out
-    vertex-sharded ``P(axis, None)``."""
+    vertex-sharded ``P(vertex_axes(axis, data_axes), None)`` — under a
+    hybrid mesh the NN phase shards over the data axes too."""
     cg = graph.chunked
+    vspec = tp.vertex_spec(axis, data_axes)
     h = M.mlp_phase(params, cfg, x)                    # NN phase (V, C)
-    h = K.constrain(h, P(axis, None))                  # anchor: vertex-sharded
+    h = K.constrain(h, vspec)                          # anchor: vertex-sharded
     w_flat = _edge_weights_constraint(params, cfg, graph.edges, h, axis)
     w_chunk = L.rechunk_edge_values(cg, w_flat)
-    z = tp.split_constraint(h, axis)                   # → dim-sharded
+    z = tp.split_constraint(h, axis, data_axes)        # → dim-sharded
     for _ in range(cfg.num_layers):
         z = _aggregate_chunked_constraint(cg, z, w_chunk, axis)
-    return tp.gather_constraint(z, axis)               # → vertex-sharded
+    return tp.gather_constraint(z, axis, data_axes)    # → vertex-sharded
 
 
 def tp_naive_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
-                                x, axis: str = "model"):
+                                x, axis: str = "model",
+                                data_axes: tuple[str, ...] = ()):
     """Coupled ("naive") TP in global-view semantics: gather/split
     constraints per layer — the same 2L all-to-alls per forward as
-    :func:`tp_naive_forward`, scheduled by XLA."""
+    :func:`tp_naive_forward`, scheduled by XLA (hybrid: per-layer dense
+    compute shards over the data axes too)."""
     cg = graph.chunked
-    h = K.constrain(x, P(axis, None))                  # (V, D) vertex-sharded
+    vspec = tp.vertex_spec(axis, data_axes)
+    h = K.constrain(x, vspec)                          # (V, D) vertex-sharded
     n_layers = cfg.num_layers
     for i in range(n_layers):
         if cfg.model == "gat":
             p = params["layers"][i]
-            hw = K.constrain(h @ p["w"], P(axis, None))
+            hw = K.constrain(h @ p["w"], vspec)
             sl = K.constrain(hw @ p["a_l"], P(None))   # O(V) score share
             sr = K.constrain(hw @ p["a_r"], P(None))
             e = jax.nn.leaky_relu(sl[graph.edges.src] + sr[graph.edges.dst],
                                   0.2)
             alpha = L.segment_softmax(e, graph.edges.dst, sl.shape[0])
             w_chunk = L.rechunk_edge_values(cg, alpha)
-            z = tp.split_constraint(hw, axis)
+            z = tp.split_constraint(hw, axis, data_axes)
             z = _aggregate_chunked_constraint(cg, z, w_chunk, axis)
-            h = tp.gather_constraint(z, axis)
+            h = tp.gather_constraint(z, axis, data_axes)
             if i < n_layers - 1:
                 h = jax.nn.elu(h)
         else:
-            z = tp.split_constraint(h, axis)           # dim-sharded
+            z = tp.split_constraint(h, axis, data_axes)  # dim-sharded
             z = _aggregate_chunked_constraint(cg, z, cg.weight, axis)
-            a = tp.gather_constraint(z, axis)          # vertex-sharded
+            a = tp.gather_constraint(z, axis, data_axes)  # vertex-sharded
             p = params["layers"][i]
             h = a @ p["w"] + p["b"]
             if i < n_layers - 1:
@@ -435,7 +478,7 @@ def tp_naive_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
                 # zero branch, and the backward matches the explicit
                 # path's collective schedule byte for byte.
                 h = h * (h > 0)
-            h = K.constrain(h, P(axis, None))
+            h = K.constrain(h, vspec)
     return h
 
 
@@ -443,13 +486,25 @@ def tp_naive_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
 # Loss / metrics / train-step factory
 # ---------------------------------------------------------------------------
 
+def _resolve_data_axes(mesh, axis: str, data_axes):
+    """``data_axes=None`` → derive the replica axes from the mesh (the
+    strict :func:`repro.runtime.data_axes_for`); a tuple passes through."""
+    from ..runtime import data_axes_for
+    if data_axes is None:
+        return data_axes_for(mesh, axis)
+    return tuple(data_axes)
+
+
 def _make_tp_loss_and_acc(cfg: M.GNNConfig, mesh, axis: str, mode: str,
-                          backend: str):
+                          backend: str, data_axes: tuple[str, ...] = ()):
     """Engine-mapped (params, graph, x, labels, mask) → (loss, acc).
 
     The one place both backends are built: per-shard body + psums under
     ``"explicit"``, global-view body + constraint forwards under
-    ``"constraint"`` (identical numerics, see test_constraint_backend)."""
+    ``"constraint"`` (identical numerics, see test_constraint_backend).
+    ``data_axes`` non-empty turns either backend hybrid DP×TP: vertices
+    (and labels/masks) shard over ``(axis,) + data_axes``, the NN phase
+    runs on every device, and reductions span all axes."""
     if backend == "constraint":
         fwd_c = {
             "decoupled": tp_decoupled_forward_constraint,
@@ -460,7 +515,8 @@ def _make_tp_loss_and_acc(cfg: M.GNNConfig, mesh, axis: str, mode: str,
         }[mode]
 
         def global_loss(params, graph, x, labels, mask):
-            logits = fwd_c(params, cfg, graph, x, axis=axis)
+            logits = fwd_c(params, cfg, graph, x, axis=axis,
+                           data_axes=data_axes)
             loss_sum, correct, cnt = M.masked_loss_and_acc(
                 logits, labels, mask, graph.num_classes)
             return (loss_sum / jnp.maximum(cnt, 1.0),
@@ -476,30 +532,70 @@ def _make_tp_loss_and_acc(cfg: M.GNNConfig, mesh, axis: str, mode: str,
         }[mode]
 
         def shard_loss(params, graph, x_local, labels_local, mask_local):
-            logits = fwd(params, cfg, graph, x_local, axis=axis)
+            # hybrid: vertex rows arrive sharded over (axis,)+data_axes
+            # (model-major) and the forward keeps its dense phases on
+            # this replica's rows, returning replica-local logits — so
+            # every vertex is scored once across the full psum and the
+            # replica ops' transposes carry the data-axis grad psum.
+            logits = fwd(params, cfg, graph, x_local, axis=axis,
+                         data_axes=data_axes)
             loss_sum, correct, cnt = M.masked_loss_and_acc(
                 logits, labels_local, mask_local, graph.num_classes)
-            loss_sum = C.psum(loss_sum, axis)
-            correct = C.psum(correct, axis)
-            cnt = C.psum(cnt, axis)
+            loss_sum = C.psum_replicas(C.psum(loss_sum, axis), data_axes)
+            correct = C.psum_replicas(C.psum(correct, axis), data_axes)
+            cnt = C.psum_replicas(C.psum(cnt, axis), data_axes)
             return (loss_sum / jnp.maximum(cnt, 1.0),
                     correct / jnp.maximum(cnt, 1.0))
 
         body = shard_loss
 
+    v = tp.vertex_axes(axis, data_axes)
     return engine(
         body, mesh=mesh,
-        in_specs=(P(), P(), P(axis, None), P(axis), P(axis)),
+        in_specs=(P(), P(), P(v, None), P(v), P(v)),
         out_specs=(P(), P()), backend=backend)
+
+
+def _check_bundle_fits(bundle: TPBundle, mesh, axis: str,
+                       data_axes: tuple[str, ...]) -> None:
+    """Fail early with a padding hint when the bundle was prepared for a
+    different (model, data) shape than the execution will use.
+
+    The replica count comes from the *resolved* ``data_axes``, not the
+    mesh's own bookkeeping — ``data_axes=()`` on a hybrid mesh is the
+    documented pure-TP escape hatch and must validate against the model
+    degree alone (``validate_divisible(..., replicas=...)`` keeps the
+    divisibility rule and its padding hints single-sourced)."""
+    from ..runtime import TPMesh, as_mesh, resolve_replicas
+    n, replicas = resolve_replicas(mesh, axis, data_axes)
+    tpm = mesh if isinstance(mesh, TPMesh) else TPMesh(
+        as_mesh(mesh), axis=axis)
+    try:
+        tpm.validate_divisible(n_vertices=bundle.n_padded,
+                               dim=bundle.in_dim_padded, replicas=replicas)
+    except ValueError as e:
+        raise ValueError(
+            f"{e} Re-run prepare_bundle with n_workers={n}, "
+            f"n_replicas={replicas}.") from None
+    if bundle.n_workers != n:
+        raise ValueError(
+            f"bundle prepared for n_workers={bundle.n_workers} but mesh "
+            f"model degree is {n} — re-run prepare_bundle with the "
+            f"mesh's model degree (and n_replicas={replicas})")
 
 
 def make_tp_loss_fn(cfg: M.GNNConfig, bundle: TPBundle, mesh,
                     axis: str = "model", mode: str = "decoupled_pipelined",
-                    backend: str = "explicit"):
+                    backend: str = "explicit", data_axes=None):
     """Differentiable (params, mask) → scalar loss for a given backend.
 
-    The handle backend-equivalence tests take grads through."""
-    smapped = _make_tp_loss_and_acc(cfg, mesh, axis, mode, backend)
+    The handle backend-equivalence tests take grads through.
+    ``data_axes=None`` derives the replica axes from ``mesh`` (hybrid
+    DP×TP on multi-axis meshes); pass ``()`` to force pure TP."""
+    data_axes = _resolve_data_axes(mesh, axis, data_axes)
+    _check_bundle_fits(bundle, mesh, axis, data_axes)
+    smapped = _make_tp_loss_and_acc(cfg, mesh, axis, mode, backend,
+                                    data_axes)
 
     def loss_fn(params, mask):
         loss, _ = smapped(params, bundle.graph, bundle.features,
@@ -512,14 +608,21 @@ def make_tp_loss_fn(cfg: M.GNNConfig, bundle: TPBundle, mesh,
 def make_tp_train_fns(cfg: M.GNNConfig, bundle: TPBundle, mesh,
                       optimizer, axis: str = "model",
                       mode: str = "decoupled_pipelined",
-                      backend: str = "explicit"):
+                      backend: str = "explicit", data_axes=None):
     """Build jitted (train_step, eval_fn) for TP training.
 
     ``mode`` ∈ {decoupled, decoupled_pipelined, naive};
     ``backend`` ∈ {explicit, constraint} selects the engine path.
-    Params are replicated; activations/labels are vertex-sharded on ``axis``.
+    Params are replicated; activations/labels are vertex-sharded on
+    ``axis`` — or over ``(axis,) + data_axes`` under a hybrid mesh
+    (``data_axes=None`` derives them from ``mesh``), in which case the
+    gradient all-reduce over the data axes is the autodiff transpose of
+    the replica psums/gathers in the loss body.
     """
-    smapped = _make_tp_loss_and_acc(cfg, mesh, axis, mode, backend)
+    data_axes = _resolve_data_axes(mesh, axis, data_axes)
+    _check_bundle_fits(bundle, mesh, axis, data_axes)
+    smapped = _make_tp_loss_and_acc(cfg, mesh, axis, mode, backend,
+                                    data_axes)
 
     def loss_fn(params, mask):
         loss, _ = smapped(params, bundle.graph, bundle.features,

@@ -28,6 +28,16 @@ Each transition exists in two spellings, one per engine backend:
   it with compute.
 
 On TPU the all-to-all runs over ICI instead of NCCL/Ethernet.
+
+Hybrid DP×TP (multi-axis meshes) adds a third layout, **vertex-sharded
+over every device** — ``P((axis,) + data_axes)`` on the vertex dim,
+model-major (:func:`vertex_axes` / :func:`vertex_spec`) — used by the NN
+phase so its dense compute also divides over the replica axes.  The
+transitions into/out of it are the replica ops
+(:func:`repro.runtime.collectives.replica_gather` /
+``replica_slice``) on the explicit backend and the staged
+``data → model → dim`` constraint hops here on the constraint backend;
+the paper's gather/split all-to-alls always stay on the model axis.
 """
 from __future__ import annotations
 
@@ -40,6 +50,25 @@ from ..runtime import constraint as K
 from ..runtime.mesh import padded_size  # noqa: F401  (canonical home)
 
 
+def vertex_axes(axis: str = "model",
+                data_axes: tuple[str, ...] = ()):
+    """The mesh axes the vertex dimension shards over.
+
+    Pure TP: just ``axis``.  Hybrid DP×TP: ``(axis,) + data_axes`` —
+    model-major, so gathering the replica shards back together
+    (:func:`repro.runtime.collectives.replica_gather`) reconstructs each
+    model worker's contiguous pure-TP vertex block.
+    """
+    return (axis,) + tuple(data_axes) if data_axes else axis
+
+
+def vertex_spec(axis: str = "model", data_axes: tuple[str, ...] = (),
+                trailing: int = 1) -> P:
+    """PartitionSpec of the vertex-sharded layout: the leading (vertex)
+    dim over :func:`vertex_axes`, ``trailing`` unsharded dims after it."""
+    return P(vertex_axes(axis, data_axes), *([None] * trailing))
+
+
 def split(h: jax.Array, axis: str = "model") -> jax.Array:
     """vertex-sharded (V/N, D) → dim-sharded (V, D/N)."""
     return C.all_to_all(h, axis, split_axis=1, concat_axis=0, tiled=True)
@@ -50,7 +79,8 @@ def gather(z: jax.Array, axis: str = "model") -> jax.Array:
     return C.all_to_all(z, axis, split_axis=0, concat_axis=1, tiled=True)
 
 
-def split_constraint(h: jax.Array, axis: str = "model") -> jax.Array:
+def split_constraint(h: jax.Array, axis: str = "model",
+                     data_axes: tuple[str, ...] = ()) -> jax.Array:
     """Constraint-backend split: global (V, D) re-laid P(axis,·) → P(·,axis).
 
     Must run inside a body traced by ``runtime.engine(...,
@@ -59,13 +89,33 @@ def split_constraint(h: jax.Array, axis: str = "model") -> jax.Array:
     pair reshards the cotangent exactly where autodiff of the explicit
     :func:`split` puts its mirrored all-to-all (see
     :func:`repro.runtime.constraint.layout_cast`).
+
+    Under hybrid DP×TP the source layout also shards vertices over the
+    ``data_axes`` (the NN phase runs on every device).  The transition is
+    staged through the model-only vertex layout — first the data-axis
+    all-gather (replica shards rejoin, same dim), then the known
+    vertex↔dim all-to-all — because the SPMD partitioner cannot lower the
+    combined ``P((axis,)+data, ·) → P(·, axis)`` hop in one step and
+    falls back to involuntary full rematerialization.  This mirrors the
+    explicit backend's replica_gather + split exactly.
     """
+    if data_axes:
+        h = K.layout_cast(h, P(axis, None),
+                          src_spec=vertex_spec(axis, data_axes))
     return K.layout_cast(h, P(None, axis), src_spec=P(axis, None))
 
 
-def gather_constraint(z: jax.Array, axis: str = "model") -> jax.Array:
-    """Constraint-backend gather: global (V, D) re-laid P(·,axis) → P(axis,·)."""
-    return K.layout_cast(z, P(axis, None), src_spec=P(None, axis))
+def gather_constraint(z: jax.Array, axis: str = "model",
+                      data_axes: tuple[str, ...] = ()) -> jax.Array:
+    """Constraint-backend gather: global (V, D) re-laid P(·,axis) → P(axis,·)
+    (hybrid: staged on to the full ``P((axis,)+data_axes, ·)`` vertex
+    layout — the mirrored dynamic-slice of the explicit backend's
+    replica_slice, see :func:`split_constraint` for why two hops)."""
+    z = K.layout_cast(z, P(axis, None), src_spec=P(None, axis))
+    if data_axes:
+        z = K.layout_cast(z, vertex_spec(axis, data_axes),
+                          src_spec=P(axis, None))
+    return z
 
 
 def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0) -> jax.Array:

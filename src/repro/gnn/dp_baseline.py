@@ -12,6 +12,13 @@ The halo exchange is a static, rectangular all-to-all built from
 the max across workers and sharded on the worker axis, so the whole model
 runs inside one :func:`repro.runtime.engine` body (the repo's
 version-portable shard_map entry point).
+
+On a hybrid (data, model) mesh the partitions stay on the model axis
+(halo all-to-alls unchanged) while each partition's rows additionally
+shard over the data axes: the dense updates run on 1/replicas of the
+rows, and the cross-replica gradient psum is the autodiff transpose of
+the per-layer ``replica_gather``/``replica_slice`` pair plus the replica
+loss psums.
 """
 from __future__ import annotations
 
@@ -66,11 +73,16 @@ class DPBundle:
 
 
 def prepare_dp_bundle(data: GraphData, k: int,
-                      balance: str = "vertex") -> DPBundle:
+                      balance: str = "vertex",
+                      n_replicas: int = 1) -> DPBundle:
+    """``k`` graph partitions (the model axis); under a hybrid mesh
+    ``n_replicas`` pads each partition's row count so the local rows also
+    shard over the data axes."""
     g = data.graph
     part = gp.chunk_partition(g, k, balance=balance)
     plan = gp.halo_plan(g, part)
     n_local_max = int(plan.n_local.max())
+    n_local_max = -(-n_local_max // n_replicas) * n_replicas
     e_max = max(1, max(len(s) for s in plan.local_src))
 
     send_local = np.full((k, k, plan.m), -1, dtype=np.int32)
@@ -155,12 +167,21 @@ def dp_aggregate(h_local: jax.Array, g: DPGraph, axis: str,
 
 
 def dp_coupled_forward(params, cfg: M.GNNConfig, g: DPGraph, x_local,
-                       axis: str = "model"):
-    """Classic coupled data-parallel GNN (per-layer halo exchange)."""
+                       axis: str = "model",
+                       data_axes: tuple[str, ...] = ()):
+    """Classic coupled data-parallel GNN (per-layer halo exchange).
+
+    Hybrid DP×TP: ``x_local`` carries only this replica's block of the
+    partition's rows; each layer gathers the replica shards (aggregation
+    and halo exchange need every local row), then slices back so the
+    dense update — the FLOPs-heavy part — runs on 1/replicas of the rows.
+    All replica ops are identities for ``data_axes=()``."""
     h = x_local
     for i in range(cfg.num_layers):
         last = i == cfg.num_layers - 1
-        a = dp_aggregate(h, g, axis)
+        h_full = C.replica_gather(h, data_axes)
+        a = dp_aggregate(h_full, g, axis)
+        a = C.replica_slice(a, data_axes)
         p = params["layers"][i]
         h = a @ p["w"] + p["b"]
         if not last:
@@ -196,10 +217,14 @@ def _halo_exchange_constraint(h: jax.Array, g: DPGraph,
 
 
 def dp_coupled_forward_constraint(params, cfg: M.GNNConfig, g: DPGraph, x,
-                                  axis: str = "model"):
+                                  axis: str = "model",
+                                  data_axes: tuple[str, ...] = ()):
     """Coupled DP-GNN in global-view semantics for
     ``engine(..., backend="constraint")``: same math as
-    :func:`dp_coupled_forward` on the stacked (k, n_local_max, ·) layout."""
+    :func:`dp_coupled_forward` on the stacked (k, n_local_max, ·) layout
+    (hybrid: the per-partition row dim is additionally anchored on the
+    data axes, so the dense updates shard across replicas)."""
+    row_spec = _dp_row_spec(axis, data_axes)
 
     def agg_one(h_ext_i, src_i, dst_i, w_i):
         msg = jnp.take(h_ext_i, src_i, axis=0) * w_i[:, None]
@@ -208,10 +233,11 @@ def dp_coupled_forward_constraint(params, cfg: M.GNNConfig, g: DPGraph, x,
 
     h = x
     for i in range(cfg.num_layers):
-        h = K.constrain(h, P(axis, None, None))
+        h = K.constrain(h, row_spec)
         halo = _halo_exchange_constraint(h, g, axis)
         h_ext = jnp.concatenate([h, halo], axis=1)
         a = jax.vmap(agg_one)(h_ext, g.src, g.dst, g.weight)
+        a = K.constrain(a, row_spec)
         p = params["layers"][i]
         h = a @ p["w"] + p["b"]
         if i < cfg.num_layers - 1:
@@ -219,14 +245,24 @@ def dp_coupled_forward_constraint(params, cfg: M.GNNConfig, g: DPGraph, x,
     return h
 
 
+def _dp_row_spec(axis: str, data_axes: tuple[str, ...],
+                 trailing: int = 1) -> P:
+    """Spec of the stacked DP layout (k, n_local_max, ...): partitions on
+    the model axis, local rows on the data axes (hybrid) or unsharded."""
+    row_entry = tuple(data_axes) if data_axes else None
+    return P(axis, row_entry, *([None] * trailing))
+
+
 def _make_dp_loss_and_acc(cfg: M.GNNConfig, num_classes: int, mesh,
-                          axis: str, backend: str):
+                          axis: str, backend: str,
+                          data_axes: tuple[str, ...] = ()):
     """Engine-mapped (params, g, x, labels, mask) → (loss, acc)."""
     if backend == "constraint":
 
         def global_loss(params, g, x, labels, mask):
             logits = dp_coupled_forward_constraint(params, cfg, g, x,
-                                                   axis=axis)
+                                                   axis=axis,
+                                                   data_axes=data_axes)
             mask = mask * g.valid_rows
             loss_sum, correct, cnt = M.masked_loss_and_acc(
                 logits, labels, mask, num_classes)
@@ -238,32 +274,63 @@ def _make_dp_loss_and_acc(cfg: M.GNNConfig, num_classes: int, mesh,
 
         def shard_loss(params, g, x_local, labels_local, mask_local):
             # sharded args arrive with a leading worker axis of size 1
+            # (hybrid: and only this replica's block of the local rows)
             x_local = x_local[0]
             labels_local = labels_local[0]
             mask_local = mask_local[0]
-            logits = dp_coupled_forward(params, cfg, g, x_local, axis=axis)
-            mask = mask_local * g.valid_rows[C.axis_index(axis)]
+            logits = dp_coupled_forward(params, cfg, g, x_local, axis=axis,
+                                        data_axes=data_axes)
+            valid = C.replica_slice(g.valid_rows[C.axis_index(axis)],
+                                    data_axes)
+            mask = mask_local * valid
             loss_sum, correct, cnt = M.masked_loss_and_acc(
                 logits, labels_local, mask, num_classes)
-            return (C.psum(loss_sum, axis) / jnp.maximum(
-                        C.psum(cnt, axis), 1.0),
-                    C.psum(correct, axis) / jnp.maximum(
-                        C.psum(cnt, axis), 1.0))
+            loss_sum = C.psum_replicas(C.psum(loss_sum, axis), data_axes)
+            correct = C.psum_replicas(C.psum(correct, axis), data_axes)
+            cnt = C.psum_replicas(C.psum(cnt, axis), data_axes)
+            return (loss_sum / jnp.maximum(cnt, 1.0),
+                    correct / jnp.maximum(cnt, 1.0))
 
         body = shard_loss
 
     return engine(
         body, mesh=mesh,
-        in_specs=(P(), P(), P(axis, None, None), P(axis, None),
-                  P(axis, None)),
+        in_specs=(P(), P(), _dp_row_spec(axis, data_axes),
+                  _dp_row_spec(axis, data_axes, trailing=0),
+                  _dp_row_spec(axis, data_axes, trailing=0)),
         out_specs=(P(), P()), backend=backend)
 
 
+def _resolve_dp_axes(bundle: DPBundle, mesh, axis: str, data_axes):
+    """Derive/validate the replica axes and the bundle's padding fit."""
+    from ..runtime import data_axes_for, resolve_replicas
+    if data_axes is None:
+        data_axes = data_axes_for(mesh, axis)
+    data_axes = tuple(data_axes)
+    k, replicas = resolve_replicas(mesh, axis, data_axes)
+    g = bundle.graph
+    if g.k != k:
+        raise ValueError(
+            f"DP bundle partitioned for k={g.k} workers but mesh model "
+            f"degree is {k} — re-run prepare_dp_bundle")
+    if g.n_local_max % replicas:
+        raise ValueError(
+            f"DP bundle rows n_local_max={g.n_local_max} do not divide "
+            f"the {replicas} replicas — re-run prepare_dp_bundle with "
+            f"n_replicas={replicas}")
+    return data_axes
+
+
 def make_dp_loss_fn(cfg: M.GNNConfig, bundle: DPBundle, mesh,
-                    axis: str = "model", backend: str = "explicit"):
-    """Differentiable (params, mask) → scalar loss for a given backend."""
+                    axis: str = "model", backend: str = "explicit",
+                    data_axes=None):
+    """Differentiable (params, mask) → scalar loss for a given backend.
+
+    ``data_axes=None`` derives the replica axes from ``mesh`` (hybrid
+    DP×TP); pass ``()`` to force the pure partition-parallel baseline."""
+    data_axes = _resolve_dp_axes(bundle, mesh, axis, data_axes)
     smapped = _make_dp_loss_and_acc(cfg, bundle.num_classes, mesh, axis,
-                                    backend)
+                                    backend, data_axes)
 
     def loss_fn(params, mask):
         loss, _ = smapped(params, bundle.graph, bundle.features,
@@ -275,12 +342,16 @@ def make_dp_loss_fn(cfg: M.GNNConfig, bundle: DPBundle, mesh,
 
 def make_dp_train_fns(cfg: M.GNNConfig, bundle: DPBundle, mesh,
                       optimizer, axis: str = "model",
-                      backend: str = "explicit"):
+                      backend: str = "explicit", data_axes=None):
     """Jitted (train_step, evaluate) for the DP baseline (GCN).
 
-    ``backend`` ∈ {explicit, constraint} selects the engine path."""
+    ``backend`` ∈ {explicit, constraint} selects the engine path;
+    ``data_axes=None`` derives replica axes from ``mesh`` (hybrid DP×TP:
+    partition rows shard over the data axes and the gradient psum spans
+    them via the replica ops' transposes)."""
+    data_axes = _resolve_dp_axes(bundle, mesh, axis, data_axes)
     smapped = _make_dp_loss_and_acc(cfg, bundle.num_classes, mesh, axis,
-                                    backend)
+                                    backend, data_axes)
 
     def loss_fn(params, mask):
         loss, _ = smapped(params, bundle.graph, bundle.features,

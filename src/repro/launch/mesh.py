@@ -1,4 +1,8 @@
-"""Production mesh builders.
+"""Production/host mesh builders — thin shims over the single mesh owner.
+
+``repro.runtime.mesh`` owns all mesh construction (shape resolution,
+strict no-truncation device accounting, replica-axis bookkeeping); this
+module only keeps the launch-facing spellings alive:
 
 Single pod: (16, 16) = 256 v5e chips, axes (data, model).
 Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod axis
@@ -10,22 +14,46 @@ device state (the dry-run sets the forced device count before any init).
 from __future__ import annotations
 
 import jax
-import numpy as np
+
+from ..runtime.mesh import data_axes_for  # noqa: F401  (canonical home)
+from ..runtime.mesh import hybrid_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    """The fleet meshes, via :func:`repro.runtime.hybrid_mesh`.
 
-
-def make_host_mesh(model: int | None = None, data: int = 1):
-    """Small mesh over whatever local devices exist (tests, examples)."""
+    The pod shape is fixed (256/512 chips), so an *explicit* device
+    slice is passed — the dry-run forces 512 host devices and then
+    builds both pod variants, which is the documented escape hatch from
+    the no-silent-truncation contract (the caller spells the subset).
+    ``topology=True`` keeps the physical-topology-aware device ordering
+    the old ``jax.make_mesh`` builder provided (model axis on
+    ICI-adjacent chips)."""
+    n = 512 if multi_pod else 256
     devs = jax.devices()
-    model = model or (len(devs) // data)
-    arr = np.array(devs[: data * model]).reshape(data, model)
-    return jax.sharding.Mesh(arr, ("data", "model"))
+    if len(devs) < n:
+        raise ValueError(
+            f"production mesh needs {n} devices, {len(devs)} visible")
+    if multi_pod:
+        return hybrid_mesh(model=16, data=16, pod=2, devices=devs[:n],
+                           topology=True).mesh
+    return hybrid_mesh(model=16, data=16, devices=devs[:n],
+                       topology=True).mesh
 
 
-def data_axes_for(mesh) -> tuple[str, ...]:
-    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+def make_host_mesh(model: int | None = None, data: int = 1, pod: int = 1,
+                   devices=None):
+    """Small mesh over the local devices (tests, examples).
+
+    Returns a raw ``jax.sharding.Mesh`` with axes (data, model) — or
+    (pod, data, model) when ``pod > 1``, the host-scale analog of the
+    multi-pod production mesh.  Unlike the old builder this never
+    silently truncates the device list: the requested shape must consume
+    exactly the visible (or given) devices (``model=None`` infers the
+    model degree, which must divide exactly) — see
+    :func:`repro.runtime.resolve_mesh_shape`.  To use a subset of the
+    host, pass the slice explicitly, e.g.
+    ``make_host_mesh(model=2, data=2, devices=jax.devices()[:4])``.
+    """
+    return hybrid_mesh(model=model, data=data, pod=pod,
+                       devices=devices).mesh

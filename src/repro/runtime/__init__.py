@@ -18,12 +18,24 @@ Public surface:
                          freedom — see benchmarks/bench_comm_volume.py).
 * :func:`smap`         — explicit backend with a required mesh argument
 * :func:`constrain`    — the constraint backend's layout-transition op
-* :class:`TPMesh` / :func:`tp_mesh` — the paper's 1-D "model" mesh with
-                         the divisibility/padding contract attached
+* :class:`TPMesh`      — the single mesh owner: a model axis plus optional
+                         replica (data/pod) axes, with the
+                         divisibility/padding contract attached
+* :func:`tp_mesh`      — the paper's 1-D "model" mesh (pure TP)
+* :func:`hybrid_mesh`  — (data, model) / (pod, data, model) meshes for
+                         hybrid DP×TP; strict no-truncation device
+                         accounting via :func:`resolve_mesh_shape`
+* :func:`data_axes_for`— the replica axes of a mesh (raises on unknown
+                         axis names instead of silently dropping them)
 * :mod:`collectives`   — axis_index / axis_size / psum / all_gather /
-                         all_to_all used inside explicit engine bodies
+                         all_to_all on the model axis plus the replica
+                         ops (replica_gather / replica_slice /
+                         psum_replicas) used inside explicit engine
+                         bodies; the tested choke point every wire byte
+                         flows through
 
-No other module may call ``shard_map`` (any spelling) directly.
+No other module may call ``shard_map`` (any spelling) or the ``jax.lax``
+collectives directly (tests/test_collectives_chokepoint.py enforces it).
 """
 from . import collectives  # noqa: F401
 from .constraint import (  # noqa: F401
@@ -34,10 +46,15 @@ from .constraint import (  # noqa: F401
     mesh_context,
 )
 from .mesh import (  # noqa: F401
+    DATA_AXES_ORDER,
     DEFAULT_AXIS,
     TPMesh,
     as_mesh,
+    data_axes_for,
+    hybrid_mesh,
     padded_size,
+    resolve_mesh_shape,
+    resolve_replicas,
     tp_mesh,
 )
 from .smap import (  # noqa: F401
@@ -51,8 +68,9 @@ from .smap import (  # noqa: F401
 )
 
 __all__ = [
-    "DEFAULT_AXIS", "TPMesh", "as_mesh", "padded_size", "tp_mesh",
-    "CHECK_KW", "JAX_VERSION", "SUPPORTED_JAX", "engine",
+    "DATA_AXES_ORDER", "DEFAULT_AXIS", "TPMesh", "as_mesh",
+    "data_axes_for", "hybrid_mesh", "padded_size", "resolve_mesh_shape",
+    "resolve_replicas", "tp_mesh", "CHECK_KW", "JAX_VERSION", "SUPPORTED_JAX", "engine",
     "resolve_shard_map", "smap", "validate_specs", "collectives",
     "constrain", "constraint_engine", "current_mesh", "layout_cast",
     "mesh_context",

@@ -1,14 +1,33 @@
 """Axis collectives used inside :func:`repro.runtime.engine` bodies.
 
 Thin, named wrappers over ``jax.lax`` so the rest of the repo has exactly
-one import for "talk across the TP axis" — the dedicated communication
+one import for "talk across a mesh axis" — the dedicated communication
 layer that distributed-GNN systems factor out (NeutronTP's gather/split,
-DepComm halo exchanges, EP MoE dispatch all reduce to these five ops).
-Keeping them in one module is what makes a future second backend
-(pjit constraints, explicit device buffers, a real multi-host launcher)
-a local change instead of a repo-wide one.
+DepComm halo exchanges, EP MoE dispatch all reduce to these ops).
+Keeping them in one module is what makes backends, multi-axis meshes, and
+per-axis byte counters local changes instead of repo-wide ones — it is a
+tested choke point (tests/test_collectives_chokepoint.py): no other
+module may call the ``jax.lax`` collectives directly.
 
-All functions must be called *inside* a mapped body with ``axis`` bound.
+Two families:
+
+* model-axis ops (:func:`psum`, :func:`all_gather`, :func:`all_to_all`,
+  :func:`ppermute`) — the paper's TP traffic inside a replica group;
+* replica ops (:func:`replica_gather`, :func:`replica_slice`,
+  :func:`psum_replicas`, :func:`replica_index`, :func:`replica_size`) —
+  hybrid DP×TP traffic across the data/pod axes.  ``data_axes`` is a
+  (possibly empty) tuple, outermost first, exactly as carried by
+  :class:`repro.runtime.TPMesh`; every replica op is the identity for
+  ``data_axes=()`` so pure-TP call sites pay nothing.
+
+The cross-replica *gradient* psum of hybrid training is the autodiff
+transpose of these ops: replicated (``P()``) engine inputs have their
+cotangents psummed over every mesh axis by shard_map's transpose, and
+:func:`replica_gather`'s transpose is the mirrored psum-scatter over the
+data axes — so wiring the forward through this module is what puts the
+data-axis all-reduce bytes on the wire.
+
+All functions must be called *inside* a mapped body with the axes bound.
 
 Version portability lives here too: ``jax.lax.axis_size`` only exists on
 newer JAX lines, so :func:`axis_size` falls back to the classic
@@ -36,8 +55,9 @@ def axis_size(axis: str = DEFAULT_AXIS) -> int:
     return jax.lax.psum(1, axis)
 
 
-def psum(x, axis: str = DEFAULT_AXIS):
-    """Sum-reduce ``x`` across the axis (loss/metric reductions)."""
+def psum(x, axis=DEFAULT_AXIS):
+    """Sum-reduce ``x`` across one axis or a tuple of axes (loss/metric
+    reductions; pass ``("model",) + data_axes`` for hybrid DP×TP)."""
     return jax.lax.psum(x, axis)
 
 
@@ -61,3 +81,62 @@ def all_to_all(x: jax.Array, axis: str = DEFAULT_AXIS, *,
     skew-independent — the paper's load-balance argument)."""
     return jax.lax.all_to_all(x, axis, split_axis=split_axis,
                               concat_axis=concat_axis, tiled=tiled)
+
+
+# ---------------------------------------------------------------------------
+# Replica (data/pod) axis ops — hybrid DP×TP
+# ---------------------------------------------------------------------------
+
+def replica_index(data_axes: tuple[str, ...]) -> jax.Array:
+    """Flattened replica coordinate over ``data_axes`` (major-to-minor,
+    outermost first — matches the ``P((model,) + data_axes)`` block order
+    of the hybrid vertex layout).  0 for ``data_axes=()``."""
+    idx = 0
+    for a in data_axes:
+        idx = idx * axis_size(a) + axis_index(a)
+    return idx
+
+
+def replica_size(data_axes: tuple[str, ...]) -> int:
+    """Total replica count (product of the data-axis sizes; 1 for ())."""
+    n = 1
+    for a in data_axes:
+        n = n * axis_size(a)
+    return n
+
+
+def replica_gather(x: jax.Array, data_axes: tuple[str, ...], *,
+                   gather_axis: int = 0) -> jax.Array:
+    """Concatenate the replica shards of ``x`` along ``gather_axis``.
+
+    Gathers innermost axis first so that, for an array sharded
+    ``P((model,) + data_axes)`` on ``gather_axis``, the result is the
+    contiguous model-worker shard in global row order.  Its autodiff
+    transpose is the mirrored psum-scatter over the data axes — the
+    cross-replica gradient reduction of hybrid DP×TP.  Identity for
+    ``data_axes=()``.
+    """
+    for a in reversed(data_axes):
+        x = all_gather(x, a, gather_axis=gather_axis, tiled=True)
+    return x
+
+
+def replica_slice(x: jax.Array, data_axes: tuple[str, ...], *,
+                  axis: int = 0) -> jax.Array:
+    """This replica's block of ``x`` along ``axis`` (inverse of
+    :func:`replica_gather` on replica-identical values).  Identity for
+    ``data_axes=()``."""
+    if not data_axes:
+        return x
+    n = replica_size(data_axes)
+    block = x.shape[axis] // n
+    start = replica_index(data_axes) * block
+    return jax.lax.dynamic_slice_in_dim(x, start, block, axis=axis)
+
+
+def psum_replicas(x, data_axes: tuple[str, ...]):
+    """Sum-reduce ``x`` across the replica axes (the explicit cross-replica
+    psum of hybrid DP×TP).  Identity for ``data_axes=()``."""
+    if not data_axes:
+        return x
+    return psum(x, tuple(data_axes))

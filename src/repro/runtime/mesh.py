@@ -1,24 +1,48 @@
-"""Device meshes for the TP engine.
+"""Device meshes for the TP engine — the repo's single mesh owner.
 
-``TPMesh`` owns the paper's 1-D "model" axis: it builds the mesh, knows the
-TP degree, and validates the divisibility/padding contract that the
-rectangular gather/split all-to-alls rely on — an (V, D) activation matrix
-can only move vertex-sharded ↔ dim-sharded when both V and D divide the TP
-degree (pad first with :func:`padded_size` / ``core.tp.pad_to_multiple``).
+``TPMesh`` owns the paper's "model" axis plus optional replica axes: a
+1-D ``("model",)`` mesh is the paper's pure tensor parallelism, while
+``("data", "model")`` and ``("pod", "data", "model")`` meshes compose TP
+within a replica group with data parallelism across groups (the cluster
+scaling of §5: TP inside a group, gradient all-reduce across groups).
+It builds the mesh, knows the TP degree, and validates the
+divisibility/padding contract that the rectangular gather/split
+all-to-alls rely on — an (V, D) activation matrix can only move
+vertex-sharded ↔ dim-sharded when both V and D divide the TP degree
+(pad first with :func:`padded_size` / ``core.tp.pad_to_multiple``).
 
-Everything that runs sharded code goes through :func:`repro.runtime.engine`,
-which accepts either a raw :class:`jax.sharding.Mesh` or a ``TPMesh``
-(via :func:`as_mesh`), so callers can hold whichever is convenient.
+Factories:
+
+* :func:`tp_mesh`     — the paper's 1-D "model" mesh (pure TP).
+* :func:`hybrid_mesh` — (data, model) or (pod, data, model) meshes for
+  hybrid DP×TP.  Strict device accounting: the requested shape must
+  consume *exactly* the visible (or given) devices — no silent
+  truncation of the device list.
+* :func:`resolve_mesh_shape` — the pure (n_devices, pod, data, model)
+  → shape contract behind :func:`hybrid_mesh`, property-tested without
+  real devices.
+
+``launch.mesh``'s host/production builders are thin shims over these —
+there is one mesh owner, and it is this module.  Everything that runs
+sharded code goes through :func:`repro.runtime.engine`, which accepts
+either a raw :class:`jax.sharding.Mesh` or a ``TPMesh`` (via
+:func:`as_mesh`), so callers can hold whichever is convenient.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import numpy as np
 from jax.sharding import Mesh
 
 DEFAULT_AXIS = "model"
+
+#: Replica axes the engine knows about, outermost first.  The "pod" axis
+#: extends data parallelism across the inter-pod link; both behave as
+#: gradient-all-reduce (data) axes to the GNN engine.
+DATA_AXES_ORDER = ("pod", "data")
 
 
 def padded_size(size: int, multiple: int) -> int:
@@ -28,25 +52,48 @@ def padded_size(size: int, multiple: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class TPMesh:
-    """A 1-D tensor-parallel mesh plus its axis name and degree.
+    """A device mesh plus its model axis name, TP degree, and replica axes.
 
     The single owner of "how many workers" questions: divisibility
-    validation and padded sizes.
+    validation and padded sizes (both are *model-axis* contracts — the
+    gather/split all-to-alls run inside a replica group) plus the replica
+    (data/pod) axes that gradient psums span.
     """
 
     mesh: Mesh
     axis: str = DEFAULT_AXIS
+    data_axes: tuple[str, ...] = ()
 
     def __post_init__(self):
         if self.axis not in self.mesh.axis_names:
             raise ValueError(
                 f"TPMesh axis {self.axis!r} not in mesh axes "
                 f"{self.mesh.axis_names}")
+        object.__setattr__(self, "data_axes", tuple(self.data_axes))
+        for a in self.data_axes:
+            if a not in self.mesh.axis_names:
+                raise ValueError(
+                    f"TPMesh data axis {a!r} not in mesh axes "
+                    f"{self.mesh.axis_names}")
+            if a == self.axis:
+                raise ValueError(
+                    f"TPMesh axis {a!r} cannot be both the model axis and "
+                    f"a data axis")
 
     @property
     def size(self) -> int:
         """TP degree N (number of workers on the model axis)."""
         return self.mesh.shape[self.axis]
+
+    @property
+    def data_size(self) -> int:
+        """Number of replica groups (product of the data/pod axis sizes)."""
+        return math.prod(self.mesh.shape[a] for a in self.data_axes)
+
+    @property
+    def n_devices(self) -> int:
+        """Total devices = data_size × size (× unnamed spectator axes)."""
+        return self.mesh.devices.size
 
     @property
     def devices(self):
@@ -59,14 +106,25 @@ class TPMesh:
         return padded_size(size, self.size * chunks)
 
     def validate_divisible(self, n_vertices: int | None = None,
-                           dim: int | None = None) -> None:
-        """Raise with a padding hint when (V, D) violate the TP contract."""
+                           dim: int | None = None,
+                           replicas: int | None = None) -> None:
+        """Raise with a padding hint when (V, D) violate the TP contract.
+
+        ``n_vertices`` is checked against *all* workers (model × data:
+        the vertex dim shards over every device in the hybrid layout);
+        ``dim`` only against the model degree (features never shard over
+        replica axes).  ``replicas`` overrides the mesh's own
+        ``data_size`` — callers that resolved an explicit ``data_axes``
+        (e.g. the pure-TP escape hatch ``()`` on a hybrid mesh) validate
+        against the replica count the execution will actually use.
+        """
         n = self.size
+        k = n * (self.data_size if replicas is None else replicas)
         problems = []
-        if n_vertices is not None and n_vertices % n:
+        if n_vertices is not None and n_vertices % k:
             problems.append(
-                f"vertex count {n_vertices} % {n} != 0 "
-                f"(pad to {padded_size(n_vertices, n)})")
+                f"vertex count {n_vertices} % {k} != 0 "
+                f"(pad to {padded_size(n_vertices, k)})")
         if dim is not None and dim % n:
             problems.append(
                 f"feature dim {dim} % {n} != 0 "
@@ -74,7 +132,8 @@ class TPMesh:
         if problems:
             raise ValueError(
                 "TPMesh divisibility violated — rectangular gather/split "
-                "all-to-alls need both dims to divide the TP degree: "
+                "all-to-alls need both dims to divide the TP degree "
+                "(and the vertex dim to divide the full device count): "
                 + "; ".join(problems)
                 + ". Use core.tp.pad_to_multiple / runtime.padded_size.")
 
@@ -93,6 +152,128 @@ def tp_mesh(n_workers: int | None = None, axis: str = DEFAULT_AXIS,
         raise ValueError(
             f"n_workers={n_workers} but only {len(devices)} devices visible")
     return TPMesh(Mesh(np.array(devices[:n_workers]), (axis,)), axis=axis)
+
+
+def resolve_mesh_shape(n_devices: int, model: int | None = None,
+                       data: int = 1, pod: int = 1) -> tuple[int, int, int]:
+    """Resolve an (pod, data, model) request against a device count.
+
+    The hybrid-mesh contract, as a pure function (property-tested):
+
+    * every degree must be a positive integer;
+    * ``model=None`` infers the model degree as
+      ``n_devices // (pod·data)``, which must divide exactly;
+    * the resolved shape must consume **all** ``n_devices`` — requesting
+      fewer is an error, never a silent truncation of the device list
+      (pass an explicit ``devices`` slice to use a subset).
+    """
+    if n_devices < 1:
+        raise ValueError(f"need at least one device, got {n_devices}")
+    for name, deg in (("pod", pod), ("data", data), ("model", model)):
+        if deg is not None and (not isinstance(deg, int) or deg < 1):
+            raise ValueError(
+                f"mesh degree {name}={deg!r} must be a positive int")
+    groups = pod * data
+    if model is None:
+        if n_devices % groups:
+            raise ValueError(
+                f"cannot infer model degree: {n_devices} devices do not "
+                f"divide into pod×data = {pod}×{data} = {groups} replica "
+                f"groups")
+        model = n_devices // groups
+    if groups * model != n_devices:
+        raise ValueError(
+            f"mesh shape (pod={pod}, data={data}, model={model}) needs "
+            f"{groups * model} devices but {n_devices} are visible — "
+            f"refusing to silently truncate the device list; pass an "
+            f"explicit devices= slice to use a subset")
+    return pod, data, model
+
+
+def hybrid_mesh(model: int | None = None, data: int = 1, pod: int = 1,
+                axis: str = DEFAULT_AXIS, devices=None,
+                topology: bool = False) -> TPMesh:
+    """Build a hybrid DP×TP mesh: (data, model), or (pod, data, model).
+
+    The model axis carries the paper's gather/split all-to-alls; the data
+    (and pod) axes carry replica groups whose gradients are psummed.  The
+    "data" axis is always present (degree 1 meshes keep the axis so specs
+    stay uniform); the "pod" axis appears only when ``pod > 1``.
+
+    ``topology=True`` asks ``jax.experimental.mesh_utils`` for a
+    physical-topology-aware device arrangement (on TPU slices the
+    trailing model axis then maps to ICI-adjacent chips, keeping the
+    gather/split all-to-alls off slow links); the default is the plain
+    device-list order, which is deterministic and what the forced-host
+    equivalence tests expect.
+
+    Strict device accounting — see :func:`resolve_mesh_shape`.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    pod, data, model = resolve_mesh_shape(
+        len(devices), model=model, data=data, pod=pod)
+    if pod > 1:
+        shape, axes = (pod, data, model), ("pod", "data", axis)
+        data_axes = ("pod", "data")
+    else:
+        shape, axes = (data, model), ("data", axis)
+        data_axes = ("data",)
+    if topology:
+        from jax.experimental import mesh_utils
+        arr = mesh_utils.create_device_mesh(shape, devices)
+    else:
+        arr = np.array(devices).reshape(shape)
+    return TPMesh(Mesh(arr, axes), axis=axis, data_axes=data_axes)
+
+
+def data_axes_for(mesh, axis: str = DEFAULT_AXIS) -> tuple[str, ...]:
+    """The replica (gradient-psum) axes of ``mesh``, outermost first.
+
+    For a :class:`TPMesh` this is its ``data_axes`` field.  For a raw
+    mesh the known replica names (:data:`DATA_AXES_ORDER`) are picked out
+    — but a mesh whose extra axes are *not* known replica axes raises
+    instead of silently returning ``()`` (the old behaviour dropped
+    unrecognized axes, so a cross-replica grad psum silently became a
+    no-op).  A pure 1-D ``(model,)`` mesh genuinely has no replica axes
+    and returns ``()``.
+    """
+    if isinstance(mesh, TPMesh):
+        return mesh.data_axes
+    names = tuple(mesh.axis_names)
+    if axis not in names:
+        raise ValueError(
+            f"mesh axes {names} have no model axis {axis!r} — cannot "
+            f"derive replica axes")
+    unknown = [a for a in names if a != axis and a not in DATA_AXES_ORDER]
+    if unknown:
+        raise ValueError(
+            f"mesh axes {names} contain {unknown} which are neither the "
+            f"model axis {axis!r} nor known replica axes "
+            f"{DATA_AXES_ORDER} — name them explicitly via "
+            f"TPMesh(mesh, axis=..., data_axes=...)")
+    return tuple(a for a in DATA_AXES_ORDER if a in names)
+
+
+def resolve_replicas(mesh, axis: str = DEFAULT_AXIS,
+                     data_axes=None) -> tuple[int, int]:
+    """(model degree, replica count) of ``mesh`` for the given replica
+    axes — the one place the ``prod(mesh.shape[a])`` resolution lives
+    (the TP/DP factories and their bundle-fit validators all route here).
+    ``data_axes=None`` derives the axes via :func:`data_axes_for`; an
+    explicit tuple (e.g. ``()``, the pure-TP escape hatch) wins over the
+    mesh's own bookkeeping.
+    """
+    if data_axes is None:
+        data_axes = data_axes_for(mesh, axis)
+    if isinstance(mesh, TPMesh):
+        n, m = mesh.size, mesh.mesh
+    else:
+        m = as_mesh(mesh)
+        n = m.shape[axis]
+    replicas = 1
+    for a in data_axes:
+        replicas *= m.shape[a]
+    return n, replicas
 
 
 def as_mesh(mesh) -> Mesh:

@@ -114,7 +114,12 @@ def engine(fn: Callable, in_specs, out_specs, *, mesh=None,
     """The repo-wide sharded-execution entry point.
 
     ``mesh`` may be a TPMesh, a raw jax Mesh, or None (a fresh 1-D "model"
-    mesh over every visible device).  Returns the mapped callable; wrap in
+    mesh over every visible device).  Multi-axis meshes (``hybrid_mesh``'s
+    (data, model) / (pod, data, model)) are first-class on both backends:
+    a spec dimension may name a tuple of mesh axes — the hybrid vertex
+    layout ``P(("model",) + data_axes)`` shards the batch/replica
+    dimension over the data axes while the feature gather/split
+    transitions stay on "model".  Returns the mapped callable; wrap in
     ``jax.jit`` at the call site as usual.
 
     ``backend`` selects how sharded execution is realized:

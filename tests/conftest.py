@@ -20,6 +20,21 @@ DIST_XLA_FLAGS = "--xla_force_host_platform_device_count=8"
 PROGS = os.path.join(os.path.dirname(__file__), "dist_progs")
 
 
+def max_tree_diff(a, b) -> float:
+    """Largest elementwise |a−b| over two pytrees of arrays.
+
+    Goes through numpy so operands committed to *different* meshes (a
+    single-device reference vs an 8-device run) can be compared — jnp
+    binary ops refuse mixed device sets.
+    """
+    import jax
+    import numpy as np
+
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(np.abs(np.asarray(x) - np.asarray(y)).max()),
+        a, b)))
+
+
 def run_dist_prog(name: str, timeout: int = 600) -> None:
     """Run tests/dist_progs/<name> as a child with pinned XLA_FLAGS."""
     env = dict(os.environ)

@@ -1,0 +1,164 @@
+"""8-device cross-mode equivalence for hybrid DP×TP on multi-axis meshes.
+
+On 8 forced host devices, losses AND grads of hybrid (data=2, model=4)
+and (data=4, model=2) training must match pure TP (model=8) and a
+single-device reference to atol 1e-5, for GCN/GAT × all four execution
+modes × both engine backends:
+
+* TP modes (decoupled, decoupled_pipelined, naive) are compared against
+  the pure-TP run of the *same* mode family (decoupled and naive are
+  different models — decoupled applies all propagations after the MLP);
+* mode "dp" (the partition-parallel baseline, GCN only — it has no GAT
+  variant) is exact full-graph training at any partition count, so its
+  hybrid runs are compared against pure dp (k=8) and the same
+  single-device reference as naive TP (coupled GCN ≡ dp ≡ naive TP).
+
+Run as a child process with --xla_force_host_platform_device_count=8.
+"""
+import os
+
+assert "--xla_force_host_platform_device_count=8" in \
+    os.environ.get("XLA_FLAGS", "")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import decouple as D  # noqa: E402
+from repro.gnn import dp_baseline as DP  # noqa: E402
+from repro.gnn import models as M  # noqa: E402
+from repro.graph import sbm_power_law  # noqa: E402
+from repro.runtime import hybrid_mesh, tp_mesh  # noqa: E402
+
+assert len(jax.devices()) == 8
+
+ATOL = 1e-5
+SHAPES = ((2, 4), (4, 2))          # (data, model), both factorizations of 8
+TP_MODES = ("decoupled", "decoupled_pipelined", "naive")
+
+
+def max_tree_diff(a, b):
+    # via numpy: operands come from different meshes (1-device reference
+    # vs 8-device runs), which jnp binary ops refuse to mix
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(np.abs(np.asarray(x) - np.asarray(y)).max()),
+        a, b)))
+
+
+def check(tag, ref, got):
+    dl = abs(float(ref[0]) - float(got[0]))
+    dg = max_tree_diff(ref[1], got[1])
+    assert dl < ATOL and dg < ATOL, (tag, dl, dg)
+
+
+# dims chosen so every padding contract is a no-op across all device
+# shapes (240 % (model·chunks·data) == 0 for every shape below), keeping
+# params shape-identical and grads directly comparable
+data = sbm_power_law(n=240, num_classes=8, feat_dim=16, avg_degree=8, seed=0)
+
+# --- references: single device + pure TP (model=8), explicit backend ---
+bundle1 = D.prepare_bundle(data, n_workers=1, n_chunks=2)
+bundle8 = D.prepare_bundle(data, n_workers=8, n_chunks=2)
+mesh1, mesh8 = tp_mesh(1), tp_mesh(8)
+refs = {}
+for model in ("gcn", "gat"):
+    cfg = D.padded_gnn_config(data, bundle1, model=model, hidden_dim=16,
+                              num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    for mode in ("decoupled", "naive"):
+        single = jax.value_and_grad(D.make_tp_loss_fn(
+            cfg, bundle1, mesh1, mode=mode, backend="explicit"))(
+            params, bundle1.train_mask)
+        pure = jax.value_and_grad(D.make_tp_loss_fn(
+            cfg, bundle8, mesh8, mode=mode, backend="explicit"))(
+            params, bundle8.train_mask)
+        # pure TP must itself agree with the single-device oracle
+        check(f"pure8-vs-single:{model}:{mode}", single, pure)
+        refs[(model, mode)] = (single, pure, params)
+    print(f"refs {model} ok", flush=True)
+
+# --- hybrid TP modes: both (data, model) shapes × both backends ---
+for dd, mm in SHAPES:
+    hm = hybrid_mesh(model=mm, data=dd)
+    assert hm.size == mm and hm.data_size == dd and hm.data_axes == ("data",)
+    bh = D.prepare_bundle(data, n_workers=mm, n_chunks=2, n_replicas=dd)
+    for model in ("gcn", "gat"):
+        cfgh = D.padded_gnn_config(data, bh, model=model, hidden_dim=16,
+                                   num_layers=2)
+        for backend in ("explicit", "constraint"):
+            for mode in TP_MODES:
+                family = "decoupled" if mode.startswith("decoupled") \
+                    else "naive"
+                single, pure, params = refs[(model, family)]
+                got = jax.value_and_grad(D.make_tp_loss_fn(
+                    cfgh, bh, hm, mode=mode, backend=backend))(
+                    params, bh.train_mask)
+                tag = f"d{dd}xm{mm}:{model}:{backend}:{mode}"
+                check(tag + ":vs-pure8", pure, got)
+                check(tag + ":vs-single", single, got)
+        print(f"hybrid d{dd}xm{mm} {model} ok", flush=True)
+
+# --- mode "dp": partition-parallel baseline under the same hybrid meshes ---
+cfg_dp = M.GNNConfig(model="gcn", in_dim=16, hidden_dim=16, num_classes=8,
+                     num_layers=2, decoupled=False)
+params_dp = M.init_params(jax.random.PRNGKey(0), cfg_dp)
+dp8 = DP.prepare_dp_bundle(data, k=8)
+pure_dp = jax.value_and_grad(DP.make_dp_loss_fn(
+    cfg_dp, dp8, mesh8, backend="explicit"))(params_dp, dp8.train_mask)
+# coupled GCN is the same model as naive TP: anchor dp to that oracle too
+naive_single = jax.value_and_grad(D.make_tp_loss_fn(
+    D.padded_gnn_config(data, bundle1, model="gcn", hidden_dim=16,
+                        num_layers=2),
+    bundle1, mesh1, mode="naive", backend="explicit"))(
+    params_dp, bundle1.train_mask)
+check("pure-dp8-vs-single", naive_single, pure_dp)
+for dd, mm in SHAPES:
+    hm = hybrid_mesh(model=mm, data=dd)
+    bh = DP.prepare_dp_bundle(data, k=mm, n_replicas=dd)
+    for backend in ("explicit", "constraint"):
+        got = jax.value_and_grad(DP.make_dp_loss_fn(
+            cfg_dp, bh, hm, backend=backend))(params_dp, bh.train_mask)
+        check(f"dp:d{dd}xm{mm}:{backend}:vs-pure8", pure_dp, got)
+        check(f"dp:d{dd}xm{mm}:{backend}:vs-single", naive_single, got)
+print("dp hybrid ok", flush=True)
+
+# --- 3-axis (pod=2, data=2, model=2): two replica axes, same numerics ---
+pm = hybrid_mesh(model=2, data=2, pod=2)
+assert pm.mesh.axis_names == ("pod", "data", "model")
+assert pm.data_axes == ("pod", "data") and pm.data_size == 4
+bp = D.prepare_bundle(data, n_workers=2, n_chunks=2, n_replicas=4)
+cfgp = D.padded_gnn_config(data, bp, model="gcn", hidden_dim=16,
+                           num_layers=2)
+single, pure, params = refs[("gcn", "decoupled")]
+for backend in ("explicit", "constraint"):
+    got = jax.value_and_grad(D.make_tp_loss_fn(
+        cfgp, bp, pm, mode="decoupled", backend=backend))(
+        params, bp.train_mask)
+    check(f"pod2x2x2:gcn:{backend}:vs-pure8", pure, got)
+    check(f"pod2x2x2:gcn:{backend}:vs-single", single, got)
+bp_dp = DP.prepare_dp_bundle(data, k=2, n_replicas=4)
+got = jax.value_and_grad(DP.make_dp_loss_fn(
+    cfg_dp, bp_dp, pm, backend="explicit"))(params_dp, bp_dp.train_mask)
+check("pod2x2x2:dp:explicit:vs-pure8", pure_dp, got)
+print("pod mesh ok", flush=True)
+
+# --- end-to-end: a few hybrid train steps reduce the loss, eval works ---
+from repro import optim  # noqa: E402
+
+hm = hybrid_mesh(model=4, data=2)
+bh = D.prepare_bundle(data, n_workers=4, n_chunks=2, n_replicas=2)
+cfg = D.padded_gnn_config(data, bh, model="gcn", hidden_dim=16,
+                          num_layers=2)
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+opt = optim.adamw(1e-2)
+step, ev = D.make_tp_train_fns(cfg, bh, hm, opt, mode="decoupled_pipelined",
+                               backend="explicit")
+p, o = params, opt.init(params)
+losses = []
+for _ in range(15):
+    p, o, loss = step(p, o)
+    losses.append(float(loss))
+assert losses[-1] < losses[0], losses
+_, acc = ev(p, "train")
+assert 0.0 <= float(acc) <= 1.0
+
+print("OK check_hybrid_mesh")

@@ -1,0 +1,136 @@
+"""``runtime.collectives`` is the one choke point for wire bytes.
+
+Every collective the engine (either backend) executes must route through
+:mod:`repro.runtime.collectives` — that is what makes per-axis byte/op
+counters (ROADMAP "Collective telemetry") and backend/mesh changes local
+to one module.  These tests pin the invariant at the source level (no
+stray ``jax.lax`` collective calls anywhere else in ``src/repro``) and
+pin the data-axis terms of the analytic comm-volume accounting.
+"""
+import os
+import re
+import sys
+
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC = os.path.join(REPO, "src", "repro")
+
+#: The ops that put bytes on the wire (plus the axis introspection the
+#: engine bodies rely on).  ``with_sharding_constraint`` is exempt: it is
+#: the constraint backend's transition op and lives in runtime/constraint.
+_COLLECTIVE_RE = re.compile(
+    r"\blax\.(psum|pmean|pmax|pmin|all_gather|all_to_all|ppermute|"
+    r"psum_scatter|axis_index|axis_size)\s*\(")
+
+#: Modules allowed to touch jax.lax collectives directly.
+_ALLOWED = {
+    os.path.join("runtime", "collectives.py"),
+}
+
+
+def _py_files():
+    for root, _, files in os.walk(SRC):
+        for f in files:
+            if f.endswith(".py"):
+                yield os.path.join(root, f)
+
+
+def test_no_direct_lax_collectives_outside_runtime():
+    offenders = []
+    for path in _py_files():
+        rel = os.path.relpath(path, SRC)
+        if rel in _ALLOWED:
+            continue
+        with open(path, encoding="utf-8") as fh:
+            for lineno, line in enumerate(fh, 1):
+                if _COLLECTIVE_RE.search(line):
+                    offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "jax.lax collectives must route through runtime.collectives "
+        "(the telemetry/backends choke point):\n" + "\n".join(offenders))
+
+
+def test_no_direct_shard_map_outside_runtime():
+    """Companion invariant (runtime/__init__ docstring): only the runtime
+    layer may call shard_map, any spelling."""
+    pat = re.compile(r"^\s*(from|import)\s+[\w.]*shard_map"
+                     r"|^\s*from\s+[\w.]+\s+import\s+.*\bshard_map\b")
+    offenders = []
+    for path in _py_files():
+        rel = os.path.relpath(path, SRC)
+        if rel.startswith("runtime" + os.sep):
+            continue
+        with open(path, encoding="utf-8") as fh:
+            for lineno, line in enumerate(fh, 1):
+                if pat.search(line):
+                    offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    assert not offenders, "\n".join(offenders)
+
+
+def test_engine_collectives_are_module_routed():
+    """The engine bodies' collective vocabulary exists on the module and
+    the replica ops degrade to identities for pure TP (data_axes=())."""
+    import jax.numpy as jnp
+    from repro.runtime import collectives as C
+
+    for name in ("psum", "all_gather", "all_to_all", "ppermute",
+                 "axis_index", "axis_size", "replica_gather",
+                 "replica_slice", "psum_replicas", "replica_index",
+                 "replica_size"):
+        assert callable(getattr(C, name)), name
+    x = jnp.arange(6.0).reshape(3, 2)
+    # pure-TP identities need no mesh/axis context at all
+    assert C.replica_gather(x, ()) is x
+    assert C.replica_slice(x, ()) is x
+    assert C.psum_replicas(x, ()) is x
+
+
+# ---------------------------------------------------------------------------
+# analytic comm-volume: the data-axis grad all-reduce term
+# ---------------------------------------------------------------------------
+
+def _analytic_volumes():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks.bench_comm_volume import analytic_volumes
+    return analytic_volumes
+
+
+def test_analytic_data_axis_grad_psum_term():
+    """Regression: hybrid DP×TP must account the data-axis gradient
+    all-reduce bytes — pure TP has none, replicas add ring-all-reduce
+    bytes per model group, linear in (data−1)."""
+    analytic_volumes = _analytic_volumes()
+    kw = dict(n=1024, feat=32, hidden=16, classes=8, L=2, halo_rows=100)
+    pure = analytic_volumes(**kw, data=1, model=4, param_bytes=1000)
+    hyb2 = analytic_volumes(**kw, data=2, model=4, param_bytes=1000)
+    hyb4 = analytic_volumes(**kw, data=4, model=4, param_bytes=1000)
+    assert pure["grad_allreduce_data"] == 0
+    # ring all-reduce: 2·(data−1)·param_bytes per model group, model groups
+    assert hyb2["grad_allreduce_data"] == 2 * 1 * 1000 * 4
+    assert hyb4["grad_allreduce_data"] == 2 * 3 * 1000 * 4
+    # fleet-total convention: every replica group redundantly executes
+    # the model-axis a2a/halo traffic, so those columns scale ×data
+    for key in ("naive", "decoupled", "dp"):
+        assert hyb2[key] == 2 * pure[key]
+        assert hyb4[key] == 4 * pure[key]
+
+
+def test_analytic_hybrid_guards():
+    """data>1 without the model-group count or param bytes must raise —
+    silent defaults would zero/undercount the data-axis term."""
+    analytic_volumes = _analytic_volumes()
+    kw = dict(n=64, feat=8, hidden=4, classes=2, L=2, halo_rows=10)
+    with pytest.raises(ValueError, match="model"):
+        analytic_volumes(**kw, data=2, param_bytes=100)
+    with pytest.raises(ValueError, match="param_bytes"):
+        analytic_volumes(**kw, data=2, model=4)
+
+
+def test_analytic_default_is_pure_tp():
+    analytic_volumes = _analytic_volumes()
+    vols = analytic_volumes(n=64, feat=8, hidden=4, classes=2, L=2,
+                            halo_rows=10)
+    assert vols["grad_allreduce_data"] == 0
+    assert vols["naive"] > vols["decoupled"] > 0

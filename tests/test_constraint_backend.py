@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from conftest import run_dist_prog
+from conftest import max_tree_diff, run_dist_prog
 from repro.core import decouple as D
 from repro.gnn import dp_baseline as DP
 from repro.gnn import models as M
@@ -27,11 +27,6 @@ def setup():
                          seed=0)
     bundle = D.prepare_bundle(data, n_workers=1, n_chunks=3)
     return data, bundle, tp_mesh(1)
-
-
-def _max_tree_diff(a, b):
-    return max(jax.tree.leaves(
-        jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b)))
 
 
 @pytest.mark.parametrize("mode", ["decoupled", "decoupled_pipelined",
@@ -48,7 +43,7 @@ def test_single_device_losses_and_grads_match(setup, mode):
         cfg, bundle, mesh, mode=mode, backend="constraint"))(
         params, bundle.train_mask)
     assert abs(float(le) - float(lc)) < 1e-5
-    assert _max_tree_diff(ge, gc) < 1e-5
+    assert max_tree_diff(ge, gc) < 1e-5
 
 
 def test_single_device_dp_matches(setup):
@@ -64,7 +59,7 @@ def test_single_device_dp_matches(setup):
         cfg, dp_bundle, mesh, backend="constraint"))(
         params, dp_bundle.train_mask)
     assert abs(float(le) - float(lc)) < 1e-5
-    assert _max_tree_diff(ge, gc) < 1e-5
+    assert max_tree_diff(ge, gc) < 1e-5
 
 
 def test_constraint_training_converges(setup):

@@ -2,6 +2,8 @@
 
 Each property is a system invariant the design relies on:
   * layout round-trips (the paper's gather/split must be lossless)
+  * mesh factory contracts (exact device accounting — no silent
+    truncation — and the hybrid DP×TP model-major vertex layout)
   * online-softmax streaming == monolithic softmax (flash/ring kernels)
   * blockwise/flash attention == dense oracle under arbitrary raggedness
   * chunked aggregation == monolithic (chunk scheduling §4.2)
@@ -60,6 +62,92 @@ def test_gather_split_roundtrip(n, v_mult, d_mult, seed):
             np.asarray(h[:, j * (d // n):(j + 1) * (d // n)]))
     back = _sim_gather(ds, n)
     np.testing.assert_array_equal(np.asarray(back), np.asarray(vs))
+
+
+# ---------------------------------------------------------------------------
+# multi-axis mesh factory: exact device accounting + hybrid layout contract
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(st.integers(1, 64), st.integers(1, 5), st.integers(1, 3),
+       st.one_of(st.none(), st.integers(1, 8)))
+def test_mesh_shape_resolution_never_truncates(n_devices, data, pod, model):
+    """resolve_mesh_shape either consumes exactly n_devices or raises —
+    the old make_host_mesh silently used devs[:data*model]."""
+    from repro.runtime import resolve_mesh_shape
+    try:
+        p, d, m = resolve_mesh_shape(n_devices, model=model, data=data,
+                                     pod=pod)
+    except ValueError:
+        # the request must be a genuine misfit, never a fixable-by-
+        # truncation one that got refused arbitrarily
+        if model is not None:
+            assert pod * data * model != n_devices
+        else:
+            assert n_devices % (pod * data) != 0
+        return
+    assert (p, d) == (pod, data)
+    assert p * d * m == n_devices
+    if model is not None:
+        assert m == model
+
+
+@settings(**SET)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 120),
+       st.integers(1, 48))
+def test_mesh_divisibility_contract_or_rectangular_error(n, dd, v, d):
+    """Arbitrary (V, D, data, model) either satisfies the padding
+    contract (vertices divide model·data, features divide model) or
+    validate_divisible raises the rectangular-gather error."""
+    from repro.runtime import TPMesh, tp_mesh
+
+    class Fake(TPMesh):
+        @property
+        def size(self):
+            return n
+
+        @property
+        def data_size(self):
+            return dd
+
+    fake = Fake(tp_mesh(1).mesh)
+    fits = (v % (n * dd) == 0) and (d % n == 0)
+    if fits:
+        fake.validate_divisible(n_vertices=v, dim=d)
+    else:
+        with pytest.raises(ValueError, match="rectangular gather/split"):
+            fake.validate_divisible(n_vertices=v, dim=d)
+
+
+@settings(**SET)
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4),
+       st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_hybrid_vertex_layout_roundtrip(n, dd, v_mult, d_mult, seed):
+    """The hybrid vertex layout is model-major over (model, data): a
+    replica-gather must reconstruct each model worker's *contiguous*
+    pure-TP shard, the gather/split round-trip holds on it, and a
+    replica-slice lands every device back on its original block."""
+    k = n * dd
+    v, d = k * v_mult, n * d_mult
+    h = jax.random.normal(jax.random.PRNGKey(seed % 2**31), (v, d))
+    vk = v // k
+    # device (replica r, model worker j) owns model-major block j·dd + r
+    blocks = [[h[(j * dd + r) * vk:(j * dd + r + 1) * vk]
+               for r in range(dd)] for j in range(n)]
+    # replica_gather (concat over the data axis) → contiguous TP shards
+    gathered = jnp.stack(
+        [jnp.concatenate(blocks[j], axis=0) for j in range(n)])
+    np.testing.assert_array_equal(
+        np.asarray(gathered.reshape(v, d)), np.asarray(h))
+    # the pure-TP split/gather round-trip on the reconstructed shards
+    back = _sim_gather(_sim_split(gathered, n), n)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(gathered))
+    # replica_slice recovers each device's original rows
+    for j in range(n):
+        for r in range(dd):
+            np.testing.assert_array_equal(
+                np.asarray(back[j][r * vk:(r + 1) * vk]),
+                np.asarray(blocks[j][r]))
 
 
 # ---------------------------------------------------------------------------
