@@ -10,15 +10,82 @@ Tags are ``<prefix><mode>`` for the default explicit backend and
 ``<prefix><mode>_constraint`` for the constraint backend, so existing
 consumers of the explicit rows are unaffected.  ``--data R`` trains on a
 hybrid (data=R, model=devices/R) mesh instead of pure TP; hybrid rows
-get a ``_d<R>x<model>`` suffix and report ``replicas=R`` so the census
-columns (a2a = model-axis gather/split, ar = reductions incl. the
-data-axis grad all-reduce) can be split by axis kind.
+get a ``_d<R>x<model>`` suffix and report ``replicas=R``.
+
+Measured communication columns (always present): the **telemetry
+ledger** — trace-time collective counters collected at the runtime choke
+point while the train step traces (:mod:`repro.runtime.telemetry`):
+
+    led_a2a    per-device model-axis all-to-all ring wire bytes per
+               train step (fwd + autodiff-mirrored bwd)
+    led_a2a_n  its collective count (decoupled: the paper's 4/epoch)
+    led_ag     per-device all-gather wire bytes, all axes
+    led_agd    the data-axis (replica_gather) share — nonzero iff the
+               hybrid replica plumbing ran
+
+``--assert-ledger`` additionally asserts, in-process at full precision,
+that the ledger matches the analytic §3.2 formulas
+(:func:`benchmarks.bench_comm_volume.expected_ledger`) — and the HLO
+census when enabled.  ``--hlo-census`` appends the demoted HLO-regex
+census columns (a2a/ag/ar/rs = per-device wire bytes split by HLO kind)
+as an independent cross-check of the ledger.  ``--trace-only`` skips
+execution and timing entirely (rows carry 0.0 μs and loss=nan): tracing
+alone fills the ledger, which is what ci.sh's telemetry smoke uses.
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import math
 import time
+
+
+def _ledger_columns(ledger, axis: str, data_axes: tuple) -> dict:
+    led_a2a = ledger.wire_bytes("all_to_all", axis, train=True)
+    return {
+        "led_a2a": led_a2a,
+        "led_a2a_n": ledger.call_count("all_to_all", axis, train=True),
+        "led_ag": ledger.wire_bytes("all_gather", train=True),
+        "led_agd": sum(ledger.wire_bytes("all_gather", a, train=True)
+                       for a in data_axes),
+    }
+
+
+def _assert_ledger(tag: str, mode: str, model_name: str, led: dict,
+                   census: dict | None, expected: dict | None) -> None:
+    """Full-precision in-process cross-asserts (--assert-ledger).
+
+    ledger-vs-analytic is exact (same numbers, two derivations);
+    ledger-vs-census is the independent parser cross-check.  Raises with
+    every number on mismatch so the report shows the full picture.
+    """
+    problems = []
+    if expected is not None and model_name == "gcn":
+        if not math.isclose(led["led_a2a"], expected["a2a_wire"],
+                            rel_tol=1e-9, abs_tol=1e-6):
+            problems.append(
+                f"ledger a2a {led['led_a2a']!r} != analytic "
+                f"{expected['a2a_wire']!r}")
+        if led["led_a2a_n"] != expected["a2a_calls"]:
+            problems.append(
+                f"ledger a2a count {led['led_a2a_n']!r} != analytic "
+                f"{expected['a2a_calls']!r}")
+        if expected["ag_data_wire"] and not math.isclose(
+                led["led_agd"], expected["ag_data_wire"],
+                rel_tol=1e-9, abs_tol=1e-6):
+            problems.append(
+                f"ledger data-axis ag {led['led_agd']!r} != analytic "
+                f"{expected['ag_data_wire']!r}")
+    if census is not None:
+        if not math.isclose(led["led_a2a"], census["all-to-all"],
+                            rel_tol=1e-9, abs_tol=1e-6):
+            problems.append(
+                f"ledger a2a {led['led_a2a']!r} != HLO census "
+                f"{census['all-to-all']!r}")
+    if led["led_a2a"] <= 0:
+        problems.append("ledger a2a is zero — collection did not run "
+                        "(was the step already traced?)")
+    if problems:
+        raise AssertionError(f"{tag} [{mode}]: " + "; ".join(problems))
 
 
 def main():
@@ -39,8 +106,15 @@ def main():
     ap.add_argument("--graph", default="sbm", choices=["sbm", "ba"])
     ap.add_argument("--epochs", type=int, default=3)
     ap.add_argument("--tag-prefix", default="")
-    ap.add_argument("--census", action="store_true",
-                    help="also report collective wire bytes per epoch")
+    ap.add_argument("--hlo-census", action="store_true",
+                    help="also report the HLO-regex census columns "
+                         "(demoted cross-check of the telemetry ledger)")
+    ap.add_argument("--assert-ledger", action="store_true",
+                    help="assert ledger == analytic formulas (and == "
+                         "census when --hlo-census) in-process")
+    ap.add_argument("--trace-only", action="store_true",
+                    help="trace + collect the ledger only; skip "
+                         "execution, timing and HLO compilation")
     ap.add_argument("--data", type=int, default=1,
                     help="replica-group count: (data, model) hybrid mesh "
                          "with model = devices/data; 1 = pure TP")
@@ -53,8 +127,7 @@ def main():
     from repro.gnn import dp_baseline as DP
     from repro.gnn import models as M
     from repro.graph import barabasi_albert, sbm_power_law
-    from repro.launch.roofline import hlo_census
-    from repro.runtime import hybrid_mesh, tp_mesh
+    from repro.runtime import collect_comm, hybrid_mesh, tp_mesh
 
     n_dev = len(jax.devices())
     if args.data > 1:
@@ -90,6 +163,8 @@ def main():
                                       hidden_dim=args.hidden,
                                       num_layers=args.layers)
         params = M.init_params(jax.random.PRNGKey(0), cfg)
+        expected = _expected_for(args, mode, k, replicas, bundle, cfg) \
+            if args.assert_ledger else None
         for backend in args.backends.split(","):
             if mode == "dp":
                 step, _ = DP.make_dp_train_fns(cfg, bundle, mesh, opt,
@@ -99,31 +174,83 @@ def main():
                                               mode=mode, backend=backend)
             o = opt.init(params)
             p = params
-            # warmup (compile)
-            p, o, loss = step(p, o)
-            jax.block_until_ready(loss)
-            t0 = time.perf_counter()
-            for _ in range(args.epochs):
+            # the telemetry ledger fills during the FIRST trace of the
+            # step — collect around .lower() before any execution (a
+            # cached trace records nothing); subsequent step() calls hit
+            # the trace cache, so the timing loop is unaffected
+            with collect_comm() as ledger:
+                lowered = step.lower(p, o)
+            led = _ledger_columns(ledger, mesh.axis, mesh.data_axes)
+            if args.trace_only:
+                dt, loss = 0.0, float("nan")
+            else:
+                # warmup (compile)
                 p, o, loss = step(p, o)
-            jax.block_until_ready(loss)
-            dt = (time.perf_counter() - t0) / args.epochs
+                jax.block_until_ready(loss)
+                t0 = time.perf_counter()
+                for _ in range(args.epochs):
+                    p, o, loss = step(p, o)
+                jax.block_until_ready(loss)
+                dt = (time.perf_counter() - t0) / args.epochs
             derived = f"workers={k};replicas={replicas};" \
                       f"loss={float(loss):.3f}"
-            if args.census:
+            derived += (f";led_a2a={led['led_a2a']:.6e}"
+                        f";led_a2a_n={led['led_a2a_n']:.0f}"
+                        f";led_ag={led['led_ag']:.6e}"
+                        f";led_agd={led['led_agd']:.6e}")
+            cb = None
+            if args.hlo_census:
+                from repro.launch.roofline import hlo_census
                 try:
-                    txt = step.lower(p, o).compile().as_text()
+                    txt = lowered.compile().as_text()
                     cb = hlo_census(txt)["collectives"]
-                    derived += (f";coll_bytes={cb['total']:.3e}"
-                                f";a2a={cb['all-to-all']:.3e}"
-                                f";ag={cb['all-gather']:.3e}"
-                                f";ar={cb['all-reduce']:.3e}")
+                    derived += (f";coll_bytes={cb['total']:.6e}"
+                                f";a2a={cb['all-to-all']:.6e}"
+                                f";ag={cb['all-gather']:.6e}"
+                                f";ar={cb['all-reduce']:.6e}"
+                                f";rs={cb['reduce-scatter']:.6e}")
                 except Exception as e:  # noqa: BLE001
+                    if args.assert_ledger:
+                        raise
                     derived += f";census_error={type(e).__name__}"
+            if args.assert_ledger:
+                _assert_ledger(args.tag_prefix + mode, mode, args.model,
+                               led, cb, expected)
+                derived += ";led_ok=1"
             tag = mode if backend == "explicit" else f"{mode}_{backend}"
             if replicas > 1:
                 tag += f"_d{replicas}x{k}"
             print(f"{args.tag_prefix}{tag},{dt*1e6:.1f},{derived}",
                   flush=True)
+
+
+def _expected_for(args, mode: str, k: int, replicas: int, bundle, cfg):
+    """Analytic expected-ledger values for this row, or None where no
+    exact model exists (pipelined padding, hybrid dp, non-GCN)."""
+    if args.model != "gcn":
+        return None
+    try:
+        from .bench_comm_volume import expected_ledger
+    except ImportError:  # run as a script, not -m benchmarks._dist_gnn
+        import os
+        import sys
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        if repo not in sys.path:
+            sys.path.insert(0, repo)
+        from benchmarks.bench_comm_volume import expected_ledger
+
+    try:
+        if mode == "dp":
+            return expected_ledger(
+                "dp", n=args.n, feat=args.feat_dim, hidden=args.hidden,
+                classes=args.classes, L=args.layers, model=k,
+                data=replicas, halo_slots=k * k * bundle.graph.m)
+        return expected_ledger(
+            mode, n=bundle.n_padded, feat=cfg.in_dim,
+            hidden=cfg.hidden_dim, classes=cfg.num_classes,
+            L=cfg.num_layers, model=k, data=replicas)
+    except ValueError:
+        return None
 
 
 if __name__ == "__main__":

@@ -1,18 +1,29 @@
 """Paper Fig. 8 + §3.2: communication volume & frequency — naive TP vs
 decoupled TP vs data parallelism.
 
-Two measurements:
-  * analytic bytes/epoch from the paper's formulas instantiated on the real
-    graph + halo plan (what Fig. 10(b) plots), and
-  * measured collective wire bytes from the compiled 8-worker HLO (census
-    over the actual runtime-engine sharded programs), reported for BOTH
-    engine backends side by side: the explicit shard_map path and the
-    pjit/constraint path must show identical all-to-all wire bytes — the
-    constraint backend changes who *schedules* the collectives, not what
-    goes over the wire.
+Three measurements, cross-asserted:
 
-``--analytic-only`` skips the subprocess census (used by scripts/ci.sh as
-a fast formula-regression smoke).
+  * analytic bytes/epoch from the paper's formulas instantiated on the
+    real graph + halo plan (what Fig. 10(b) plots);
+  * the **telemetry ledger** — trace-time collective counters from the
+    runtime choke point (:mod:`repro.runtime.telemetry`), the primary
+    measured columns (``led_*``), asserted *exactly* against the
+    analytic formulas via :func:`expected_ledger`;
+  * the HLO-regex census (:func:`repro.launch.roofline.hlo_census`),
+    demoted to an independent cross-check behind ``--hlo-census`` —
+    ledger and census must agree byte-for-byte, so a silent-zero
+    regression in either (two shipped in the census parser already)
+    fails loudly.
+
+Both engine backends are reported side by side: the explicit shard_map
+path and the pjit/constraint path must show identical all-to-all wire
+bytes — the constraint backend changes who *schedules* the collectives,
+not what goes over the wire.
+
+``--analytic-only`` skips every subprocess (pure formula smoke);
+``--telemetry-smoke`` additionally runs a fast trace-only subprocess
+(no execution, no HLO compile) that asserts ledger == analytic on a
+small workload — the tier-1 cross-check scripts/ci.sh runs.
 """
 from __future__ import annotations
 
@@ -73,12 +84,97 @@ def analytic_volumes(n: int, feat: int, hidden: int, classes: int, L: int,
     }
 
 
+def expected_ledger(mode: str, *, n: int, feat: int, hidden: int,
+                    classes: int, L: int, model: int, data: int = 1,
+                    halo_slots: int | None = None) -> dict:
+    """Telemetry-ledger quantities implied by the analytic §3.2 formulas.
+
+    Converts the fleet-total forward *payload* convention of
+    :func:`analytic_volumes` into the ledger's convention — per-device
+    ring wire bytes of one train step (fwd + autodiff-mirrored bwd):
+
+    * per-device = per-group payload / ``model`` (the a2a moves each
+      group's block once, and every replica group runs the same ops, so
+      the per-device number is replica-count-independent);
+    * ring wire = payload × (model−1)/model (the local block never
+      crosses the wire — same model as the HLO census);
+    * backward mirrors every forward a2a whose *input is differentiated*:
+      both decoupled transitions are (4 a2a/epoch total, the paper's
+      frequency), but the coupled forwards' layer-0 collectives move raw
+      input features — the backward stops at the first weight matmul, so
+      naive counts 2L + 2(L−1) = ``naive_per_epoch − 2`` a2a and dp
+      counts L + (L−1), with the byte sums shrunk accordingly (the HLO
+      census confirms this is what autodiff actually emits).
+
+    ``dims`` (all pre-padded by the caller to the mesh contract — padding
+    must be a no-op for exactness) follow the layer-*input* convention of
+    :func:`analytic_volumes`.  ``mode="dp"`` needs ``halo_slots``: the
+    fleet count of *padded* per-layer send slots ``k·k·m`` — the
+    rectangular halo all-to-all moves its padding zeros too, which the
+    halo_rows-based analytic "dp" key deliberately excludes.
+
+    Hybrid (``data > 1``, single data axis) adds ``ag_data_wire``: the
+    per-device data-axis all-gather wire bytes of the replica_gather
+    transitions ((data−1) × per-device payload per gather, layer-0
+    unmirrored for the coupled modes).  Raises for hybrid dp — its
+    per-partition row padding is bundle-dependent, so the bench does not
+    assert it.
+    """
+    vols = analytic_volumes(n=n, feat=feat, hidden=hidden, classes=classes,
+                            L=L, halo_rows=0)
+    dims = [feat] + [hidden] * (L - 1)       # per-layer input dims
+    ring = (model - 1) / model
+    if mode == "decoupled":
+        fwd = vols["decoupled"]
+        bwd = fwd
+        calls = vols["decoupled_per_epoch"]
+    elif mode == "naive":
+        fwd = vols["naive"]
+        bwd = sum(2 * n * d * F32 for d in dims[1:])
+        calls = vols["naive_per_epoch"] - 2
+    elif mode == "dp":
+        if data > 1:
+            raise ValueError(
+                "hybrid dp rows are not analytically modelled (replica "
+                "padding of n_local_max is bundle-dependent) — do not "
+                "assert them")
+        if halo_slots is None:
+            raise ValueError(
+                "mode='dp' needs halo_slots (= k·k·m padded send slots "
+                "per layer) — the rectangular halo a2a moves its padding "
+                "zeros, which halo_rows excludes")
+        fwd = sum(halo_slots * d * F32 for d in dims)
+        bwd = sum(halo_slots * d * F32 for d in dims[1:])
+        calls = 2 * L - 1
+    else:
+        raise ValueError(
+            f"no exact analytic ledger model for mode {mode!r} (the "
+            f"pipelined chunk tables are padded — cross-check that mode "
+            f"against the HLO census instead)")
+    out = {"a2a_wire": (fwd + bwd) / model * ring, "a2a_calls": calls,
+           "ag_data_wire": 0.0}
+    if data > 1:
+        if mode == "decoupled":
+            gathers = [(n * classes * F32, True)]
+        else:   # naive: one replica_gather per layer, layer-0 unmirrored
+            gathers = [(n * d * F32, i > 0) for i, d in enumerate(dims)]
+        ag = 0.0
+        for fleet_payload, mirrored in gathers:
+            per_dev = fleet_payload / (model * data)
+            ag += (data - 1) * per_dev * (2 if mirrored else 1)
+        out["ag_data_wire"] = ag
+    return out
+
+
 def main(argv=()):
     # default () so run.py's ``main()`` never sees run.py's own sys.argv;
     # the CLI entry below passes sys.argv[1:] explicitly.
     ap = argparse.ArgumentParser()
     ap.add_argument("--analytic-only", action="store_true",
-                    help="skip the 8-device subprocess HLO census")
+                    help="formulas only: skip every subprocess")
+    ap.add_argument("--telemetry-smoke", action="store_true",
+                    help="formulas + a fast trace-only subprocess "
+                         "asserting ledger == analytic (ci.sh tier-1)")
     args = ap.parse_args(argv)
 
     from repro.graph import chunk_partition, halo_plan, sbm_power_law
@@ -117,6 +213,17 @@ def main(argv=()):
     assert hyb["naive"] == 2 * vols["naive"] and \
         hyb["decoupled"] == 2 * vols["decoupled"], \
         "hybrid fleet a2a must scale with the replica count"
+    # expected-ledger pins: the ledger convention of the same formulas —
+    # per-device ring wire bytes per train step (these exact numbers were
+    # independently measured by the PR 2 HLO census: 1.147e5 / 9.175e5)
+    exp_dec = expected_ledger("decoupled", n=n, feat=feat, hidden=hidden,
+                              classes=classes, L=L, model=k)
+    exp_nai = expected_ledger("naive", n=n, feat=feat, hidden=hidden,
+                              classes=classes, L=L, model=k)
+    assert exp_dec["a2a_wire"] == 114688.0, exp_dec
+    assert exp_dec["a2a_calls"] == 4, exp_dec
+    assert exp_nai["a2a_wire"] == 917504.0, exp_nai
+    assert exp_nai["a2a_calls"] == 6, exp_nai
 
     emit("comm_volume_analytic_naive_tp", 0.0,
          f"bytes_fwd={vols['naive']:.3e}")
@@ -131,25 +238,48 @@ def main(argv=()):
          f"naive_per_epoch={vols['naive_per_epoch']};"
          f"decoupled_per_epoch={vols['decoupled_per_epoch']}")
 
-    # --- measured from compiled HLO (full train step, fwd+bwd), both
-    # engine backends: identical a2a wire bytes, different scheduler ---
-    if not args.analytic_only:
+    if args.telemetry_smoke:
+        # fast tier-1 lane: trace-only (no execution, no HLO compile) on a
+        # small divisible workload; _dist_gnn --assert-ledger does the
+        # exact ledger-vs-analytic comparison in-process at full precision
+        smoke = run_subprocess_bench(
+            "benchmarks._dist_gnn", devices=8,
+            args=["--modes", "dp,naive,decoupled", "--trace-only",
+                  "--assert-ledger", "--n", "512", "--feat-dim", "32",
+                  "--hidden", "32", "--tag-prefix", "telemetry_smoke_"])
+        print(record_output(smoke), end="")
+        smoke_h = run_subprocess_bench(
+            "benchmarks._dist_gnn", devices=8,
+            args=["--modes", "decoupled,naive", "--trace-only",
+                  "--assert-ledger", "--data", "2", "--n", "512",
+                  "--feat-dim", "32", "--hidden", "32",
+                  "--tag-prefix", "telemetry_smoke_"])
+        print(record_output(smoke_h), end="")
+        _require_ledger_rows(smoke + smoke_h, "telemetry_smoke_")
+
+    # --- measured, both engine backends: the telemetry ledger is the
+    # primary column (asserted against the analytic formulas in-process
+    # by --assert-ledger), the HLO census rides along as a cross-check ---
+    if not (args.analytic_only or args.telemetry_smoke):
         out = run_subprocess_bench(
             "benchmarks._dist_gnn", devices=8,
-            args=["--modes", "dp,naive,decoupled", "--census",
+            args=["--modes", "dp,naive,decoupled", "--hlo-census",
+                  "--assert-ledger",
                   "--backends", "explicit,constraint",
                   "--tag-prefix", "comm_volume_measured_"])
         print(record_output(out), end="")
         _check_backend_parity(out)
 
         # hybrid (data=2, model=4) on the same 8 devices: the a2a column
-        # is model-axis gather/split traffic; the data axis shows up as
-        # all-gather bytes (replica_gather) that pure-TP GCN rows never
-        # have — the discriminating signal that the replica plumbing ran
+        # is model-axis gather/split traffic; the data axis shows up in
+        # the ledger's led_agd column (replica_gather wire bytes) and in
+        # the census all-gather column — traffic pure-TP GCN rows
+        # provably lack
         hyb_out = run_subprocess_bench(
             "benchmarks._dist_gnn", devices=8,
-            args=["--modes", "decoupled,naive", "--census",
-                  "--data", "2",
+            args=["--modes", "decoupled,naive", "--hlo-census",
+                  "--assert-ledger", "--data", "2",
+                  "--backends", "explicit,constraint",
                   "--tag-prefix", "comm_volume_measured_"])
         print(record_output(hyb_out), end="")
         _check_hybrid_census(hyb_out, out)
@@ -164,13 +294,30 @@ def _census_field(derived: str, key: str) -> float | None:
     return None
 
 
+def _require_ledger_rows(out: str, prefix: str) -> None:
+    """Every row of a --assert-ledger run must carry nonzero led_a2a and
+    the in-process assertion marker — an empty ledger that still printed
+    rows would be the silent-zero failure mode."""
+    from .common import parse_rows
+
+    rows = [r for r in parse_rows(out) if r["name"].startswith(prefix)]
+    assert rows, f"no {prefix}* rows in child output"
+    bad = [r["name"] for r in rows
+           if not (_census_field(r["derived"], "led_a2a") or 0) > 0
+           or _census_field(r["derived"], "led_ok") != 1.0]
+    assert not bad, f"rows without asserted ledger bytes: {bad}"
+
+
 def _check_hybrid_census(hyb_out: str, pure_out: str) -> None:
     """Hybrid rows must show *data-axis* traffic on top of the model-axis
-    all-to-alls.  The discriminator is the all-gather column: explicit
-    GCN decoupled/naive on pure TP emit no all-gathers at all (split and
+    all-to-alls.  Primary signal: the ledger's ``led_agd`` column (the
+    replica_gather data-axis wire bytes, asserted against the analytic
+    expectation in-process by --assert-ledger) must be nonzero.
+    Cross-check: the census all-gather column — explicit GCN
+    decoupled/naive on pure TP emit no all-gathers at all (split and
     gather are a2a, reductions are ar), so ``hybrid ag > pure ag`` holds
     iff the replica_gather/psum-scatter plumbing actually ran — a
-    silently-dropped data axis (``data_axes=()``) would zero it while
+    silently-dropped data axis (``data_axes=()``) would zero both while
     leaving a2a and ar plausible-looking."""
     from .common import parse_rows
 
@@ -178,43 +325,57 @@ def _check_hybrid_census(hyb_out: str, pure_out: str) -> None:
     pure = {r["name"]: r["derived"] for r in parse_rows(pure_out)}
     problems = []
     for mode in ("decoupled", "naive"):
-        derived = hyb.get(f"comm_volume_measured_{mode}_d2x4")
-        a2a = _census_field(derived, "a2a") if derived else None
-        ag = _census_field(derived, "ag") if derived else None
-        pure_derived = pure.get(f"comm_volume_measured_{mode}")
-        pure_ag = _census_field(pure_derived, "ag") if pure_derived \
-            else None
-        ok = (a2a is not None and a2a > 0 and ag is not None
-              and pure_ag is not None and ag > pure_ag)
-        emit(f"comm_volume_hybrid_census_{mode}", 0.0,
-             f"a2a={a2a};ag={ag};pure_ag={pure_ag};ok={ok}")
-        if not ok:
-            problems.append((mode, a2a, ag, pure_ag))
+        for bk in ("", "_constraint"):
+            derived = hyb.get(f"comm_volume_measured_{mode}{bk}_d2x4")
+            a2a = _census_field(derived, "a2a") if derived else None
+            ag = _census_field(derived, "ag") if derived else None
+            led_agd = _census_field(derived, "led_agd") if derived \
+                else None
+            pure_derived = pure.get(f"comm_volume_measured_{mode}{bk}")
+            pure_ag = _census_field(pure_derived, "ag") if pure_derived \
+                else None
+            ok = (a2a is not None and a2a > 0
+                  and led_agd is not None and led_agd > 0
+                  and ag is not None and pure_ag is not None
+                  and ag > pure_ag)
+            emit(f"comm_volume_hybrid_census_{mode}{bk}", 0.0,
+                 f"a2a={a2a};led_agd={led_agd};ag={ag};"
+                 f"pure_ag={pure_ag};ok={ok}")
+            if not ok:
+                problems.append((mode, bk, a2a, led_agd, ag, pure_ag))
     assert not problems, problems
 
 
 def _check_backend_parity(out: str) -> None:
     """The constraint backend moves who *schedules* the all-to-alls, not
-    what crosses the wire: per mode, measured a2a bytes must be identical
-    across backends."""
+    what crosses the wire: per mode, the ledger's measured a2a bytes must
+    be identical across backends — and must match the census cross-check
+    column (``a2a``), which an in-process assert already compared at full
+    precision (led_ok)."""
     from .common import parse_rows
 
-    a2a = {}
+    led, census = {}, {}
     for row in parse_rows(out):
-        b = _census_field(row["derived"], "a2a")
+        b = _census_field(row["derived"], "led_a2a")
         if b is not None:
-            a2a[row["name"]] = b
+            led[row["name"]] = b
+        c = _census_field(row["derived"], "a2a")
+        if c is not None:
+            census[row["name"]] = c
     mismatches = []
     for mode in ("dp", "naive", "decoupled"):
-        e = a2a.get(f"comm_volume_measured_{mode}")
-        c = a2a.get(f"comm_volume_measured_{mode}_constraint")
-        # e > 0 guards the census itself: a parser regression that zeroes
-        # a2a bytes on both backends would otherwise pass as 0.0 == 0.0
-        ok = e is not None and e > 0 and e == c
+        e = led.get(f"comm_volume_measured_{mode}")
+        c = led.get(f"comm_volume_measured_{mode}_constraint")
+        ce = census.get(f"comm_volume_measured_{mode}")
+        # e > 0 guards the collection itself: an empty ledger (or a
+        # census parser regression) zeroing both sides would otherwise
+        # pass as 0.0 == 0.0
+        ok = e is not None and e > 0 and e == c and ce == e
         emit(f"comm_volume_backend_parity_{mode}", 0.0,
-             f"explicit_a2a={e};constraint_a2a={c};equal={ok}")
+             f"explicit_led_a2a={e};constraint_led_a2a={c};"
+             f"census_a2a={ce};equal={ok}")
         if not ok:
-            mismatches.append((mode, e, c))
+            mismatches.append((mode, e, c, ce))
     # emit every mode's parity row before failing so a mismatch report
     # shows the full picture, not just the first mode
     assert not mismatches, mismatches

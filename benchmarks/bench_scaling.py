@@ -1,7 +1,12 @@
 """Paper Fig. 12: per-epoch runtime vs cluster size (2/4/8 workers),
 plus hybrid DP×TP shapes of the 8-device budget — (data=2, model=4) and
 (data=4, model=2) — so the scaling table shows how the same devices trade
-model-axis a2a volume against data-axis grad all-reduce volume."""
+model-axis a2a volume against data-axis grad all-reduce volume.
+
+Every row also carries the telemetry-ledger columns (``led_a2a`` /
+``led_agd`` — per-device train-step wire bytes measured at trace time by
+:mod:`repro.runtime.telemetry`), so the a2a-vs-replica-traffic tradeoff
+is read directly off the measured table instead of an HLO census."""
 from __future__ import annotations
 
 from .common import record_output, run_subprocess_bench, write_json

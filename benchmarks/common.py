@@ -20,8 +20,8 @@ import sys
 import time
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
-RESULTS_DIR = os.path.abspath(
-    os.path.join(os.path.dirname(__file__), "..", "results"))
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+RESULTS_DIR = os.path.join(REPO_ROOT, "results")
 
 #: Rows buffered for :func:`write_json` (cleared on each write).
 _ROWS: list[dict] = []
@@ -62,12 +62,23 @@ def record_output(text: str) -> str:
 
 
 def write_json(bench_name: str, out_dir: str = RESULTS_DIR) -> str:
-    """Persist the buffered rows as ``<out_dir>/BENCH_<bench_name>.json``."""
+    """Persist the buffered rows as ``<out_dir>/BENCH_<bench_name>.json``.
+
+    The payload is also mirrored to ``BENCH_<bench_name>.json`` at the
+    repo root: the perf-trajectory tooling only scans the root, so runs
+    that landed exclusively under results/ were invisible to it (an
+    empty trajectory despite results existing)."""
+    payload = json.dumps({"bench": bench_name, "entries": list(_ROWS)},
+                         indent=2) + "\n"
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{bench_name}.json")
-    with open(path, "w") as f:
-        json.dump({"bench": bench_name, "entries": list(_ROWS)}, f, indent=2)
-        f.write("\n")
+    targets = [path]
+    root_path = os.path.join(REPO_ROOT, f"BENCH_{bench_name}.json")
+    if os.path.abspath(root_path) != os.path.abspath(path):
+        targets.append(root_path)
+    for p in targets:
+        with open(p, "w") as f:
+            f.write(payload)
     _ROWS.clear()
     return path
 

@@ -13,11 +13,16 @@
 # it) so the runtime-engine collectives execute across 8 real device
 # buffers.
 #
-# The bench smoke runs the analytic half of bench_comm_volume (no
-# subprocess HLO census) so comm-volume formula regressions — like naive
-# TP summing layer-output dims instead of layer-input dims — fail tier-1
-# instead of silently skewing the Fig. 8 comparison.  Its asserts live in
-# benchmarks/bench_comm_volume.py and now cover the data-axis terms of
+# The bench smoke runs the analytic half of bench_comm_volume plus the
+# telemetry smoke: a fast trace-only 8-device subprocess in which the
+# trace-time collective ledger (repro.runtime.telemetry) must match the
+# analytic comm-volume formulas exactly (led_a2a vs expected_ledger,
+# asserted in-process by _dist_gnn --assert-ledger, pure TP and a
+# (data=2, model=4) hybrid).  So both formula regressions — like naive
+# TP summing layer-output dims instead of layer-input dims — AND
+# telemetry accounting regressions fail tier-1 instead of silently
+# skewing the Fig. 8 comparison.  Asserts live in
+# benchmarks/bench_comm_volume.py and cover the data-axis terms of
 # hybrid DP×TP (grad_allreduce_data pins: zero for pure TP, ring-bytes
 # per model group for (data=2, model=4); model-axis a2a volumes must not
 # change with the replica count).
@@ -35,7 +40,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -q -m "not slow"
 
-python -m benchmarks.bench_comm_volume --analytic-only
+python -m benchmarks.bench_comm_volume --telemetry-smoke
 
 if [[ "${1:-}" != "--fast" ]]; then
     python -m pytest -q -m slow

@@ -14,6 +14,16 @@ moved:
 
 Plans are static, rectangular (padded) index tables so each task is a single
 `all_to_all`; padding rows are dropped via out-of-range scatter indices.
+
+Telemetry: the per-chunk all-to-alls below run inside ``jax.lax.scan``
+bodies that trace once but execute n_chunks× — the scan call sites in
+``core/decouple.py`` wrap them in
+:func:`repro.runtime.telemetry.loop_scope` so a collecting ledger counts
+them trip× (cross-checked byte-for-byte against the HLO census's
+while-loop trip constants by tests/dist_progs/check_telemetry.py).  Note
+the padded tables mean the pipelined bytes are an upper bound on the
+dedup'd ideal — the analytic-exactness asserts use the *unpipelined*
+decoupled mode, where no padding is in play.
 """
 from __future__ import annotations
 

@@ -59,6 +59,7 @@ from ..graph.synthetic import GraphData
 from ..runtime import collectives as C
 from ..runtime import constraint as K
 from ..runtime import engine
+from ..runtime import telemetry as T
 from . import chunks as CH
 from . import tp
 
@@ -211,8 +212,13 @@ def _round_split_pipelined(h_local, cg: L.ChunkedDev, plan: CH.ChunkCommPlan,
         out = _chunk_agg(zbuf, src, dst_local, w, cg.chunk_size)
         return zbuf, out
 
-    _, outs = jax.lax.scan(
-        body, zbuf0, (plan.split_rows, cg.src, cg.dst_local, w_chunk))
+    # the scan body traces once but runs n_chunks×; the loop_scope makes
+    # the in-scan all-to-all count trip× in any collecting telemetry
+    # ledger (the undercount the HLO census re-derives from while-loop
+    # trip constants)
+    with T.loop_scope(plan.split_rows.shape[0]):
+        _, outs = jax.lax.scan(
+            body, zbuf0, (plan.split_rows, cg.src, cg.dst_local, w_chunk))
     return outs.reshape(-1, ds)[: plan.n_padded]
 
 
@@ -230,9 +236,10 @@ def _round_gather_pipelined(z, cg: L.ChunkedDev, plan: CH.ChunkCommPlan,
         h_out = CH.chunk_gather_step(out_c, rows_c, start, h_out, axis)
         return h_out, None
 
-    h_out, _ = jax.lax.scan(
-        body, h_out0,
-        (plan.gather_rows, cg.src, cg.dst_local, w_chunk, starts))
+    with T.loop_scope(plan.gather_rows.shape[0]):
+        h_out, _ = jax.lax.scan(
+            body, h_out0,
+            (plan.gather_rows, cg.src, cg.dst_local, w_chunk, starts))
     return h_out
 
 
@@ -255,10 +262,11 @@ def _round_split_gather_pipelined(h_local, cg: L.ChunkedDev,
         h_out = CH.chunk_gather_step(out_c, grows, start, h_out, axis)
         return (zbuf, h_out), None
 
-    (zbuf, h_out), _ = jax.lax.scan(
-        body, (zbuf0, h_out0),
-        (plan.split_rows, plan.gather_rows, cg.src, cg.dst_local,
-         w_chunk, starts))
+    with T.loop_scope(plan.split_rows.shape[0]):
+        (zbuf, h_out), _ = jax.lax.scan(
+            body, (zbuf0, h_out0),
+            (plan.split_rows, plan.gather_rows, cg.src, cg.dst_local,
+             w_chunk, starts))
     return h_out
 
 
@@ -357,10 +365,17 @@ def tp_naive_forward(params, cfg: M.GNNConfig, graph: TPGraph,
             if i < n_layers - 1:
                 h = jax.nn.elu(h)
         else:
-            hf = C.replica_gather(h, data_axes)        # (V/N, D) block
-            z = tp.split(hf, axis)                     # dim-sharded
+            # layer 0 moves the *input features*, which are never
+            # differentiated (the backward stops at this layer's weight
+            # matmul), so autodiff emits no mirrored collectives for it —
+            # mirror=False keeps the telemetry ledger byte-exact with the
+            # compiled HLO (2L fwd + 2(L−1) bwd a2a per step, not 4L)
+            mirror = i > 0
+            hf = C.replica_gather(h, data_axes,
+                                  mirror=mirror)       # (V/N, D) block
+            z = tp.split(hf, axis, mirror=mirror)      # dim-sharded
             z = L.aggregate_chunked(cg, z)
-            a = tp.gather(z, axis)                     # vertex-sharded
+            a = tp.gather(z, axis, mirror=mirror)      # vertex-sharded
             a = C.replica_slice(a, data_axes)          # this replica's rows
             p = params["layers"][i]
             h = a @ p["w"] + p["b"]                    # dense on local rows
@@ -464,9 +479,14 @@ def tp_naive_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
             if i < n_layers - 1:
                 h = jax.nn.elu(h)
         else:
-            z = tp.split_constraint(h, axis, data_axes)  # dim-sharded
+            # telemetry mirror convention as in tp_naive_forward: the
+            # layer-0 transitions move undifferentiated input features
+            mirror = i > 0
+            z = tp.split_constraint(h, axis, data_axes,
+                                    mirror=mirror)       # dim-sharded
             z = _aggregate_chunked_constraint(cg, z, cg.weight, axis)
-            a = tp.gather_constraint(z, axis, data_axes)  # vertex-sharded
+            a = tp.gather_constraint(z, axis, data_axes,
+                                     mirror=mirror)      # vertex-sharded
             p = params["layers"][i]
             h = a @ p["w"] + p["b"]
             if i < n_layers - 1:

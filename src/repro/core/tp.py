@@ -69,18 +69,27 @@ def vertex_spec(axis: str = "model", data_axes: tuple[str, ...] = (),
     return P(vertex_axes(axis, data_axes), *([None] * trailing))
 
 
-def split(h: jax.Array, axis: str = "model") -> jax.Array:
-    """vertex-sharded (V/N, D) → dim-sharded (V, D/N)."""
-    return C.all_to_all(h, axis, split_axis=1, concat_axis=0, tiled=True)
+def split(h: jax.Array, axis: str = "model", *,
+          mirror: bool = True) -> jax.Array:
+    """vertex-sharded (V/N, D) → dim-sharded (V, D/N).
+
+    ``mirror=False`` tells the telemetry ledger that ``h`` carries no
+    gradient (e.g. the coupled forward's layer-0 input features), so
+    autodiff emits no transposed all-to-all here."""
+    return C.all_to_all(h, axis, split_axis=1, concat_axis=0, tiled=True,
+                        mirror=mirror)
 
 
-def gather(z: jax.Array, axis: str = "model") -> jax.Array:
+def gather(z: jax.Array, axis: str = "model", *,
+           mirror: bool = True) -> jax.Array:
     """dim-sharded (V, D/N) → vertex-sharded (V/N, D)."""
-    return C.all_to_all(z, axis, split_axis=0, concat_axis=1, tiled=True)
+    return C.all_to_all(z, axis, split_axis=0, concat_axis=1, tiled=True,
+                        mirror=mirror)
 
 
 def split_constraint(h: jax.Array, axis: str = "model",
-                     data_axes: tuple[str, ...] = ()) -> jax.Array:
+                     data_axes: tuple[str, ...] = (), *,
+                     mirror: bool = True) -> jax.Array:
     """Constraint-backend split: global (V, D) re-laid P(axis,·) → P(·,axis).
 
     Must run inside a body traced by ``runtime.engine(...,
@@ -101,20 +110,24 @@ def split_constraint(h: jax.Array, axis: str = "model",
     """
     if data_axes:
         h = K.layout_cast(h, P(axis, None),
-                          src_spec=vertex_spec(axis, data_axes))
-    return K.layout_cast(h, P(None, axis), src_spec=P(axis, None))
+                          src_spec=vertex_spec(axis, data_axes),
+                          mirror=mirror)
+    return K.layout_cast(h, P(None, axis), src_spec=P(axis, None),
+                         mirror=mirror)
 
 
 def gather_constraint(z: jax.Array, axis: str = "model",
-                      data_axes: tuple[str, ...] = ()) -> jax.Array:
+                      data_axes: tuple[str, ...] = (), *,
+                      mirror: bool = True) -> jax.Array:
     """Constraint-backend gather: global (V, D) re-laid P(·,axis) → P(axis,·)
     (hybrid: staged on to the full ``P((axis,)+data_axes, ·)`` vertex
     layout — the mirrored dynamic-slice of the explicit backend's
     replica_slice, see :func:`split_constraint` for why two hops)."""
-    z = K.layout_cast(z, P(axis, None), src_spec=P(None, axis))
+    z = K.layout_cast(z, P(axis, None), src_spec=P(None, axis),
+                      mirror=mirror)
     if data_axes:
         z = K.layout_cast(z, vertex_spec(axis, data_axes),
-                          src_spec=P(axis, None))
+                          src_spec=P(axis, None), mirror=mirror)
     return z
 
 

@@ -138,15 +138,21 @@ def prepare_dp_bundle(data: GraphData, k: int,
 # Device-side halo exchange + aggregation (inside a runtime.engine body)
 # ---------------------------------------------------------------------------
 
-def halo_exchange(h_local: jax.Array, g: DPGraph, axis: str) -> jax.Array:
-    """DepComm: fetch remote in-neighbor rows.  Returns (halo_size+1, D)."""
+def halo_exchange(h_local: jax.Array, g: DPGraph, axis: str, *,
+                  mirror: bool = True) -> jax.Array:
+    """DepComm: fetch remote in-neighbor rows.  Returns (halo_size+1, D).
+
+    ``mirror=False`` when ``h_local`` is not differentiated (layer-0
+    input features) — the telemetry ledger then counts no transposed
+    halo all-to-all for this call."""
     i = C.axis_index(axis)
     send_rows = g.send_idx_local[i]                      # (k, m) local ids
     take_ids = jnp.where(send_rows >= 0, send_rows, 0)
     send = jnp.take(h_local, take_ids.reshape(-1), axis=0, mode="clip")
     send = jnp.where((send_rows >= 0).reshape(-1, 1), send, 0.0)
     send = send.reshape(g.k, g.m, h_local.shape[1])
-    recv = C.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    recv = C.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                        mirror=mirror)
     # recv[j] = rows worker j sent me; land them in my halo buffer
     pos = g.recv_pos[i].reshape(-1)                      # (k*m,)
     halo = jnp.zeros((g.halo_size + 1, h_local.shape[1]), h_local.dtype)
@@ -154,10 +160,11 @@ def halo_exchange(h_local: jax.Array, g: DPGraph, axis: str) -> jax.Array:
 
 
 def dp_aggregate(h_local: jax.Array, g: DPGraph, axis: str,
-                 edge_weight: jax.Array | None = None) -> jax.Array:
+                 edge_weight: jax.Array | None = None, *,
+                 mirror: bool = True) -> jax.Array:
     """One full aggregation round: halo exchange + local weighted SpMM."""
     i = C.axis_index(axis)
-    halo = halo_exchange(h_local, g, axis)[:-1]          # drop pad slot
+    halo = halo_exchange(h_local, g, axis, mirror=mirror)[:-1]  # drop pad
     h_ext = jnp.concatenate([h_local, halo], axis=0)
     w = g.weight[i] if edge_weight is None else edge_weight
     msg = jnp.take(h_ext, g.src[i], axis=0) * w[:, None]
@@ -179,8 +186,11 @@ def dp_coupled_forward(params, cfg: M.GNNConfig, g: DPGraph, x_local,
     h = x_local
     for i in range(cfg.num_layers):
         last = i == cfg.num_layers - 1
-        h_full = C.replica_gather(h, data_axes)
-        a = dp_aggregate(h_full, g, axis)
+        # layer-0 moves undifferentiated input features: no transposed
+        # collectives in the backward (telemetry mirror convention)
+        mirror = i > 0
+        h_full = C.replica_gather(h, data_axes, mirror=mirror)
+        a = dp_aggregate(h_full, g, axis, mirror=mirror)
         a = C.replica_slice(a, data_axes)
         p = params["layers"][i]
         h = a @ p["w"] + p["b"]
@@ -193,13 +203,18 @@ def dp_coupled_forward(params, cfg: M.GNNConfig, g: DPGraph, x_local,
 # Global-view forward for the constraint backend
 # ---------------------------------------------------------------------------
 
-def _halo_exchange_constraint(h: jax.Array, g: DPGraph,
-                              axis: str) -> jax.Array:
+def _halo_exchange_constraint(h: jax.Array, g: DPGraph, axis: str, *,
+                              mirror: bool = True) -> jax.Array:
     """Global-view DepComm: (k, n_local_max, D) → (k, halo_size, D).
 
     The explicit path's per-worker send buffers become one (k, k, m, D)
     tensor whose axis-0↔1 transpose, re-constrained onto the worker axis,
-    is the halo all-to-all for XLA's partitioner to lower and schedule."""
+    is the halo all-to-all for XLA's partitioner to lower and schedule.
+    That implied all-to-all is reported to the telemetry ledger via
+    :func:`repro.runtime.constraint.note_transition` (the transposed
+    array is laid out ``P(None, axis, ·, ·)`` and the constraint moves
+    the worker axis back to dim 0 — a pure record, no extra anchor, so
+    the lowered program is unchanged)."""
     d = h.shape[-1]
     take = jnp.where(g.send_idx_local >= 0, g.send_idx_local, 0)
     send = jax.vmap(
@@ -209,6 +224,8 @@ def _halo_exchange_constraint(h: jax.Array, g: DPGraph,
     send = K.constrain(send.reshape(g.k, g.k, g.m, d),
                        P(axis, None, None, None))       # [sender, receiver]
     recv = send.transpose(1, 0, 2, 3)                   # [receiver, sender]
+    K.note_transition(recv, P(None, axis, None, None),
+                      P(axis, None, None, None), mirror=mirror)
     recv = K.constrain(recv, P(axis, None, None, None))
     halo = jnp.zeros((g.k, g.halo_size + 1, d), h.dtype)
     halo = jax.vmap(lambda hb, pos, r: hb.at[pos].set(r, mode="drop"))(
@@ -234,7 +251,7 @@ def dp_coupled_forward_constraint(params, cfg: M.GNNConfig, g: DPGraph, x,
     h = x
     for i in range(cfg.num_layers):
         h = K.constrain(h, row_spec)
-        halo = _halo_exchange_constraint(h, g, axis)
+        halo = _halo_exchange_constraint(h, g, axis, mirror=i > 0)
         h_ext = jnp.concatenate([h, halo], axis=1)
         a = jax.vmap(agg_one)(h_ext, g.src, g.dst, g.weight)
         a = K.constrain(a, row_spec)

@@ -8,6 +8,15 @@ Per (arch × shape × mesh):
 FLOPs/bytes come from ``compiled.cost_analysis()`` (whole-program, already
 per-partition under SPMD — we document the convention below); collective
 bytes are parsed from the compiled HLO text since cost_analysis omits them.
+
+NOTE: for the distributed-GNN benches the HLO census is no longer the
+primary wire-byte measurement — :mod:`repro.runtime.telemetry` counts
+bytes at the runtime choke point at trace time, and the census here is
+the independent *cross-check* (``benchmarks/_dist_gnn.py --hlo-census``),
+asserted byte-for-byte against the ledger so a parser regression (this
+file has shipped two silent-zero bugs: tuple-result ``/*index=N*/``
+comments breaking ``_DEF_RE``, and literal ``replica_groups={{...}}``
+falling back to group size 1) fails loudly instead of skewing Fig. 8.
 """
 from __future__ import annotations
 
@@ -30,10 +39,9 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
-_OP_RE = re.compile(
-    r"=\s+(\(?[^=]*?)\s*"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(-start|-done)?\(")
+# (the old _OP_RE collective matcher is gone: _DEF_RE + the _COLLECTIVES
+# base-name check in hlo_census are the single parsing path, pinned by
+# tests/test_roofline_census.py)
 # replica_groups appears in three spellings: the compact iota form
 # `replica_groups=[G,S]<=[N]` (G groups of size S), the literal form
 # `replica_groups={{0,1,...},{...}}` (size = ids in the first group), and

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from ..runtime import collectives as C
+from ..runtime import telemetry as T
 
 
 def ring_attention_local(ql, kl, vl, axis_name: str, *,
@@ -82,8 +83,12 @@ def ring_attention_local(ql, kl, vl, axis_name: str, *,
     # remat each ring step: the backward pass recomputes the (sc, sc)
     # score/prob chunks instead of storing n of them across the scan —
     # without this, internvl2 train_4k peaked at 79 GiB/dev (§Perf R2.4)
-    (_, _, m_run, l_run, acc), _ = jax.lax.scan(
-        jax.checkpoint(step), init, jnp.arange(n))
+    # loop_scope: the body's two ppermutes trace once but rotate n× — a
+    # collecting telemetry ledger must count every ring hop (n is static:
+    # jnp.arange(n) already requires it)
+    with T.loop_scope(n):
+        (_, _, m_run, l_run, acc), _ = jax.lax.scan(
+            jax.checkpoint(step), init, jnp.arange(n))
     out = acc / jnp.maximum(l_run, 1e-30)[..., None]    # (B,hkv,g,sc,hdv)
     return out.transpose(0, 3, 1, 2, 4).reshape(b, sc, hq, hdv) \
         .astype(ql.dtype)

@@ -33,18 +33,30 @@ Public surface:
                          psum_replicas) used inside explicit engine
                          bodies; the tested choke point every wire byte
                          flows through
+* :mod:`telemetry`     — trace-time collective telemetry at that choke
+                         point: :func:`collect_comm` ledgers of per
+                         (op, axis, dtype) call counts / payload / ring
+                         wire bytes, :func:`loop_scope` trip
+                         multipliers, and the constraint backend's
+                         implied-collective transition records — the
+                         primary measured columns of
+                         bench_comm_volume (HLO census demoted to a
+                         cross-check)
 
 No other module may call ``shard_map`` (any spelling) or the ``jax.lax``
 collectives directly (tests/test_collectives_chokepoint.py enforces it).
 """
 from . import collectives  # noqa: F401
+from . import telemetry  # noqa: F401
 from .constraint import (  # noqa: F401
     constrain,
     constraint_engine,
     current_mesh,
     layout_cast,
     mesh_context,
+    note_transition,
 )
+from .telemetry import CommLedger, collect_comm, loop_scope  # noqa: F401
 from .mesh import (  # noqa: F401
     DATA_AXES_ORDER,
     DEFAULT_AXIS,
@@ -73,5 +85,6 @@ __all__ = [
     "resolve_replicas", "tp_mesh", "CHECK_KW", "JAX_VERSION", "SUPPORTED_JAX", "engine",
     "resolve_shard_map", "smap", "validate_specs", "collectives",
     "constrain", "constraint_engine", "current_mesh", "layout_cast",
-    "mesh_context",
+    "mesh_context", "note_transition", "telemetry", "CommLedger",
+    "collect_comm", "loop_scope",
 ]

@@ -20,24 +20,53 @@ Two families:
   :class:`repro.runtime.TPMesh`; every replica op is the identity for
   ``data_axes=()`` so pure-TP call sites pay nothing.
 
-The cross-replica *gradient* psum of hybrid training is the autodiff
-transpose of these ops: replicated (``P()``) engine inputs have their
-cotangents psummed over every mesh axis by shard_map's transpose, and
-:func:`replica_gather`'s transpose is the mirrored psum-scatter over the
-data axes — so wiring the forward through this module is what puts the
-data-axis all-reduce bytes on the wire.
+Telemetry contract (ROADMAP "Collective telemetry")
+---------------------------------------------------
+
+Because every wire byte flows through these wrappers, they double as the
+measurement point: while a :func:`repro.runtime.telemetry.collect_comm`
+ledger is active, each call reports its (op kind, axis, dtype) together
+with per-device payload bytes and ring-model wire bytes — computed at
+**trace time** from the abstract shapes and the *static* mesh axis sizes
+(:func:`static_axis_size`).  Three conventions make the ledger exact:
+
+* **trace-time semantics** — a ledger fills during the first trace of a
+  program (wrap the initial ``.lower()``/call); cached re-executions
+  record nothing;
+* **loop multipliers** — scans whose bodies communicate are wrapped in
+  :func:`repro.runtime.telemetry.loop_scope` at the call site (see
+  ``core/decouple.py``), so in-scan collectives count trip× instead of
+  1× — the same undercount the HLO census re-derives from while-loop
+  trip constants;
+* **autodiff mirrors** — each data-moving call declares ``mirror=``:
+  True (default for a2a/all_gather/ppermute) when the backward pass
+  transposes it into the mirrored collective at identical wire bytes,
+  False when the moved data is not differentiated (layer-0 input
+  features of the coupled forwards).  ``psum`` defaults to
+  ``mirror=False`` — the repo only psums loss/metric scalars, and the
+  backward parameter-gradient all-reduce has no forward counterpart
+  (see the telemetry module docstring for why it is out of scope).
+
+The constraint backend has no per-shard bodies and never calls these
+wrappers; its ``constrain``/``layout_cast`` transition points in
+:mod:`repro.runtime.constraint` record the *implied* resharding
+collective instead (``P(axis,·) ↔ P(·,axis)`` is the paper's a2a;
+dropping a data axis is the replica all-gather), so both backends emit
+comparable ledgers — pinned byte-for-byte against each other, the
+analytic §3.2 formulas, and the HLO census by
+tests/dist_progs/check_telemetry.py.
 
 All functions must be called *inside* a mapped body with the axes bound.
 
-Version portability lives here too: ``jax.lax.axis_size`` only exists on
-newer JAX lines, so :func:`axis_size` falls back to the classic
-``psum(1, axis)`` idiom (which constant-folds to the static axis size) on
-0.4.x.
+Version portability lives here too: :func:`axis_size` resolves the
+static size from ``jax.lax.axis_size`` (newer lines) or the bound axis
+env (0.4.x) — see its docstring for the exact contract.
 """
 from __future__ import annotations
 
 import jax
 
+from . import telemetry as T
 from .mesh import DEFAULT_AXIS
 
 _HAS_AXIS_SIZE = hasattr(jax.lax, "axis_size")
@@ -48,37 +77,110 @@ def axis_index(axis: str = DEFAULT_AXIS) -> jax.Array:
     return jax.lax.axis_index(axis)
 
 
-def axis_size(axis: str = DEFAULT_AXIS) -> int:
-    """Number of workers on ``axis`` (a static int under tracing)."""
+def static_axis_size(axis: str) -> int | None:
+    """Static participant count of a bound mesh axis, or None.
+
+    Resolution order: ``jax.lax.axis_size`` (newer JAX lines), then the
+    tracing axis env (``jax.core.axis_frame`` — on 0.4.x this returns
+    the static size of a shard_map-bound axis).  Returns None when the
+    axis is unbound or the installed JAX exposes neither — callers that
+    *need* a static int (telemetry, shape arithmetic) can then fail
+    loudly instead of computing with a traced value.
+    """
     if _HAS_AXIS_SIZE:
-        return jax.lax.axis_size(axis)
+        try:
+            return int(jax.lax.axis_size(axis))
+        except Exception:  # unbound axis / exotic tracer  # noqa: BLE001
+            return None
+    try:
+        size = jax.core.axis_frame(axis)  # 0.4.x: the size itself
+    except Exception:  # noqa: BLE001
+        return None
+    if isinstance(size, int):
+        return size
+    size = getattr(size, "size", None)   # future-proof: a frame object
+    return size if isinstance(size, int) else None
+
+
+def axis_size(axis: str = DEFAULT_AXIS) -> int:
+    """Number of workers on ``axis``.
+
+    Returns a static Python int whenever the size is resolvable from the
+    installed JAX (:func:`static_axis_size`) — which holds on every
+    supported line (0.4.30+ via the axis env, newer via
+    ``jax.lax.axis_size``), so shape arithmetic like ``dim // n`` is
+    safe.  Only if *both* probes fail does it fall back to the classic
+    ``psum(1, axis)`` idiom; note that fallback is static only because
+    ``jax.lax.psum`` constant-folds non-tracer operands — on a line
+    without that fast path it would return a traced Array, so the
+    fallback is a last resort, not the contract
+    (tests/test_telemetry.py covers the branch).
+    """
+    n = static_axis_size(axis)
+    if n is not None:
+        return n
     return jax.lax.psum(1, axis)
 
 
-def psum(x, axis=DEFAULT_AXIS):
+def _record(op: str, axis, x, mirror: bool) -> None:
+    """Report into the active telemetry ledgers (no-op when none).
+
+    Group sizes must be static while collecting — a ledger that silently
+    skipped unresolvable calls would be the exact silent-zero bug class
+    the telemetry replaces, so this raises instead.
+    """
+    if not T.active_ledgers():
+        return
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    g = 1
+    for a in axes:
+        s = static_axis_size(a)
+        if s is None:
+            raise T.TelemetryError(
+                f"collective telemetry needs the static size of axis "
+                f"{a!r} but it is not resolvable on this JAX "
+                f"({jax.__version__}) — is the axis bound by the engine?")
+        g *= s
+    T.record(op, axes, x, group_size=g, mirror=mirror)
+
+
+def psum(x, axis=DEFAULT_AXIS, *, mirror: bool = False):
     """Sum-reduce ``x`` across one axis or a tuple of axes (loss/metric
     reductions; pass ``("model",) + data_axes`` for hybrid DP×TP)."""
+    _record("psum", axis, x, mirror)
     return jax.lax.psum(x, axis)
 
 
 def all_gather(x: jax.Array, axis: str = DEFAULT_AXIS, *,
-               gather_axis: int = 0, tiled: bool = True) -> jax.Array:
-    """Concatenate every worker's ``x`` along ``gather_axis``."""
+               gather_axis: int = 0, tiled: bool = True,
+               mirror: bool = True) -> jax.Array:
+    """Concatenate every worker's ``x`` along ``gather_axis``.
+
+    ``mirror=False`` when ``x`` is not differentiated (no backward
+    psum-scatter will be emitted) — see the module docstring."""
+    _record("all_gather", axis, x, mirror)
     return jax.lax.all_gather(x, axis, axis=gather_axis, tiled=tiled)
 
 
 def ppermute(x: jax.Array, axis: str = DEFAULT_AXIS, *,
-             perm: list[tuple[int, int]]) -> jax.Array:
+             perm: list[tuple[int, int]],
+             mirror: bool = True) -> jax.Array:
     """Point-to-point rotation (ring pipelines: (src, dst) pairs)."""
+    _record("ppermute", axis, x, mirror)
     return jax.lax.ppermute(x, axis, perm)
 
 
 def all_to_all(x: jax.Array, axis: str = DEFAULT_AXIS, *,
-               split_axis: int, concat_axis: int,
-               tiled: bool = False) -> jax.Array:
+               split_axis: int, concat_axis: int, tiled: bool = False,
+               mirror: bool = True) -> jax.Array:
     """The gather/split workhorse: exchange equal blocks of ``split_axis``
     for equal blocks of ``concat_axis`` (V·D/N bytes per device, graph- and
-    skew-independent — the paper's load-balance argument)."""
+    skew-independent — the paper's load-balance argument).
+
+    ``mirror=False`` when ``x`` carries no gradient (the coupled
+    forwards' layer-0 feature move): autodiff then emits no mirrored
+    all-to-all, and the ledger must not count one."""
+    _record("all_to_all", axis, x, mirror)
     return jax.lax.all_to_all(x, axis, split_axis=split_axis,
                               concat_axis=concat_axis, tiled=tiled)
 
@@ -106,37 +208,62 @@ def replica_size(data_axes: tuple[str, ...]) -> int:
 
 
 def replica_gather(x: jax.Array, data_axes: tuple[str, ...], *,
-                   gather_axis: int = 0) -> jax.Array:
+                   gather_axis: int = 0,
+                   mirror: bool = True) -> jax.Array:
     """Concatenate the replica shards of ``x`` along ``gather_axis``.
 
     Gathers innermost axis first so that, for an array sharded
     ``P((model,) + data_axes)`` on ``gather_axis``, the result is the
     contiguous model-worker shard in global row order.  Its autodiff
     transpose is the mirrored psum-scatter over the data axes — the
-    cross-replica gradient reduction of hybrid DP×TP.  Identity for
-    ``data_axes=()``.
+    cross-replica gradient reduction of hybrid DP×TP (``mirror=False``
+    when ``x`` is not differentiated).  Identity for ``data_axes=()``.
     """
     for a in reversed(data_axes):
-        x = all_gather(x, a, gather_axis=gather_axis, tiled=True)
+        x = all_gather(x, a, gather_axis=gather_axis, tiled=True,
+                       mirror=mirror)
     return x
+
+
+def _replica_block(length: int, n: int, axis: int,
+                   data_axes: tuple[str, ...]) -> int:
+    """Per-replica block length, refusing to silently truncate.
+
+    The old ``length // n`` floored, so a non-divisible axis dropped the
+    trailing ``length % n`` rows of every replica but the bug surfaced
+    only as slightly-wrong numerics.  Raise with the full context
+    instead (PR 3's no-silent-defaults convention)."""
+    block, rem = divmod(length, n)
+    if rem:
+        raise ValueError(
+            f"replica_slice: axis {axis} of length {length} does not "
+            f"divide the replica count {n} (= product of data axes "
+            f"{data_axes!r}) — flooring would silently drop {rem} "
+            f"trailing rows per replica; pad the axis to a multiple of "
+            f"{n} first (runtime.padded_size / core.tp.pad_to_multiple)")
+    return block
 
 
 def replica_slice(x: jax.Array, data_axes: tuple[str, ...], *,
                   axis: int = 0) -> jax.Array:
     """This replica's block of ``x`` along ``axis`` (inverse of
     :func:`replica_gather` on replica-identical values).  Identity for
-    ``data_axes=()``."""
+    ``data_axes=()``; raises when the axis does not divide the replica
+    count instead of silently truncating."""
     if not data_axes:
         return x
     n = replica_size(data_axes)
-    block = x.shape[axis] // n
+    if isinstance(n, int):   # static on every supported JAX line
+        block = _replica_block(x.shape[axis], n, axis, data_axes)
+    else:                    # last-resort traced size: keep old behaviour
+        block = x.shape[axis] // n
     start = replica_index(data_axes) * block
     return jax.lax.dynamic_slice_in_dim(x, start, block, axis=axis)
 
 
-def psum_replicas(x, data_axes: tuple[str, ...]):
+def psum_replicas(x, data_axes: tuple[str, ...], *, mirror: bool = False):
     """Sum-reduce ``x`` across the replica axes (the explicit cross-replica
     psum of hybrid DP×TP).  Identity for ``data_axes=()``."""
     if not data_axes:
         return x
-    return psum(x, tuple(data_axes))
+    return psum(x, tuple(data_axes), mirror=mirror)

@@ -38,6 +38,7 @@ import jax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from . import telemetry as T
 from .mesh import as_mesh, tp_mesh
 from .smap import validate_specs
 
@@ -78,7 +79,8 @@ def constrain(x: jax.Array, spec: P) -> jax.Array:
 
 
 def layout_cast(x: jax.Array, spec: P,
-                src_spec: P | None = None) -> jax.Array:
+                src_spec: P | None = None, *,
+                mirror: bool = True) -> jax.Array:
     """A layout *transition*: anchor ``x`` at ``src_spec``, then at ``spec``.
 
     A single ``with_sharding_constraint`` only pins the target side, and —
@@ -90,14 +92,41 @@ def layout_cast(x: jax.Array, spec: P,
     exactly this point, so the backward program reshards where the
     explicit path's transposed all-to-all sits.  No-op outside an active
     constraint engine.
+
+    This is also the constraint backend's telemetry point: knowing both
+    sides, the *implied* resharding collective (``P(axis,·) ↔ P(·,axis)``
+    is the paper's all-to-all; dropping a data axis is the replica
+    all-gather) is reported into any active
+    :func:`repro.runtime.telemetry.collect_comm` ledger, with ``mirror``
+    declaring whether autodiff transposes the pair (False when ``x``
+    carries no gradient — the coupled forwards' layer-0 feature move).
     """
     mesh = current_mesh()
     if mesh is None:
         return x
     if src_spec is not None:
+        note_transition(x, src_spec, spec, mirror=mirror)
         x = jax.lax.with_sharding_constraint(
             x, NamedSharding(mesh, src_spec))
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def note_transition(x, src_spec: P, dst_spec: P, *,
+                    mirror: bool = True) -> None:
+    """Record the implied collective of a ``src_spec → dst_spec``
+    transition of global array ``x`` without emitting any constraint —
+    for transition points spelled as raw ``constrain`` pairs (e.g. the
+    DP halo exchange's transpose-and-reconstrain, whose all-to-all the
+    partitioner materializes from an axis *moving dims* across an
+    existing pair of anchors).  No-op outside an active constraint
+    engine or when no ledger is collecting.
+    """
+    mesh = current_mesh()
+    if mesh is None or not T.active_ledgers():
+        return
+    T.record_transition(jax.numpy.shape(x), jax.numpy.result_type(x),
+                        src_spec, dst_spec, dict(mesh.shape),
+                        mirror=mirror)
 
 
 def _is_spec_leaf(x) -> bool:

@@ -1,0 +1,402 @@
+"""Trace-time collective telemetry — the measured side of Fig. 8.
+
+NeutronTP's central quantitative claim is about *wire bytes*: TP's
+gather/split moves exactly V·D/N bytes per device regardless of graph
+skew.  Every wire byte in this repo flows through one tested choke point
+(:mod:`repro.runtime.collectives` for the explicit backend, the
+``constrain``/``layout_cast`` transition points of
+:mod:`repro.runtime.constraint` for the constraint backend), so that is
+where bytes are counted — at **trace time**, from abstract shapes and
+static mesh axis sizes, instead of regex-parsing compiled HLO text
+(:func:`repro.launch.roofline.hlo_census`, which has shipped two
+silent-zero parser bugs and is now demoted to a cross-check).
+
+Usage::
+
+    with telemetry.collect_comm() as ledger:
+        step.lower(params, opt_state)        # first trace of the program
+    ledger.wire_bytes(op="all_to_all", axis="model", train=True)
+
+Contract (what a ledger entry means):
+
+* **Trace-time semantics** — the choke-point wrappers report into every
+  active ledger while the traced Python body runs.  A ledger therefore
+  only fills during the *first* trace of a program: wrap the initial
+  ``jit(...).lower(...)`` (or the first call); cached re-executions
+  re-run no Python and record nothing.  An empty ledger where bytes were
+  expected is a collection bug, never "zero traffic" — benches assert
+  non-emptiness.
+* **Keys** — entries accumulate per ``(op kind, axis label, dtype)``.
+  Multi-axis reductions (e.g. ``psum`` over ``("model", "data")``) use
+  the joined label ``"model+data"``; axis queries match a label when they
+  equal it or name one of its ``+`` components.
+* **Bytes** — ``payload_bytes`` is the per-device input payload;
+  ``wire_bytes`` is the per-device ring-algorithm wire traffic of the
+  collective, the same cost model as the HLO census
+  (:func:`ring_wire_factor` mirrors ``roofline._wire_factor`` —
+  byte-for-byte comparable, pinned by tests/test_telemetry.py).
+* **Loop multipliers** — ``jax.lax.scan``/``while`` bodies trace once
+  but execute trip× (the undercount the census re-derives from
+  while-loop constants).  Call sites wrap scans whose bodies communicate
+  in :func:`loop_scope`, so in-scan collectives count trip×.
+* **Autodiff mirrors** — backward passes are derived by transposing the
+  jaxpr; no Python re-runs, so the wrappers cannot see the mirrored
+  collectives.  Instead each call site declares ``mirror=`` — True when
+  the cotangent flows back through this collective (its transpose emits
+  the mirrored op: a2a ↔ a2a, all_gather ↔ psum_scatter, ppermute ↔
+  reversed ppermute, all at identical ring wire bytes), False when the
+  moved data is not differentiated (e.g. the layer-0 input features of
+  the coupled forwards — the backward stops at the first parameter
+  matmul, which the HLO census confirms).  ``train=True`` queries add
+  the mirrored bytes; ``train=False`` is forward-only.  ``psum``
+  defaults to ``mirror=False``: the repo only psums scalars
+  (loss/metrics), whose mirrored bytes are negligible, and the
+  replicated-parameter gradient all-reduce of the backward pass has no
+  forward counterpart at all — it is shard_map's transpose of the
+  replicated-input broadcast and is out of ledger scope (its data-axis
+  portion is covered analytically by ``grad_allreduce_data`` in
+  benchmarks/bench_comm_volume.py).
+
+The constraint backend records the *implied* collective of each layout
+transition (:func:`record_transition`): ``P(axis,·) ↔ P(·,axis)`` is the
+paper's all-to-all, dropping a data axis is the replica all-gather, and
+adding sharding axes is a local slice (free).  Both backends therefore
+emit comparable ledgers — equality on the bench workload is pinned by
+tests/dist_progs/check_telemetry.py.
+
+This module is pure bookkeeping: it calls no ``jax.lax`` collectives and
+never touches the traced values — only their avals.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from contextvars import ContextVar
+from typing import Iterator, Mapping
+
+__all__ = [
+    "CommEntry", "CommLedger", "TelemetryError", "active_ledgers",
+    "collect_comm", "loop_multiplier", "loop_scope", "record",
+    "record_transition", "ring_wire_factor",
+]
+
+
+class TelemetryError(RuntimeError):
+    """A collective could not be accounted (e.g. no static axis size) while
+    a ledger was collecting — raised instead of silently skipping the
+    bytes (the silent-zero failure mode this module exists to kill)."""
+
+
+#: Ledger "op" kind → HLO instruction kind of the census, so the two
+#: cost models can be cross-pinned (tests/test_telemetry.py asserts the
+#: ring factors agree).
+OP_TO_HLO = {
+    "psum": "all-reduce",
+    "all_gather": "all-gather",
+    "all_to_all": "all-to-all",
+    "ppermute": "collective-permute",
+    "psum_scatter": "reduce-scatter",
+}
+
+
+def ring_wire_factor(op: str, g: int) -> float:
+    """Ring-algorithm per-device wire-byte factor on the RESULT size —
+    the same model as ``repro.launch.roofline._wire_factor``:
+
+      all_gather      (g−1)/g      psum (all-reduce)   2(g−1)/g
+      psum_scatter    (g−1)        all_to_all          (g−1)/g
+      ppermute        1
+    """
+    if op == "ppermute":
+        return 1.0
+    if g <= 1:
+        return 0.0
+    return {"all_gather": (g - 1) / g,
+            "psum": 2 * (g - 1) / g,
+            "psum_scatter": float(g - 1),
+            "all_to_all": (g - 1) / g}[op]
+
+
+@dataclasses.dataclass
+class CommEntry:
+    """Accumulated counters for one (op, axis label, dtype) key."""
+
+    calls: float = 0.0            # forward collective executions (trip-scaled)
+    payload_bytes: float = 0.0    # per-device input payload, forward
+    wire_bytes: float = 0.0       # per-device ring wire bytes, forward
+    mirrored_calls: float = 0.0   # autodiff-mirrored executions (backward)
+    mirrored_wire_bytes: float = 0.0
+
+    def merge(self, other: "CommEntry") -> None:
+        self.calls += other.calls
+        self.payload_bytes += other.payload_bytes
+        self.wire_bytes += other.wire_bytes
+        self.mirrored_calls += other.mirrored_calls
+        self.mirrored_wire_bytes += other.mirrored_wire_bytes
+
+
+def _axis_label(axes) -> str:
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    return "+".join(axes)
+
+
+def _label_matches(label: str, axis: str | None) -> bool:
+    return axis is None or axis == label or axis in label.split("+")
+
+
+class CommLedger:
+    """Per-(op, axis, dtype) collective counters for one traced program."""
+
+    def __init__(self) -> None:
+        self._entries: dict[tuple[str, str, str], CommEntry] = {}
+
+    # ---- accumulation --------------------------------------------------
+
+    def add(self, op: str, axes, dtype: str, *, payload: float, wire: float,
+            calls: float = 1.0, mirror: bool = False) -> None:
+        key = (op, _axis_label(axes), str(dtype))
+        entry = self._entries.setdefault(key, CommEntry())
+        entry.calls += calls
+        entry.payload_bytes += payload * calls
+        entry.wire_bytes += wire * calls
+        if mirror:
+            entry.mirrored_calls += calls
+            entry.mirrored_wire_bytes += wire * calls
+
+    # ---- queries -------------------------------------------------------
+
+    def _select(self, op: str | None, axis: str | None):
+        for (kop, klabel, _), entry in self._entries.items():
+            if op is not None and kop != op:
+                continue
+            if not _label_matches(klabel, axis):
+                continue
+            yield entry
+
+    def wire_bytes(self, op: str | None = None, axis: str | None = None, *,
+                   train: bool = False) -> float:
+        """Per-device ring wire bytes.  ``train=True`` adds the declared
+        autodiff mirrors (fwd+bwd of one step); default is forward-only."""
+        total = 0.0
+        for e in self._select(op, axis):
+            total += e.wire_bytes + (e.mirrored_wire_bytes if train else 0.0)
+        return total
+
+    def payload_bytes(self, op: str | None = None,
+                      axis: str | None = None) -> float:
+        return sum(e.payload_bytes for e in self._select(op, axis))
+
+    def call_count(self, op: str | None = None, axis: str | None = None, *,
+                   train: bool = False) -> float:
+        total = 0.0
+        for e in self._select(op, axis):
+            total += e.calls + (e.mirrored_calls if train else 0.0)
+        return total
+
+    def entries(self) -> dict[tuple[str, str, str], CommEntry]:
+        return dict(self._entries)
+
+    def as_dict(self) -> dict:
+        """JSON-friendly view: ``{"op|axis|dtype": {counters...}}``."""
+        return {"|".join(k): dataclasses.asdict(v)
+                for k, v in sorted(self._entries.items())}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __bool__(self) -> bool:
+        return bool(self._entries)
+
+    def __repr__(self) -> str:  # debugging aid
+        return f"CommLedger({self.as_dict()!r})"
+
+
+# ---------------------------------------------------------------------------
+# Collection context
+# ---------------------------------------------------------------------------
+
+_LEDGERS: ContextVar[tuple[CommLedger, ...]] = ContextVar(
+    "repro_comm_ledgers", default=())
+_LOOP_MULT: ContextVar[float] = ContextVar("repro_comm_loop_mult",
+                                           default=1.0)
+
+
+@contextlib.contextmanager
+def collect_comm(ledger: CommLedger | None = None) -> Iterator[CommLedger]:
+    """Collect collective telemetry from every trace inside the block.
+
+    Nested contexts stack: an inner ``collect_comm`` does not hide the
+    outer one — every active ledger receives every record (so a bench can
+    hold a per-row ledger inside a whole-run aggregate).
+    """
+    ledger = CommLedger() if ledger is None else ledger
+    token = _LEDGERS.set(_LEDGERS.get() + (ledger,))
+    try:
+        yield ledger
+    finally:
+        _LEDGERS.reset(token)
+
+
+def active_ledgers() -> tuple[CommLedger, ...]:
+    return _LEDGERS.get()
+
+
+@contextlib.contextmanager
+def loop_scope(trips: int) -> Iterator[None]:
+    """Multiply records inside the block by ``trips`` — wrap the
+    ``jax.lax.scan``/``while`` call whose body communicates (the body
+    traces once but executes trip×).  Scopes nest multiplicatively."""
+    if not isinstance(trips, (int,)) or isinstance(trips, bool) or trips < 1:
+        raise ValueError(
+            f"loop_scope trips must be a positive int (the static trip "
+            f"count of the wrapped scan), got {trips!r}")
+    token = _LOOP_MULT.set(_LOOP_MULT.get() * trips)
+    try:
+        yield
+    finally:
+        _LOOP_MULT.reset(token)
+
+
+def loop_multiplier() -> float:
+    return _LOOP_MULT.get()
+
+
+# ---------------------------------------------------------------------------
+# Recording
+# ---------------------------------------------------------------------------
+
+def _aval_bytes(x) -> tuple[float, str]:
+    """(total bytes, dtype label) of a pytree of arrays/tracers/scalars,
+    from abstract values only.  The dtype label is the first leaf's (the
+    repo's collectives are dtype-homogeneous per call)."""
+    import jax
+    import numpy as np
+
+    total = 0.0
+    dtype = "?"
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(x)):
+        aval = jax.core.get_aval(leaf)
+        dt = np.dtype(aval.dtype)
+        total += float(math.prod(aval.shape)) * dt.itemsize
+        if i == 0:
+            dtype = dt.name
+    return total, dtype
+
+
+def record(op: str, axes, x, *, group_size: int,
+           mirror: bool = False) -> None:
+    """Report one collective execution into every active ledger.
+
+    ``x`` is the (pytree of) per-device input operand(s) — only abstract
+    shapes/dtypes are read.  ``group_size`` is the static participant
+    count on ``axes`` (product over a tuple).  ``mirror`` declares that
+    autodiff will emit the mirrored collective in the backward pass (see
+    module docstring).  No-op when no ledger is collecting.
+    """
+    ledgers = active_ledgers()
+    if not ledgers:
+        return
+    if op not in OP_TO_HLO:
+        raise TelemetryError(f"unknown collective op kind {op!r} "
+                             f"(known: {sorted(OP_TO_HLO)})")
+    payload, dtype = _aval_bytes(x)
+    # ring_wire_factor is defined on the RESULT size (census convention);
+    # derive the result from the input payload per op: all_gather grows
+    # it g×, psum_scatter shrinks it g×, the rest preserve it
+    if op == "all_gather":
+        wire = (group_size - 1) * payload
+    elif op == "psum_scatter":
+        wire = ring_wire_factor(op, group_size) * payload / group_size
+    else:
+        wire = ring_wire_factor(op, group_size) * payload
+    mult = loop_multiplier()
+    for ledger in ledgers:
+        ledger.add(op, axes, dtype, payload=payload, wire=wire,
+                   calls=mult, mirror=mirror)
+
+
+# ---------------------------------------------------------------------------
+# Constraint-backend layout transitions
+# ---------------------------------------------------------------------------
+
+def _spec_placement(spec, ndim: int) -> dict[str, int]:
+    """axis name → array dim it shards, for one PartitionSpec."""
+    entries = list(spec) + [None] * (ndim - len(spec))
+    out: dict[str, int] = {}
+    for dim, entry in enumerate(entries):
+        if entry is None:
+            continue
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            out[a] = dim
+    return out
+
+
+def implied_collectives(shape, itemsize: int, src_spec, dst_spec,
+                        axis_sizes: Mapping[str, int]) -> list[tuple]:
+    """Collectives the SPMD partitioner must materialize for the layout
+    transition ``src_spec → dst_spec`` of a *global* array, staged the way
+    the repo's transitions lower:
+
+    * an axis sharding a different dim on each side → its all-to-all
+      (the paper's gather/split, ``P(a,·) ↔ P(·,a)``);
+    * an axis present only in ``src`` → the replica all-gather that drops
+      it (processed innermost-first, matching ``replica_gather``);
+    * an axis present only in ``dst`` → a local slice, free (recorded as
+      nothing).
+
+    Returns ``[(op, axis, payload_bytes, wire_bytes), ...]`` with bytes
+    per device, using the same ring model as :func:`record`.
+    """
+    ndim = len(shape)
+    src = _spec_placement(src_spec, ndim)
+    dst = _spec_placement(dst_spec, ndim)
+    for a in set(src) | set(dst):
+        if a not in axis_sizes:
+            raise TelemetryError(
+                f"layout transition names mesh axis {a!r} but the active "
+                f"mesh only has axes {sorted(axis_sizes)}")
+    total = float(math.prod(shape)) * itemsize
+    current = dict(src)
+    out: list[tuple] = []
+
+    def sharded_by(axes) -> float:
+        return float(math.prod(axis_sizes[a] for a in axes))
+
+    # gathers first, innermost (last-listed) axis first — replica_gather's
+    # order; each gather grows the per-device block
+    removed = [a for a in src if a not in dst]
+    for a in reversed(removed):
+        del current[a]
+        g = axis_sizes[a]
+        result = total / sharded_by(current)
+        out.append(("all_gather", a, result / g,
+                    ring_wire_factor("all_gather", g) * result))
+    # then the dim-moving all-to-alls
+    for a in src:
+        if a in dst and src[a] != dst[a]:
+            g = axis_sizes[a]
+            result = total / sharded_by(current)
+            out.append(("all_to_all", a, result,
+                        ring_wire_factor("all_to_all", g) * result))
+    return out
+
+
+def record_transition(shape, dtype, src_spec, dst_spec,
+                      axis_sizes: Mapping[str, int], *,
+                      mirror: bool = True) -> None:
+    """Report the implied collectives of a constraint-backend layout
+    transition (see :func:`implied_collectives`).  No-op when no ledger
+    is collecting."""
+    ledgers = active_ledgers()
+    if not ledgers:
+        return
+    import numpy as np
+
+    itemsize = np.dtype(dtype).itemsize
+    mult = loop_multiplier()
+    for op, axis, payload, wire in implied_collectives(
+            shape, itemsize, src_spec, dst_spec, axis_sizes):
+        for ledger in ledgers:
+            ledger.add(op, axis, np.dtype(dtype).name, payload=payload,
+                       wire=wire, calls=mult, mirror=mirror)

@@ -1,0 +1,204 @@
+"""8-device byte-for-byte check of the trace-time collective telemetry.
+
+On 8 forced host devices, for the bench workload (n=4096, feat=128,
+hidden=64, classes=16, L=2 — the Fig. 8 measurement), the telemetry
+ledger collected while the train program traces must agree exactly with
+
+  (a) the analytic §3.2 formulas (benchmarks.bench_comm_volume.
+      expected_ledger — per-device ring wire bytes and collective
+      counts: decoupled 4 a2a/epoch, naive 2L+2(L−1), dp L+(L−1)), and
+  (b) the compiled-HLO census (repro.launch.roofline.hlo_census — the
+      demoted regex cross-check),
+
+for every GCN mode × both engine backends, pure TP (model=8) and a
+(data=2, model=4) hybrid mesh (where the data-axis replica_gather bytes
+must additionally equal the census all-gather + reduce-scatter columns).
+The pipelined mode pins the ledger's loop multipliers against the
+census's while-loop trip constants (its padded chunk tables are an upper
+bound on the analytic ideal, so it is census-only).  GAT decoupled pins
+the model-axis all-gather accounting (the O(V) score share).  Also
+covered: the identity (zero-entry) ledger of data_axes=() replica ops
+and the replica_slice no-silent-truncation guard.
+
+Run as a child process with --xla_force_host_platform_device_count=8.
+"""
+import math
+import os
+import sys
+
+assert "--xla_force_host_platform_device_count=8" in \
+    os.environ.get("XLA_FLAGS", "")
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)          # for the benchmarks package
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from benchmarks.bench_comm_volume import expected_ledger  # noqa: E402
+from repro.core import decouple as D  # noqa: E402
+from repro.gnn import dp_baseline as DP  # noqa: E402
+from repro.gnn import models as M  # noqa: E402
+from repro.graph import sbm_power_law  # noqa: E402
+from repro.launch.roofline import hlo_census  # noqa: E402
+from repro.runtime import (collect_comm, engine, hybrid_mesh,  # noqa: E402
+                           tp_mesh)
+from repro.runtime import collectives as C  # noqa: E402
+
+assert len(jax.devices()) == 8
+
+N, FEAT, HIDDEN, CLASSES, L, CHUNKS = 4096, 128, 64, 16, 2, 4
+
+
+def close(a, b):
+    return math.isclose(a, b, rel_tol=1e-9, abs_tol=1e-6)
+
+
+def trace_train(loss_fn, params, mask):
+    """(ledger, census) of the full fwd+bwd train program."""
+    f = jax.jit(jax.value_and_grad(loss_fn))
+    with collect_comm() as ledger:
+        lowered = f.lower(params, mask)
+    assert len(ledger), "empty ledger: collection did not see the trace"
+    census = hlo_census(lowered.compile().as_text())["collectives"]
+    return ledger, census
+
+
+def check_three_way(tag, ledger, census, expected, data_axes=()):
+    led_a2a = ledger.wire_bytes("all_to_all", "model", train=True)
+    led_n = ledger.call_count("all_to_all", "model", train=True)
+    led_agd = sum(ledger.wire_bytes("all_gather", a, train=True)
+                  for a in data_axes)
+    assert close(led_a2a, expected["a2a_wire"]), \
+        (tag, "ledger vs analytic", led_a2a, expected["a2a_wire"])
+    assert led_n == expected["a2a_calls"], \
+        (tag, "a2a count", led_n, expected["a2a_calls"])
+    assert close(led_a2a, census["all-to-all"]), \
+        (tag, "ledger vs census", led_a2a, census["all-to-all"])
+    if data_axes:
+        assert led_agd > 0 and close(led_agd, expected["ag_data_wire"]), \
+            (tag, "data-axis ag vs analytic", led_agd,
+             expected["ag_data_wire"])
+        # the mirrored replica_gather lowers as all-gather + its
+        # psum-scatter transpose (reduce-scatter), or as two all-gathers
+        # under the constraint partitioner — either way the HLO gather
+        # traffic must equal the ledger's data-axis total
+        hlo_ag = census["all-gather"] + census["reduce-scatter"]
+        assert close(led_agd, hlo_ag), \
+            (tag, "data-axis ag vs census", led_agd, hlo_ag)
+    else:
+        assert led_agd == 0.0, (tag, led_agd)
+    print(f"ok {tag}: a2a={led_a2a:.6e} n={led_n:.0f} agd={led_agd:.6e}")
+
+
+data = sbm_power_law(n=N, num_classes=CLASSES, feat_dim=FEAT,
+                     avg_degree=16, seed=7)
+
+# --- pure TP (model=8), GCN, both backends ------------------------------
+mesh8 = tp_mesh(8)
+bundle = D.prepare_bundle(data, n_workers=8, n_chunks=CHUNKS)
+cfg = D.padded_gnn_config(data, bundle, model="gcn", hidden_dim=HIDDEN,
+                          num_layers=L)
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+for mode in ("decoupled", "naive"):
+    exp = expected_ledger(mode, n=bundle.n_padded, feat=cfg.in_dim,
+                          hidden=cfg.hidden_dim, classes=cfg.num_classes,
+                          L=L, model=8)
+    for backend in ("explicit", "constraint"):
+        loss_fn = D.make_tp_loss_fn(cfg, bundle, mesh8, mode=mode,
+                                    backend=backend)
+        ledger, census = trace_train(loss_fn, params, bundle.train_mask)
+        check_three_way(f"{mode}/{backend}", ledger, census, exp)
+
+# decoupled counters are the paper's frequency claim verbatim
+assert expected_ledger("decoupled", n=bundle.n_padded, feat=cfg.in_dim,
+                       hidden=cfg.hidden_dim, classes=cfg.num_classes,
+                       L=L, model=8)["a2a_calls"] == 4
+
+# --- pipelined: loop multipliers vs the census's while-loop trips -------
+loss_fn = D.make_tp_loss_fn(cfg, bundle, mesh8, mode="decoupled_pipelined")
+ledger, census = trace_train(loss_fn, params, bundle.train_mask)
+led_a2a = ledger.wire_bytes("all_to_all", "model", train=True)
+assert close(led_a2a, census["all-to-all"]), \
+    ("pipelined ledger vs census", led_a2a, census["all-to-all"])
+# 2 scans × CHUNKS trips forward, all mirrored
+assert ledger.call_count("all_to_all", train=True) == 4 * CHUNKS
+print(f"ok decoupled_pipelined: a2a={led_a2a:.6e} (trip-multiplied)")
+
+# --- dp baseline (halo exchange), both backends -------------------------
+dp_bundle = DP.prepare_dp_bundle(data, k=8)
+dp_cfg = M.GNNConfig(model="gcn", in_dim=FEAT, hidden_dim=HIDDEN,
+                     num_classes=CLASSES, num_layers=L, decoupled=False)
+dp_params = M.init_params(jax.random.PRNGKey(0), dp_cfg)
+exp = expected_ledger("dp", n=N, feat=FEAT, hidden=HIDDEN,
+                      classes=CLASSES, L=L, model=8,
+                      halo_slots=8 * 8 * dp_bundle.graph.m)
+for backend in ("explicit", "constraint"):
+    loss_fn = DP.make_dp_loss_fn(dp_cfg, dp_bundle, mesh8, backend=backend)
+    ledger, census = trace_train(loss_fn, dp_params, dp_bundle.train_mask)
+    check_three_way(f"dp/{backend}", ledger, census, exp)
+
+# --- hybrid (data=2, model=4): model-axis a2a + data-axis gathers -------
+meshh = hybrid_mesh(data=2)
+bundleh = D.prepare_bundle(data, n_workers=4, n_chunks=CHUNKS,
+                           n_replicas=2)
+cfgh = D.padded_gnn_config(data, bundleh, model="gcn", hidden_dim=HIDDEN,
+                           num_layers=L)
+paramsh = M.init_params(jax.random.PRNGKey(0), cfgh)
+for mode in ("decoupled", "naive"):
+    exp = expected_ledger(mode, n=bundleh.n_padded, feat=cfgh.in_dim,
+                          hidden=cfgh.hidden_dim,
+                          classes=cfgh.num_classes, L=L, model=4, data=2)
+    for backend in ("explicit", "constraint"):
+        loss_fn = D.make_tp_loss_fn(cfgh, bundleh, meshh, mode=mode,
+                                    backend=backend)
+        ledger, census = trace_train(loss_fn, paramsh,
+                                     bundleh.train_mask)
+        check_three_way(f"{mode}/{backend}/d2x4", ledger, census, exp,
+                        data_axes=meshh.data_axes)
+
+# --- GAT decoupled: the model-axis O(V) score all-gathers ---------------
+gat_data = sbm_power_law(n=1024, num_classes=CLASSES, feat_dim=32,
+                         avg_degree=8, seed=7)
+gat_bundle = D.prepare_bundle(gat_data, n_workers=8, n_chunks=CHUNKS)
+gat_cfg = D.padded_gnn_config(gat_data, gat_bundle, model="gat",
+                              hidden_dim=32, num_layers=L)
+gat_params = M.init_params(jax.random.PRNGKey(0), gat_cfg)
+loss_fn = D.make_tp_loss_fn(gat_cfg, gat_bundle, mesh8, mode="decoupled")
+ledger, census = trace_train(loss_fn, gat_params, gat_bundle.train_mask)
+led_a2a = ledger.wire_bytes("all_to_all", "model", train=True)
+assert close(led_a2a, census["all-to-all"]), \
+    ("gat ledger vs census a2a", led_a2a, census["all-to-all"])
+led_ag = ledger.wire_bytes("all_gather", "model", train=True)
+hlo_ag = census["all-gather"] + census["reduce-scatter"]
+assert led_ag > 0 and close(led_ag, hlo_ag), \
+    ("gat score all-gathers vs census", led_ag, hlo_ag)
+print(f"ok gat decoupled: a2a={led_a2a:.6e} ag={led_ag:.6e}")
+
+# --- identity ledger: data_axes=() replica ops --------------------------
+with collect_comm() as ledger:
+    x = jnp.arange(8.0).reshape(4, 2)
+    assert C.replica_gather(x, ()) is x
+    assert C.replica_slice(x, ()) is x
+    assert C.psum_replicas(x, ()) is x
+assert len(ledger) == 0, ledger.as_dict()
+
+# --- replica_slice: no silent truncation on a real data axis ------------
+def bad_body(x):
+    return C.replica_slice(x, ("data",))
+
+
+bad = engine(bad_body, in_specs=P(), out_specs=P(), mesh=meshh)
+try:
+    bad(jnp.zeros((7, 2)))
+except ValueError as e:
+    msg = str(e)
+    assert "length 7" in msg and "replica count 2" in msg, msg
+else:
+    raise AssertionError("replica_slice silently truncated 7 rows over "
+                         "2 replicas")
+
+print("OK check_telemetry")

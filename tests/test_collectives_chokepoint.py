@@ -2,10 +2,11 @@
 
 Every collective the engine (either backend) executes must route through
 :mod:`repro.runtime.collectives` — that is what makes per-axis byte/op
-counters (ROADMAP "Collective telemetry") and backend/mesh changes local
-to one module.  These tests pin the invariant at the source level (no
-stray ``jax.lax`` collective calls anywhere else in ``src/repro``) and
-pin the data-axis terms of the analytic comm-volume accounting.
+counters (the trace-time telemetry now measuring bench_comm_volume's
+Fig. 8 rows — see tests/test_telemetry.py) and backend/mesh changes
+local to one module.  These tests pin the invariant at the source level
+(no stray ``jax.lax`` collective calls anywhere else in ``src/repro``)
+and pin the data-axis terms of the analytic comm-volume accounting.
 """
 import os
 import re

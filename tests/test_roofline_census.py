@@ -1,0 +1,150 @@
+"""Parser regressions for the HLO-regex census (``launch.roofline``).
+
+The census is now the *cross-check* of the telemetry ledger (the primary
+measurement lives in ``repro.runtime.telemetry``), but a cross-check
+that silently parses to zero is worse than none: both shipped PR 2 bugs
+were exactly that — tuple-result ``/*index=N*/`` comments broke
+``_DEF_RE`` (collectives skipped entirely) and literal
+``replica_groups={{...}}`` fell back to group size 1 (wire factor 0, so
+measured a2a bytes were always 0.0).  These tests pin the three
+``replica_groups`` spellings, tuple-result definition lines, and the
+while-loop trip multiplier on synthetic HLO text, and pin the deletion
+of the dead ``_OP_RE``.
+"""
+import pytest
+
+from repro.launch import roofline as R
+
+
+# ---------------------------------------------------------------------------
+# replica_groups: all three spellings
+# ---------------------------------------------------------------------------
+
+def test_group_size_iota_form():
+    line = ("  %ag = f32[8,4]{1,0} all-gather(f32[1,4] %x), "
+            "replica_groups=[2,4]<=[8], dimensions={0}")
+    assert R._group_size(line, all_participants=8) == 4
+
+
+def test_group_size_literal_form():
+    # PR 2 regression: literal groups used to fall back to 1 → factor 0
+    line = ("  %a2a = f32[4096,2] all-to-all(f32[4096,2] %x), "
+            "replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}")
+    assert R._group_size(line, all_participants=8) == 4
+
+
+def test_group_size_empty_form_uses_num_partitions():
+    line = "  %ar = f32[] all-reduce(f32[] %x), replica_groups={}"
+    assert R._group_size(line, all_participants=8) == 8
+    assert R._group_size(line, all_participants=1) == 1
+
+
+def test_group_size_unparsed_defaults_to_one():
+    assert R._group_size("  %x = f32[4] add(f32[4] %a, f32[4] %b)") == 1
+
+
+# ---------------------------------------------------------------------------
+# _DEF_RE: plain and tuple results (the /*index=N*/ comment regression)
+# ---------------------------------------------------------------------------
+
+def test_def_re_plain_result():
+    m = R._DEF_RE.match(
+        "  %y = f32[512,16]{1,0} all-to-all(f32[512,16] %x), "
+        "replica_groups=[1,8]<=[8]")
+    assert m and m.group(3) == "all-to-all"
+
+
+def test_def_re_tuple_result_with_index_comments():
+    # PR 2 regression: `/*index=5*/` inside tuple types contains `=` and
+    # `*`, which the pre-fix regex treated as a definition terminator
+    m = R._DEF_RE.match(
+        "  %t = (f32[512,16]{1,0} /*index=0*/, f32[512,16] /*index=1*/) "
+        "all-to-all-start(f32[512,16] %x), replica_groups={{0,1}}")
+    assert m and m.group(3) == "all-to-all-start"
+
+
+def test_dead_op_re_deleted():
+    # the old collective matcher was dead code shadowing the real parse
+    # path (_DEF_RE) — keep it gone
+    assert not hasattr(R, "_OP_RE")
+
+
+# ---------------------------------------------------------------------------
+# hlo_census end-to-end on synthetic modules
+# ---------------------------------------------------------------------------
+
+def _census(body_lines, extra_comps=""):
+    hlo = ("HloModule m, num_partitions=8\n\n"
+           + extra_comps
+           + "ENTRY %main (p0: f32[512,16]) -> f32[512,16] {\n"
+           + "\n".join(body_lines) + "\n}\n")
+    return R.hlo_census(hlo)
+
+
+def test_census_counts_literal_group_a2a():
+    c = _census([
+        "  %p0 = f32[512,16]{1,0} parameter(0)",
+        "  ROOT %a2a = f32[512,16]{1,0} all-to-all(f32[512,16] %p0), "
+        "replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}",
+    ])
+    bytes_ = 512 * 16 * 4
+    assert c["collectives"]["all-to-all"] == bytes_ * 7 / 8
+    assert c["collectives"]["counts"]["all-to-all"] == 1
+
+
+def test_census_tuple_result_start_done_counted_once():
+    c = _census([
+        "  %p0 = f32[512,16]{1,0} parameter(0)",
+        "  %st = (f32[512,16] /*index=0*/, f32[512,16] /*index=1*/) "
+        "all-to-all-start(f32[512,16] %p0), replica_groups=[1,8]<=[8], "
+        "dimensions={0}",
+        "  ROOT %dn = f32[512,16]{1,0} all-to-all-done(%st)",
+    ])
+    # -start carries the bytes (tuple result = 2× operand shape); -done
+    # must not double count
+    assert c["collectives"]["counts"]["all-to-all"] == 1
+    assert c["collectives"]["all-to-all"] == 2 * 512 * 16 * 4 * 7 / 8
+
+
+def test_census_while_trip_multiplier():
+    extra = (
+        "%cond (s: f32[512,16]) -> pred[] {\n"
+        "  %c4 = s32[] constant(4)\n"
+        "  %i = s32[] constant(0)\n"
+        "  ROOT %lt = pred[] compare(%i, %c4), direction=LT\n"
+        "}\n\n"
+        "%body (s: f32[512,16]) -> f32[512,16] {\n"
+        "  %s = f32[512,16]{1,0} parameter(0)\n"
+        "  ROOT %a2a = f32[512,16]{1,0} all-to-all(f32[512,16] %s), "
+        "replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}\n"
+        "}\n\n")
+    c = _census([
+        "  %p0 = f32[512,16]{1,0} parameter(0)",
+        "  ROOT %w = f32[512,16]{1,0} while(f32[512,16] %p0), "
+        "condition=%cond, body=%body",
+    ], extra_comps=extra)
+    # the loop body's a2a executes trip (=4)×, not once — the undercount
+    # class the telemetry loop_scope mirrors on the ledger side
+    assert c["collectives"]["counts"]["all-to-all"] == 4
+    assert c["collectives"]["all-to-all"] == 4 * 512 * 16 * 4 * 7 / 8
+
+
+def test_census_empty_groups_resolve_from_num_partitions():
+    c = _census([
+        "  %p0 = f32[512,16]{1,0} parameter(0)",
+        "  ROOT %ar = f32[512,16]{1,0} all-reduce(f32[512,16] %p0), "
+        "replica_groups={}, to_apply=%add",
+    ])
+    # group = num_partitions (8) → all-reduce factor 2·(8−1)/8
+    assert c["collectives"]["all-reduce"] == 512 * 16 * 4 * 2 * 7 / 8
+
+
+@pytest.mark.parametrize("kind,factor", [
+    ("all-gather", 7 / 8), ("all-reduce", 2 * 7 / 8),
+    ("reduce-scatter", 7.0), ("all-to-all", 7 / 8),
+    ("collective-permute", 1.0),
+])
+def test_wire_factor_table(kind, factor):
+    assert R._wire_factor(kind, 8) == factor
+    assert R._wire_factor(kind, 1) == (1.0 if kind == "collective-permute"
+                                       else 0.0)

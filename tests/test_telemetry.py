@@ -1,0 +1,339 @@
+"""Trace-time collective telemetry (``repro.runtime.telemetry``).
+
+Fast lane: the pure ledger machinery (records, loop scopes, the
+constraint-transition classifier, the ring cost model's agreement with
+the HLO census's), the static ``axis_size`` contract, the
+``replica_slice`` no-silent-truncation guard, and single-device traces
+through the real engine (collection plumbing without multi-device
+buffers).  The 8-device byte-for-byte equivalence — ledger == analytic
+formulas == HLO census for every mode × backend plus a (2,4) hybrid
+mesh — runs as a subprocess with pinned XLA_FLAGS
+(tests/dist_progs/check_telemetry.py, slow lane).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from conftest import run_dist_prog
+from repro.core import decouple as D
+from repro.gnn import models as M
+from repro.graph import sbm_power_law
+from repro.runtime import collect_comm, engine, loop_scope, tp_mesh
+from repro.runtime import collectives as C
+from repro.runtime import telemetry as T
+
+
+# ---------------------------------------------------------------------------
+# ledger arithmetic
+# ---------------------------------------------------------------------------
+
+def test_record_accumulates_per_key():
+    with collect_comm() as led:
+        T.record("all_to_all", "model", np.zeros((4, 8), np.float32),
+                 group_size=8, mirror=True)
+        T.record("all_to_all", "model", np.zeros((4, 8), np.float32),
+                 group_size=8, mirror=True)
+        T.record("all_gather", "data", np.zeros((2, 8), np.float32),
+                 group_size=2, mirror=False)
+    # a2a: payload 128 B/call, ring wire (8−1)/8 × 128 = 112
+    assert led.payload_bytes("all_to_all") == 256.0
+    assert led.wire_bytes("all_to_all") == 224.0
+    assert led.wire_bytes("all_to_all", train=True) == 448.0
+    assert led.call_count("all_to_all") == 2.0
+    assert led.call_count("all_to_all", train=True) == 4.0
+    # all_gather: wire on RESULT = (g−1)×payload = 1×64; unmirrored
+    assert led.wire_bytes("all_gather", "data") == 64.0
+    assert led.wire_bytes("all_gather", "data", train=True) == 64.0
+    # axis filter: 'model' doesn't see the data-axis gather
+    assert led.wire_bytes(axis="model") == 224.0
+    assert len(led) == 2 and bool(led)
+
+
+def test_record_result_size_per_op():
+    """ring_wire_factor is defined on the RESULT size; record() must
+    derive it from the input payload per op — all_gather grows g×,
+    psum_scatter shrinks g× (a factor-on-input would overcount the
+    scatter by g×), the rest preserve it."""
+    x = np.zeros((256,), np.float32)          # 1024 B payload
+    with collect_comm() as led:
+        for op in ("all_gather", "psum_scatter", "psum", "all_to_all",
+                   "ppermute"):
+            T.record(op, "data", x, group_size=4)
+    assert led.wire_bytes("all_gather") == 3 * 1024       # (g−1)·payload
+    assert led.wire_bytes("psum_scatter") == 3 * 1024 / 4  # (g−1)·res
+    assert led.wire_bytes("psum") == 2 * 3 / 4 * 1024
+    assert led.wire_bytes("all_to_all") == 3 / 4 * 1024
+    assert led.wire_bytes("ppermute") == 1024
+
+
+def test_ring_attention_scan_counts_hops():
+    """The ring's two per-step ppermutes rotate axis_size× — the scan is
+    loop_scoped so a ledger counts every hop (trivially 1 hop on a
+    single-device axis, but the count must come from the scope)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.nn.ring_attention import ring_attention_local
+
+    def body(q, k, v):
+        return ring_attention_local(q, k, v, "model")
+
+    fn = engine(body, in_specs=(P(), P(), P()), out_specs=P(),
+                mesh=tp_mesh(1))
+    q = jnp.zeros((1, 4, 2, 4))
+    with collect_comm() as led:
+        jax.jit(fn).lower(q, q, q)
+    assert led.call_count("ppermute") == 2   # 2 ppermutes × 1 hop
+    assert led.payload_bytes("ppermute") == 2 * q.size * 4
+
+
+def test_multi_axis_label_and_query():
+    with collect_comm() as led:
+        T.record("psum", ("model", "data"), np.float32(0.0), group_size=8)
+    ((op, label, dtype),) = led.entries().keys()
+    assert (op, label, dtype) == ("psum", "model+data", "float32")
+    # component queries match the joined label
+    assert led.wire_bytes("psum", "data") == led.wire_bytes("psum")
+    assert led.wire_bytes("psum", "model") > 0
+    assert led.wire_bytes("psum", "pod") == 0.0
+
+
+def test_no_active_ledger_is_noop():
+    # must not raise and must not leak state into later collections
+    T.record("all_to_all", "model", np.zeros((4,), np.float32),
+             group_size=8)
+    with collect_comm() as led:
+        pass
+    assert len(led) == 0 and not led
+
+
+def test_nested_ledgers_both_record():
+    with collect_comm() as outer:
+        with collect_comm() as inner:
+            T.record("all_to_all", "model", np.zeros((4,), np.float32),
+                     group_size=2)
+        T.record("all_to_all", "model", np.zeros((4,), np.float32),
+                 group_size=2)
+    assert inner.call_count() == 1.0
+    assert outer.call_count() == 2.0
+
+
+def test_unknown_op_raises():
+    with collect_comm():
+        with pytest.raises(T.TelemetryError, match="unknown collective"):
+            T.record("bcast", "model", np.zeros((4,), np.float32),
+                     group_size=2)
+
+
+# ---------------------------------------------------------------------------
+# loop scopes
+# ---------------------------------------------------------------------------
+
+def test_loop_scope_multiplies_and_nests():
+    x = np.zeros((4,), np.float32)
+    with collect_comm() as led:
+        with loop_scope(4):
+            T.record("all_to_all", "model", x, group_size=8, mirror=True)
+            with loop_scope(3):
+                T.record("all_to_all", "model", x, group_size=8)
+        T.record("all_to_all", "model", x, group_size=8)
+    assert led.call_count("all_to_all") == 4 + 12 + 1
+    assert led.call_count("all_to_all", train=True) == 4 + 12 + 1 + 4
+
+
+def test_loop_scope_rejects_bad_trips():
+    for bad in (0, -1, 2.5, True, None):
+        with pytest.raises(ValueError, match="positive int"):
+            with loop_scope(bad):
+                pass
+
+
+# ---------------------------------------------------------------------------
+# ring cost model: must agree with the HLO census's
+# ---------------------------------------------------------------------------
+
+def test_ring_factors_match_hlo_census():
+    from repro.launch.roofline import _wire_factor
+    for g in (1, 2, 4, 8):
+        for op, hlo in T.OP_TO_HLO.items():
+            assert T.ring_wire_factor(op, g) == _wire_factor(hlo, g), \
+                (op, g)
+
+
+# ---------------------------------------------------------------------------
+# constraint-transition classifier
+# ---------------------------------------------------------------------------
+
+SIZES = {"model": 4, "data": 2}
+
+
+def _implied(src, dst, shape=(16, 8), itemsize=4):
+    return T.implied_collectives(shape, itemsize, src, dst, SIZES)
+
+
+def test_transition_split_is_model_a2a():
+    # P(model, ·) → P(·, model): the paper's split; result bytes=total/4
+    out = _implied(P("model", None), P(None, "model"))
+    assert out == [("all_to_all", "model", 128.0, 0.75 * 128.0)]
+
+
+def test_transition_hybrid_stage_is_data_gather():
+    # dropping the data axis from the hybrid vertex layout = replica
+    # all-gather; result = total / model_sharding = 512/4 = 128
+    out = _implied(P(("model", "data"), None), P("model", None))
+    assert out == [("all_gather", "data", 64.0, 0.5 * 128.0)]
+
+
+def test_transition_add_axis_is_free():
+    assert _implied(P("model", None), P(("model", "data"), None)) == []
+    assert _implied(P("model", None), P("model", None)) == []
+
+
+def test_transition_unknown_axis_raises():
+    with pytest.raises(T.TelemetryError, match="pod"):
+        _implied(P("pod", None), P(None, "pod"))
+
+
+def test_transition_records_into_ledger():
+    with collect_comm() as led:
+        T.record_transition((16, 8), np.float32, P("model", None),
+                            P(None, "model"), SIZES, mirror=True)
+    assert led.wire_bytes("all_to_all", "model") == 96.0
+    assert led.wire_bytes("all_to_all", "model", train=True) == 192.0
+
+
+# ---------------------------------------------------------------------------
+# axis_size: the static-int contract (satellite: the 0.4.x fallback)
+# ---------------------------------------------------------------------------
+
+def test_axis_size_static_int_inside_engine():
+    seen = {}
+
+    def body(x):
+        seen["n"] = C.axis_size("model")
+        seen["static"] = C.static_axis_size("model")
+        return x
+
+    fn = engine(body, in_specs=P("model"), out_specs=P("model"),
+                mesh=tp_mesh(1))
+    fn(jnp.arange(1.0))
+    assert seen["n"] == 1 and isinstance(seen["n"], int)
+    assert seen["static"] == 1 and isinstance(seen["static"], int)
+
+
+def test_axis_size_unbound_returns_none():
+    assert C.static_axis_size("model") is None
+    assert C.static_axis_size("no-such-axis") is None
+
+
+def test_axis_size_psum_fallback_branch(monkeypatch):
+    """With both static probes disabled, axis_size falls back to
+    psum(1, axis) — still the right *value* (static only via jax's
+    non-tracer constant fold, which is why it is a last resort)."""
+    monkeypatch.setattr(C, "static_axis_size", lambda axis: None)
+    seen = {}
+
+    def body(x):
+        seen["n"] = C.axis_size("model")
+        return x
+
+    fn = engine(body, in_specs=P("model"), out_specs=P("model"),
+                mesh=tp_mesh(1))
+    fn(jnp.arange(1.0))
+    assert int(seen["n"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# replica_slice: no silent truncation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_replica_block_divides():
+    assert C._replica_block(8, 4, 0, ("data",)) == 2
+    assert C._replica_block(8, 1, 0, ()) == 8
+
+
+def test_replica_block_refuses_truncation():
+    with pytest.raises(ValueError) as e:
+        C._replica_block(10, 4, 0, ("pod", "data"))
+    msg = str(e.value)
+    # error must name the length, axis, and replica product (the old
+    # `// n` silently dropped 10 % 4 = 2 trailing rows per replica)
+    assert "length 10" in msg and "axis 0" in msg
+    assert "replica count 4" in msg and "('pod', 'data')" in msg
+
+
+def test_replica_ops_identity_ledger():
+    """data_axes=() replica ops are identities and record nothing — the
+    zero-entry ledger of the pure-TP path."""
+    x = jnp.arange(6.0).reshape(3, 2)
+    with collect_comm() as led:
+        assert C.replica_gather(x, ()) is x
+        assert C.replica_slice(x, ()) is x
+        assert C.psum_replicas(x, ()) is x
+    assert len(led) == 0
+
+
+# ---------------------------------------------------------------------------
+# collection through the real engine (single device: plumbing only)
+# ---------------------------------------------------------------------------
+
+def _tiny_tp(n_workers=1, n_chunks=4):
+    data = sbm_power_law(n=32, num_classes=4, feat_dim=8, avg_degree=4,
+                         seed=0)
+    bundle = D.prepare_bundle(data, n_workers=n_workers, n_chunks=n_chunks)
+    cfg = D.padded_gnn_config(data, bundle, model="gcn", hidden_dim=8,
+                              num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return data, bundle, cfg, params
+
+
+def test_ledger_fills_on_first_trace_only():
+    data, bundle, cfg, params = _tiny_tp()
+    loss_fn = D.make_tp_loss_fn(cfg, bundle, tp_mesh(1), mode="decoupled")
+    jitted = jax.jit(loss_fn)
+    with collect_comm() as led:
+        jitted.lower(params, bundle.train_mask)
+    # decoupled: split + gather + 3 scalar psums; 1-device axis → 0 wire
+    assert led.call_count("all_to_all") == 2
+    assert led.wire_bytes("all_to_all") == 0.0
+    assert led.call_count("psum") == 3
+    # the cached second trace records nothing (trace-time semantics)
+    with collect_comm() as led2:
+        jitted.lower(params, bundle.train_mask)
+    assert len(led2) == 0
+
+
+def test_pipelined_scan_counts_trips():
+    """The chunked-pipeline scans trace once but must count n_chunks× —
+    the while-loop undercount the census re-derives from trip constants
+    (8-device byte equality is pinned in check_telemetry)."""
+    data, bundle, cfg, params = _tiny_tp(n_chunks=4)
+    loss_fn = D.make_tp_loss_fn(cfg, bundle, tp_mesh(1),
+                                mode="decoupled_pipelined")
+    with collect_comm() as led:
+        jax.jit(loss_fn).lower(params, bundle.train_mask)
+    # L=2 rounds → one split scan + one gather scan, 4 chunks each
+    assert led.call_count("all_to_all") == 8
+    assert led.call_count("all_to_all", train=True) == 16
+
+
+def test_naive_layer0_not_mirrored():
+    data, bundle, cfg, params = _tiny_tp()
+    loss_fn = D.make_tp_loss_fn(cfg, bundle, tp_mesh(1), mode="naive")
+    with collect_comm() as led:
+        jax.jit(loss_fn).lower(params, bundle.train_mask)
+    # 2 a2a per layer forward, but layer 0 moves undifferentiated input
+    # features: only layer 1's pair declares an autodiff mirror
+    assert led.call_count("all_to_all") == 4
+    assert led.call_count("all_to_all", train=True) == 6
+
+
+# ---------------------------------------------------------------------------
+# 8-device byte-for-byte equivalence (slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_telemetry_matches_census_8dev():
+    """Ledger == analytic formulas == HLO census for every mode × both
+    backends on the bench workload, incl. a (2,4) hybrid mesh."""
+    run_dist_prog("check_telemetry.py", timeout=1200)
