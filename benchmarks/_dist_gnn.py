@@ -23,6 +23,15 @@ point while the train step traces (:mod:`repro.runtime.telemetry`):
     led_agd    the data-axis (replica_gather) share — nonzero iff the
                hybrid replica plumbing ran
 
+``--multihost`` joins a ``jax.distributed`` job from the env contract
+(``COORDINATOR_ADDRESS`` / ``NUM_PROCESSES`` / ``PROCESS_ID`` — see
+:mod:`repro.runtime.distributed` and ``scripts/launch_multihost.sh``):
+the mesh then spans the *global* devices while this process holds only
+its local slice, bundles are committed per-host, and rows, ledger
+asserts and census output are **process-0-only** (every process traces
+the identical ledger; N processes printing or racing to raise would
+corrupt the parent's CSV parse).
+
 ``--assert-ledger`` additionally asserts, in-process at full precision,
 that the ledger matches the analytic §3.2 formulas
 (:func:`benchmarks.bench_comm_volume.expected_ledger`) — and the HLO
@@ -118,7 +127,21 @@ def main():
     ap.add_argument("--data", type=int, default=1,
                     help="replica-group count: (data, model) hybrid mesh "
                          "with model = devices/data; 1 = pure TP")
+    ap.add_argument("--multihost", action="store_true",
+                    help="join a jax.distributed job from the env "
+                         "contract (COORDINATOR_ADDRESS / NUM_PROCESSES "
+                         "/ PROCESS_ID; see repro.runtime.distributed) — "
+                         "meshes span the global devices, bundles are "
+                         "committed per-host, and rows/asserts are "
+                         "process-0-only")
     args = ap.parse_args()
+
+    from repro.runtime import distributed as dist
+
+    if args.multihost:
+        # must precede the first jax.devices(): the local-device slice
+        # and the CPU gloo collectives are fixed at backend creation
+        dist.initialize()
 
     import jax
 
@@ -129,6 +152,7 @@ def main():
     from repro.graph import barabasi_albert, sbm_power_law
     from repro.runtime import collect_comm, hybrid_mesh, tp_mesh
 
+    is_c = dist.is_coordinator()
     n_dev = len(jax.devices())
     if args.data > 1:
         mesh = hybrid_mesh(data=args.data)   # model inferred, strict
@@ -149,8 +173,13 @@ def main():
     for mode in args.modes.split(","):
         # graph prep / config / params are backend-independent — only the
         # engine-mapped step differs per backend
+        # under --multihost the bundle must be committed to the global
+        # mesh (each process contributes its local shards); single-host
+        # placement stays as before
+        mesh_arg = mesh if args.multihost else None
         if mode == "dp":
-            bundle = DP.prepare_dp_bundle(data, k=k, n_replicas=replicas)
+            bundle = DP.prepare_dp_bundle(data, k=k, n_replicas=replicas,
+                                          mesh=mesh_arg)
             cfg = M.GNNConfig(model=args.model, in_dim=args.feat_dim,
                               hidden_dim=args.hidden,
                               num_classes=args.classes,
@@ -158,11 +187,14 @@ def main():
         else:
             bundle = D.prepare_bundle(data, n_workers=k,
                                       n_chunks=args.chunks,
-                                      n_replicas=replicas)
+                                      n_replicas=replicas,
+                                      mesh=mesh_arg)
             cfg = D.padded_gnn_config(data, bundle, model=args.model,
                                       hidden_dim=args.hidden,
                                       num_layers=args.layers)
         params = M.init_params(jax.random.PRNGKey(0), cfg)
+        if args.multihost:
+            params = dist.replicate(params, mesh)
         expected = _expected_for(args, mode, k, replicas, bundle, cfg) \
             if args.assert_ledger else None
         for backend in args.backends.split(","):
@@ -173,6 +205,8 @@ def main():
                 step, _ = D.make_tp_train_fns(cfg, bundle, mesh, opt,
                                               mode=mode, backend=backend)
             o = opt.init(params)
+            if args.multihost:
+                o = dist.replicate(o, mesh)   # commit the count scalar too
             p = params
             # the telemetry ledger fills during the FIRST trace of the
             # step — collect around .lower() before any execution (a
@@ -199,7 +233,7 @@ def main():
                         f";led_ag={led['led_ag']:.6e}"
                         f";led_agd={led['led_agd']:.6e}")
             cb = None
-            if args.hlo_census:
+            if args.hlo_census and is_c:
                 from repro.launch.roofline import hlo_census
                 try:
                     txt = lowered.compile().as_text()
@@ -213,15 +247,19 @@ def main():
                     if args.assert_ledger:
                         raise
                     derived += f";census_error={type(e).__name__}"
-            if args.assert_ledger:
+            # process-0-only under multihost: every process collects the
+            # identical trace-time ledger, but N processes printing rows
+            # (or racing to raise) would corrupt the parent's CSV parse
+            if args.assert_ledger and is_c:
                 _assert_ledger(args.tag_prefix + mode, mode, args.model,
                                led, cb, expected)
                 derived += ";led_ok=1"
             tag = mode if backend == "explicit" else f"{mode}_{backend}"
             if replicas > 1:
                 tag += f"_d{replicas}x{k}"
-            print(f"{args.tag_prefix}{tag},{dt*1e6:.1f},{derived}",
-                  flush=True)
+            if is_c:
+                print(f"{args.tag_prefix}{tag},{dt*1e6:.1f},{derived}",
+                      flush=True)
 
 
 def _expected_for(args, mode: str, k: int, replicas: int, bundle, cfg):

@@ -61,13 +61,42 @@ def record_output(text: str) -> str:
     return text
 
 
+def _process_index() -> int:
+    """This process's rank in a ``jax.distributed`` job (0 when jax is
+    not even imported yet — plain single-process benches must not pay a
+    jax import just to write their JSON).
+
+    When ``repro.runtime.distributed`` is loaded its context is
+    authoritative: it raises actionably if the multihost env contract is
+    set but ``initialize()`` never ran, instead of this function
+    reporting rank 0 on every process and letting N processes race on
+    the same BENCH_*.json."""
+    if "repro.runtime.distributed" in sys.modules:
+        return sys.modules["repro.runtime.distributed"].context().process_id
+    if "jax" not in sys.modules:
+        return 0
+    try:
+        return sys.modules["jax"].process_index()
+    except Exception:  # noqa: BLE001 — accounting only
+        return 0
+
+
 def write_json(bench_name: str, out_dir: str = RESULTS_DIR) -> str:
     """Persist the buffered rows as ``<out_dir>/BENCH_<bench_name>.json``.
 
     The payload is also mirrored to ``BENCH_<bench_name>.json`` at the
     repo root: the perf-trajectory tooling only scans the root, so runs
     that landed exclusively under results/ were invisible to it (an
-    empty trajectory despite results existing)."""
+    empty trajectory despite results existing).
+
+    **Process-0-only** under multihost: every process of a
+    ``jax.distributed`` job runs the same bench code, and N processes
+    writing the same ``BENCH_*.json`` would race (interleaved/truncated
+    files); non-coordinator processes drop their rows and write
+    nothing."""
+    if _process_index() != 0:
+        _ROWS.clear()
+        return os.path.join(out_dir, f"BENCH_{bench_name}.json")
     payload = json.dumps({"bench": bench_name, "entries": list(_ROWS)},
                          indent=2) + "\n"
     os.makedirs(out_dir, exist_ok=True)

@@ -2,9 +2,10 @@
 # Tier-1 verification in one invocation (the ROADMAP's tier-1 command,
 # reproducible):
 #
-#   scripts/ci.sh            # fast lane + bench smoke, then the 8-device
+#   scripts/ci.sh            # fast lane + bench smokes, then the 8-device
 #                            # subprocess lane
-#   scripts/ci.sh --fast     # fast lane + bench smoke only (-m "not slow")
+#   scripts/ci.sh --fast     # fast lane + bench smokes only (-m "not slow")
+#   scripts/ci.sh --multihost-smoke   # just the multihost smoke stage
 #
 # The main pytest process stays on the single real device.  The "slow"
 # tests launch child processes via tests/conftest.py::run_dist_prog, which
@@ -27,20 +28,50 @@
 # per model group for (data=2, model=4); model-axis a2a volumes must not
 # change with the replica count).
 #
+# The multihost smoke is the REAL jax.distributed launcher path on the
+# supported no-cluster topology (see scripts/launch_multihost.sh and
+# repro.runtime.distributed): 2 coordinator+worker processes × 2 forced
+# host devices each train one decoupled-GCN epoch on a 4-device global
+# mesh — cross-process gather/split all-to-alls over gloo — with the
+# trace-time telemetry ledger asserted against the analytic §3.2
+# formulas in-process (_dist_gnn --multihost --assert-ledger,
+# process-0-only).  A broken launcher, broken per-host bundle
+# placement, or broken cross-host collective accounting fails tier-1
+# here instead of only in the slow lane.
+#
 # The slow lane includes the hybrid DP×TP equivalence dist prog
 # (tests/dist_progs/check_hybrid_mesh.py via tests/test_hybrid_mesh.py):
 # (data=2, model=4) and (data=4, model=2) hybrid training must match
 # pure TP (model=8) and a single-device reference — losses AND grads to
 # atol 1e-5 — for GCN/GAT × all four modes × both engine backends, so
-# hybrid regressions fail tier-1.
+# hybrid regressions fail tier-1.  It also runs the multihost
+# equivalence suite (tests/test_multihost.py → dist_progs/
+# check_multihost.py under the multi-process harness): 2 processes × 4
+# fake devices must reproduce the single-process 8-device losses AND
+# grads to atol 1e-5 for all four modes × both backends.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+multihost_smoke() {
+    scripts/launch_multihost.sh -n 2 -d 2 -t 600 -- \
+        python -m benchmarks._dist_gnn --multihost --modes decoupled \
+            --model gcn --n 256 --feat-dim 16 --classes 4 --hidden 8 \
+            --layers 2 --chunks 2 --epochs 1 --assert-ledger \
+            --tag-prefix mh_
+}
+
+if [[ "${1:-}" == "--multihost-smoke" ]]; then
+    multihost_smoke
+    exit 0
+fi
+
 python -m pytest -q -m "not slow"
 
 python -m benchmarks.bench_comm_volume --telemetry-smoke
+
+multihost_smoke
 
 if [[ "${1:-}" != "--fast" ]]; then
     python -m pytest -q -m slow

@@ -1,0 +1,104 @@
+#!/usr/bin/env bash
+# Spawn an N-process jax.distributed job on THIS machine (the supported
+# no-cluster CI topology of repro.runtime.distributed):
+#
+#   scripts/launch_multihost.sh [-n N] [-d M] [-t SECONDS] [-- CMD...]
+#
+#   -n N        processes (default 2)
+#   -d M        forced host devices per process (default 2; each child
+#               gets XLA_FLAGS=--xla_force_host_platform_device_count=M,
+#               so the job spans N*M global devices)
+#   -t SECONDS  hard per-process timeout (default 900)
+#   CMD...      the per-process command (default:
+#               python -m repro.launch.multihost)
+#
+# Every child is launched with the runtime.distributed env contract —
+# the SAME three variables a real cluster scheduler must export on every
+# host, where CMD runs once per node and no devices are forced:
+#
+#   COORDINATOR_ADDRESS=<host:port>   here: 127.0.0.1:<fresh free port>
+#   NUM_PROCESSES=<N>                 identical on every process
+#   PROCESS_ID=<i>                    distinct, 0..N-1 (0 = coordinator)
+#   DIST_INIT_TIMEOUT=<seconds>       optional connect timeout
+#
+# Process 0's output streams to stdout; the others log to a temp dir and
+# are dumped only on failure.  The first failing process kills the
+# stragglers (a dead peer leaves the rest blocked in a collective), and
+# the per-process `timeout` is a hard cap — a hung barrier cannot
+# outlive it.
+#
+# Examples:
+#   scripts/launch_multihost.sh                      # 2x2 training demo
+#   scripts/launch_multihost.sh -n 2 -d 4 -- \
+#       python -m repro.launch.multihost --mode naive --backend constraint
+#   scripts/launch_multihost.sh -n 2 -d 2 -t 600 -- \
+#       python -m benchmarks._dist_gnn --multihost --modes decoupled \
+#           --model gcn --n 256 --feat-dim 16 --classes 4 --hidden 8 \
+#           --layers 2 --chunks 2 --epochs 1 --assert-ledger \
+#           --tag-prefix mh_                    # ci.sh's multihost smoke
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+N=2
+DEVICES=2
+TIMEOUT=900
+while getopts "n:d:t:" opt; do
+    case "$opt" in
+        n) N="$OPTARG" ;;
+        d) DEVICES="$OPTARG" ;;
+        t) TIMEOUT="$OPTARG" ;;
+        *) echo "usage: $0 [-n N] [-d M] [-t SECONDS] [-- CMD...]" >&2
+           exit 2 ;;
+    esac
+done
+shift $((OPTIND - 1))
+[[ "${1:-}" == "--" ]] && shift
+if [[ $# -eq 0 ]]; then
+    set -- python -m repro.launch.multihost
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+PORT=$(python - <<'EOF'
+import socket
+s = socket.socket()
+s.bind(("127.0.0.1", 0))
+print(s.getsockname()[1])
+s.close()
+EOF
+)
+
+LOGDIR=$(mktemp -d)
+trap 'rm -rf "$LOGDIR"' EXIT
+
+pids=()
+for ((i = 0; i < N; i++)); do
+    if [[ $i -eq 0 ]]; then
+        out=/dev/stdout
+    else
+        out="$LOGDIR/proc$i.log"
+    fi
+    COORDINATOR_ADDRESS="127.0.0.1:$PORT" NUM_PROCESSES="$N" \
+        PROCESS_ID="$i" \
+        XLA_FLAGS="--xla_force_host_platform_device_count=$DEVICES" \
+        timeout --signal=TERM --kill-after=10 "$TIMEOUT" \
+        "$@" > "$out" 2>&1 &
+    pids+=($!)
+done
+
+fail=0
+for ((i = 0; i < N; i++)); do
+    # first failure kills the stragglers; remaining waits then return fast
+    if ! wait -n; then
+        fail=1
+        kill "${pids[@]}" 2>/dev/null || true
+    fi
+done
+
+if [[ $fail -ne 0 ]]; then
+    echo "launch_multihost: FAILED (N=$N, devices=$DEVICES)" >&2
+    for ((i = 1; i < N; i++)); do
+        echo "--- process $i log ---" >&2
+        cat "$LOGDIR/proc$i.log" >&2 || true
+    done
+    exit 1
+fi

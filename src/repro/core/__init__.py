@@ -4,6 +4,7 @@
 from . import tp, chunks, decouple  # noqa: F401
 from .decouple import (TPBundle, TPGraph, prepare_bundle, padded_gnn_config,
                        make_tp_loss_fn, make_tp_train_fns,
+                       make_tp_value_and_grad,
                        tp_decoupled_forward, tp_decoupled_forward_constraint,
                        tp_naive_forward,
                        tp_naive_forward_constraint)  # noqa: F401

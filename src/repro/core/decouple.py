@@ -132,11 +132,55 @@ def _pad_graph(g: gf.Graph, n_padded: int) -> gf.Graph:
                     indptr=indptr)
 
 
-def prepare_bundle(data: GraphData, n_workers: int,
-                   n_chunks: int = 4, n_replicas: int = 1) -> TPBundle:
+def place_bundle(bundle: TPBundle, mesh) -> TPBundle:
+    """Commit a host-side bundle to ``mesh`` as global arrays.
+
+    Node arrays take the vertex-sharded layout (``P(vertex_axes)`` —
+    over every device under a hybrid mesh), the graph structure is
+    replicated.  Under a ``jax.distributed`` job each process
+    contributes only the shards its local devices hold
+    (:func:`repro.runtime.distributed.put_global`), which is what lets
+    the engine-mapped train steps run unchanged when no process owns
+    the whole mesh.  Single-process this is a plain sharded placement.
+    """
+    from ..runtime import mesh_axes
+    from ..runtime import distributed as dist
+    axis, data_axes = mesh_axes(mesh)
+    vspec = tp.vertex_spec(axis, data_axes)             # (V, ·) leading dim
+    v1 = P(tp.vertex_axes(axis, data_axes))             # (V,) vectors
+    rep = lambda t: jax.tree.map(                       # noqa: E731
+        lambda a: dist.put_global(a, mesh, P()), t)
+    return dataclasses.replace(
+        bundle,
+        graph=rep(bundle.graph),
+        features=dist.put_global(bundle.features, mesh, vspec),
+        labels=dist.put_global(bundle.labels, mesh, v1),
+        train_mask=dist.put_global(bundle.train_mask, mesh, v1),
+        val_mask=dist.put_global(bundle.val_mask, mesh, v1),
+        test_mask=dist.put_global(bundle.test_mask, mesh, v1))
+
+
+def prepare_bundle(data: GraphData, n_workers: int | None = None,
+                   n_chunks: int = 4, n_replicas: int | None = None,
+                   mesh=None) -> TPBundle:
     """Host-side prep.  ``n_workers`` is the model (TP) degree; under a
     hybrid mesh ``n_replicas`` is the replica-group count (``data_size``)
-    so the vertex dim pads to a multiple of every device."""
+    so the vertex dim pads to a multiple of every device.
+
+    ``mesh=`` derives both degrees from the mesh and commits the bundle
+    to it as global arrays (:func:`place_bundle`) — required under a
+    multi-process ``jax.distributed`` job, where each process holds only
+    a slice of the mesh and host-local arrays cannot enter the engine.
+    Without a mesh the bundle stays host-local (single-process
+    behaviour, unchanged)."""
+    if mesh is not None:
+        from ..runtime import resolve_bundle_degrees
+        n_workers, n_replicas = resolve_bundle_degrees(
+            mesh, n_workers, n_replicas)
+    elif n_workers is None:
+        raise TypeError("prepare_bundle needs n_workers= (or mesh= to "
+                        "derive it)")
+    n_replicas = 1 if n_replicas is None else n_replicas
     g = data.graph
     n_padded = tp.padded_size(g.n, n_workers * n_chunks * n_replicas)
     gp = _pad_graph(g, n_padded)
@@ -153,10 +197,15 @@ def prepare_bundle(data: GraphData, n_workers: int,
     labels = np.zeros((n_padded,), np.int32)
     labels[: g.n] = data.labels
 
+    # with a mesh the node arrays go straight from numpy to their global
+    # placement (place_bundle) — committing them to the local default
+    # device first would be a wasted host→device→host round trip
+    to_dev = (lambda a: a) if mesh is not None else jnp.asarray
+
     def pad_mask(m):
         out = np.zeros((n_padded,), np.float32)
         out[: g.n] = m.astype(np.float32)
-        return jnp.asarray(out)
+        return to_dev(out)
 
     graph = TPGraph(
         edges=L.edge_list_dev(gp), chunked=L.chunked_dev(cg),
@@ -164,12 +213,13 @@ def prepare_bundle(data: GraphData, n_workers: int,
         n=g.n, n_padded=n_padded, n_workers=n_workers,
         num_classes=data.num_classes, c_padded=c_padded,
         in_dim_padded=in_dim_padded)
-    return TPBundle(
+    bundle = TPBundle(
         graph=graph,
-        features=jnp.asarray(feats), labels=jnp.asarray(labels),
+        features=to_dev(feats), labels=to_dev(labels),
         train_mask=pad_mask(data.train_mask),
         val_mask=pad_mask(data.val_mask),
         test_mask=pad_mask(data.test_mask))
+    return bundle if mesh is None else place_bundle(bundle, mesh)
 
 
 def padded_gnn_config(data: GraphData, bundle: TPBundle,
@@ -625,6 +675,99 @@ def make_tp_loss_fn(cfg: M.GNNConfig, bundle: TPBundle, mesh,
     return loss_fn
 
 
+def bundled_value_and_grad(smapped, graph, x, labels):
+    """Jitted (params, mask) → (loss, grads) over an engine-mapped
+    ``smapped(params, graph, x, labels, mask) → (loss, acc)`` — one
+    executable per call, bundle arrays fed as jit arguments.
+
+    This is the one place the multihost jit discipline for grads is
+    written (used by both the TP and DP factories): eager autodiff
+    dispatches the forward and transposed backward as *separate*
+    in-flight executables, and on a multi-process mesh concurrently
+    in-flight executables race their collectives on the shared
+    cross-process transport (observed as gloo ``op.preamble.length <=
+    op.nbytes`` aborts on the forced-host CPU topology).  Jitting the
+    whole value-and-grad keeps every collective inside one executable,
+    where XLA orders them; argument (not closure) feeding is required
+    for the same reason as in :func:`bundled_train_fns`.
+    """
+    @jax.jit
+    def _vg(params, graph, x, labels, mask):
+        def loss_fn(p):
+            loss, _ = smapped(p, graph, x, labels, mask)
+            return loss
+
+        return jax.value_and_grad(loss_fn)(params)
+
+    def value_and_grad_fn(params, mask):
+        return _vg(params, graph, x, labels, mask)
+
+    return value_and_grad_fn
+
+
+def bundled_train_fns(smapped, optimizer, graph, x, labels, masks):
+    """Jitted (train_step, evaluate) over an engine-mapped ``smapped``
+    — the shared back half of :func:`make_tp_train_fns` and
+    :func:`repro.gnn.dp_baseline.make_dp_train_fns`.
+
+    The bundle's arrays enter the jitted steps as ARGUMENTS, not
+    closure constants: under a multi-process mesh a traced function may
+    not close over arrays spanning non-addressable devices (each
+    process holds only its local shards), and argument passing is also
+    what keeps the data host-feedable — the jit cache keys on shape,
+    not identity, so the public (params, opt_state) signature below
+    costs nothing single-process.  ``masks`` maps split name
+    ("train"/"val"/"test") to its mask array.
+    """
+    @jax.jit
+    def _step(params, opt_state, graph, x, labels, mask):
+        def loss_fn(p):
+            loss, _ = smapped(p, graph, x, labels, mask)
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return params, opt_state, loss
+
+    def train_step(params, opt_state):
+        return _step(params, opt_state, graph, x, labels, masks["train"])
+
+    # benches/telemetry wrap the first trace: keep .lower() reachable
+    train_step.lower = lambda params, opt_state: _step.lower(
+        params, opt_state, graph, x, labels, masks["train"])
+
+    @jax.jit
+    def _eval(params, graph, x, labels, mask):
+        return smapped(params, graph, x, labels, mask)
+
+    def evaluate(params, split: str = "val"):
+        return _eval(params, graph, x, labels, masks[split])
+
+    return train_step, evaluate
+
+
+def _bundle_masks(bundle) -> dict:
+    return {"train": bundle.train_mask, "val": bundle.val_mask,
+            "test": bundle.test_mask}
+
+
+def make_tp_value_and_grad(cfg: M.GNNConfig, bundle: TPBundle, mesh,
+                           axis: str = "model",
+                           mode: str = "decoupled_pipelined",
+                           backend: str = "explicit", data_axes=None):
+    """Jitted (params, mask) → (loss, grads) — the multihost-safe
+    spelling of ``jax.value_and_grad(make_tp_loss_fn(...))`` (one
+    executable per call; see :func:`bundled_value_and_grad` for why
+    eager autodiff is not safe on a multi-process mesh)."""
+    data_axes = _resolve_data_axes(mesh, axis, data_axes)
+    _check_bundle_fits(bundle, mesh, axis, data_axes)
+    smapped = _make_tp_loss_and_acc(cfg, mesh, axis, mode, backend,
+                                    data_axes)
+    return bundled_value_and_grad(smapped, bundle.graph, bundle.features,
+                                  bundle.labels)
+
+
 def make_tp_train_fns(cfg: M.GNNConfig, bundle: TPBundle, mesh,
                       optimizer, axis: str = "model",
                       mode: str = "decoupled_pipelined",
@@ -643,27 +786,6 @@ def make_tp_train_fns(cfg: M.GNNConfig, bundle: TPBundle, mesh,
     _check_bundle_fits(bundle, mesh, axis, data_axes)
     smapped = _make_tp_loss_and_acc(cfg, mesh, axis, mode, backend,
                                     data_axes)
-
-    def loss_fn(params, mask):
-        loss, _ = smapped(params, bundle.graph, bundle.features,
-                          bundle.labels, mask)
-        return loss
-
-    @jax.jit
-    def train_step(params, opt_state):
-        loss, grads = jax.value_and_grad(loss_fn)(params, bundle.train_mask)
-        updates, opt_state = optimizer.update(grads, opt_state, params)
-        params = jax.tree.map(lambda p, u: p + u, params, updates)
-        return params, opt_state, loss
-
-    @jax.jit
-    def _eval(params, mask):
-        return smapped(params, bundle.graph, bundle.features,
-                       bundle.labels, mask)
-
-    def evaluate(params, split: str = "val"):
-        mask = {"train": bundle.train_mask, "val": bundle.val_mask,
-                "test": bundle.test_mask}[split]
-        return _eval(params, mask)
-
-    return train_step, evaluate
+    return bundled_train_fns(smapped, optimizer, bundle.graph,
+                             bundle.features, bundle.labels,
+                             _bundle_masks(bundle))

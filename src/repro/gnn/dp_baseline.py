@@ -72,12 +72,50 @@ class DPBundle:
     comm_rows_per_worker: np.ndarray  # analysis: rows each worker receives
 
 
-def prepare_dp_bundle(data: GraphData, k: int,
+def place_dp_bundle(bundle: DPBundle, mesh) -> DPBundle:
+    """Commit a host-side DP bundle to ``mesh`` as global arrays: node
+    arrays in the stacked (k, n_local, ·) layout (partitions on the
+    model axis, rows over the data axes under a hybrid mesh), graph
+    structure replicated.  The multihost counterpart of
+    :func:`repro.core.decouple.place_bundle` — each process contributes
+    only its local devices' shards via
+    :func:`repro.runtime.distributed.put_global`."""
+    from ..runtime import mesh_axes
+    from ..runtime import distributed as dist
+    axis, data_axes = mesh_axes(mesh)
+    rows2 = _dp_row_spec(axis, data_axes, trailing=0)    # (k, n_local)
+    rows3 = _dp_row_spec(axis, data_axes)                # (k, n_local, d)
+    graph = jax.tree.map(lambda a: dist.put_global(a, mesh, P()),
+                         bundle.graph)
+    return dataclasses.replace(
+        bundle, graph=graph,
+        features=dist.put_global(bundle.features, mesh, rows3),
+        labels=dist.put_global(bundle.labels, mesh, rows2),
+        train_mask=dist.put_global(bundle.train_mask, mesh, rows2),
+        val_mask=dist.put_global(bundle.val_mask, mesh, rows2),
+        test_mask=dist.put_global(bundle.test_mask, mesh, rows2))
+
+
+def prepare_dp_bundle(data: GraphData, k: int | None = None,
                       balance: str = "vertex",
-                      n_replicas: int = 1) -> DPBundle:
+                      n_replicas: int | None = None,
+                      mesh=None) -> DPBundle:
     """``k`` graph partitions (the model axis); under a hybrid mesh
     ``n_replicas`` pads each partition's row count so the local rows also
-    shard over the data axes."""
+    shard over the data axes.
+
+    ``mesh=`` derives both counts from the mesh and commits the bundle
+    to it (:func:`place_dp_bundle`) — required under a multi-process
+    ``jax.distributed`` job; without it the bundle stays host-local."""
+    if mesh is not None:
+        from ..runtime import resolve_bundle_degrees
+        k, n_replicas = resolve_bundle_degrees(
+            mesh, k, n_replicas, caller="prepare_dp_bundle",
+            worker_name="k")
+    elif k is None:
+        raise TypeError("prepare_dp_bundle needs k= (or mesh= to derive "
+                        "it)")
+    n_replicas = 1 if n_replicas is None else n_replicas
     g = data.graph
     part = gp.chunk_partition(g, k, balance=balance)
     plan = gp.halo_plan(g, part)
@@ -125,13 +163,17 @@ def prepare_dp_bundle(data: GraphData, k: int,
         valid_rows=jnp.asarray(valid),
         k=k, m=plan.m, halo_size=plan.halo_size,
         n_local_max=n_local_max, e_max=e_max)
-    return DPBundle(graph=graph, features=jnp.asarray(feats),
-                    labels=jnp.asarray(labels),
-                    train_mask=jnp.asarray(masks["train"]),
-                    val_mask=jnp.asarray(masks["val"]),
-                    test_mask=jnp.asarray(masks["test"]),
-                    num_classes=data.num_classes,
-                    comm_rows_per_worker=comm_rows)
+    # node arrays go straight from numpy to their global placement when
+    # a mesh is given (no local-device round trip — see prepare_bundle)
+    to_dev = (lambda a: a) if mesh is not None else jnp.asarray
+    bundle = DPBundle(graph=graph, features=to_dev(feats),
+                      labels=to_dev(labels),
+                      train_mask=to_dev(masks["train"]),
+                      val_mask=to_dev(masks["val"]),
+                      test_mask=to_dev(masks["test"]),
+                      num_classes=data.num_classes,
+                      comm_rows_per_worker=comm_rows)
+    return bundle if mesh is None else place_dp_bundle(bundle, mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -357,6 +399,21 @@ def make_dp_loss_fn(cfg: M.GNNConfig, bundle: DPBundle, mesh,
     return loss_fn
 
 
+def make_dp_value_and_grad(cfg: M.GNNConfig, bundle: DPBundle, mesh,
+                           axis: str = "model", backend: str = "explicit",
+                           data_axes=None):
+    """Jitted (params, mask) → (loss, grads): the multihost-safe
+    value-and-grad handle (one executable per call; see
+    :func:`repro.core.decouple.bundled_value_and_grad` for why eager
+    autodiff is not safe on a multi-process mesh)."""
+    from ..core.decouple import bundled_value_and_grad
+    data_axes = _resolve_dp_axes(bundle, mesh, axis, data_axes)
+    smapped = _make_dp_loss_and_acc(cfg, bundle.num_classes, mesh, axis,
+                                    backend, data_axes)
+    return bundled_value_and_grad(smapped, bundle.graph, bundle.features,
+                                  bundle.labels)
+
+
 def make_dp_train_fns(cfg: M.GNNConfig, bundle: DPBundle, mesh,
                       optimizer, axis: str = "model",
                       backend: str = "explicit", data_axes=None):
@@ -366,30 +423,12 @@ def make_dp_train_fns(cfg: M.GNNConfig, bundle: DPBundle, mesh,
     ``data_axes=None`` derives replica axes from ``mesh`` (hybrid DP×TP:
     partition rows shard over the data axes and the gradient psum spans
     them via the replica ops' transposes)."""
+    from ..core.decouple import _bundle_masks, bundled_train_fns
     data_axes = _resolve_dp_axes(bundle, mesh, axis, data_axes)
     smapped = _make_dp_loss_and_acc(cfg, bundle.num_classes, mesh, axis,
                                     backend, data_axes)
-
-    def loss_fn(params, mask):
-        loss, _ = smapped(params, bundle.graph, bundle.features,
-                          bundle.labels, mask)
-        return loss
-
-    @jax.jit
-    def train_step(params, opt_state):
-        loss, grads = jax.value_and_grad(loss_fn)(params, bundle.train_mask)
-        updates, opt_state = optimizer.update(grads, opt_state, params)
-        params = jax.tree.map(lambda p, u: p + u, params, updates)
-        return params, opt_state, loss
-
-    @jax.jit
-    def _eval(params, mask):
-        return smapped(params, bundle.graph, bundle.features,
-                       bundle.labels, mask)
-
-    def evaluate(params, split: str = "val"):
-        mask = {"train": bundle.train_mask, "val": bundle.val_mask,
-                "test": bundle.test_mask}[split]
-        return _eval(params, mask)
-
-    return train_step, evaluate
+    # bundle arrays are fed as jit ARGUMENTS, never closure constants —
+    # the multihost jit discipline lives in one place (bundled_train_fns)
+    return bundled_train_fns(smapped, optimizer, bundle.graph,
+                             bundle.features, bundle.labels,
+                             _bundle_masks(bundle))

@@ -33,6 +33,15 @@ Public surface:
                          psum_replicas) used inside explicit engine
                          bodies; the tested choke point every wire byte
                          flows through
+* :mod:`distributed`   — multi-host process runtime: the one entry into
+                         ``jax.distributed.initialize`` (env/CLI-driven
+                         coordinator_address / num_processes /
+                         process_id, actionable failure errors) plus
+                         :func:`distributed.put_global` /
+                         :func:`distributed.replicate` host-data
+                         placement, so the same global meshes and engine
+                         programs run when N processes each own a slice
+                         of the devices
 * :mod:`telemetry`     — trace-time collective telemetry at that choke
                          point: :func:`collect_comm` ledgers of per
                          (op, axis, dtype) call counts / payload / ring
@@ -47,6 +56,7 @@ No other module may call ``shard_map`` (any spelling) or the ``jax.lax``
 collectives directly (tests/test_collectives_chokepoint.py enforces it).
 """
 from . import collectives  # noqa: F401
+from . import distributed  # noqa: F401
 from . import telemetry  # noqa: F401
 from .constraint import (  # noqa: F401
     constrain,
@@ -64,7 +74,9 @@ from .mesh import (  # noqa: F401
     as_mesh,
     data_axes_for,
     hybrid_mesh,
+    mesh_axes,
     padded_size,
+    resolve_bundle_degrees,
     resolve_mesh_shape,
     resolve_replicas,
     tp_mesh,
@@ -81,10 +93,11 @@ from .smap import (  # noqa: F401
 
 __all__ = [
     "DATA_AXES_ORDER", "DEFAULT_AXIS", "TPMesh", "as_mesh",
-    "data_axes_for", "hybrid_mesh", "padded_size", "resolve_mesh_shape",
+    "data_axes_for", "hybrid_mesh", "mesh_axes", "padded_size",
+    "resolve_bundle_degrees", "resolve_mesh_shape",
     "resolve_replicas", "tp_mesh", "CHECK_KW", "JAX_VERSION", "SUPPORTED_JAX", "engine",
     "resolve_shard_map", "smap", "validate_specs", "collectives",
     "constrain", "constraint_engine", "current_mesh", "layout_cast",
     "mesh_context", "note_transition", "telemetry", "CommLedger",
-    "collect_comm", "loop_scope",
+    "collect_comm", "loop_scope", "distributed",
 ]

@@ -57,6 +57,11 @@ analytic §3.2 formulas, and the HLO census by
 tests/dist_progs/check_telemetry.py.
 
 All functions must be called *inside* a mapped body with the axes bound.
+Axis sizes and indices are *global* — under a multi-process
+``jax.distributed`` mesh the same wrappers move bytes across process
+boundaries (gloo on forced-host CPU, ICI/NCCL on real accelerators)
+with no code change here, which is what keeps the telemetry ledger's
+per-device accounting topology-independent.
 
 Version portability lives here too: :func:`axis_size` resolves the
 static size from ``jax.lax.axis_size`` (newer lines) or the bound axis

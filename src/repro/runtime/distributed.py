@@ -1,0 +1,419 @@
+"""Multi-host process runtime: ``jax.distributed`` init + global placement.
+
+The engine stack (``runtime.engine`` and everything built on it) is
+written against *global* meshes: a mesh enumerates every device in the
+job, specs describe global layouts, and the collectives move global
+arrays.  On one process that is trivially true — ``jax.devices()`` is
+the whole world.  This module is what makes the same programs run when
+the world is **N processes each owning a slice of the devices** (the
+paper's 16-node cluster; §5): it owns
+
+* :func:`initialize` — the one entry into ``jax.distributed.initialize``
+  (coordinator_address / num_processes / process_id, CLI- or env-driven
+  via :data:`ENV_COORDINATOR` / :data:`ENV_NUM_PROCESSES` /
+  :data:`ENV_PROCESS_ID`), with eager validation and *actionable*
+  errors: an unreachable coordinator or a process-count mismatch raises
+  naming the address, ids, and timeout instead of hanging silently.  On
+  the CPU backend it enables the gloo cross-process collectives (the
+  forced-host CI topology below runs real multi-process all-to-alls).
+* :func:`put_global` / :func:`replicate` — host data → global arrays.
+  Each process materializes the (replicated) host-side value and
+  contributes only the shards its local devices hold, via
+  ``jax.make_array_from_callback`` — the per-process placement
+  ``jax.make_array_from_process_local_data`` is sugar for.  This is how
+  ``prepare_bundle`` / ``prepare_dp_bundle`` shard the training bundle
+  per host (``mesh=`` argument) so the per-shard engine bodies and the
+  constraint backend's jit shardings run unchanged.
+* :func:`context` — the process topology (process_id, num_processes,
+  local/global device counts) for accounting: ``runtime.mesh`` appends
+  it to device-accounting errors, benches gate output on
+  :func:`is_coordinator`, and per-process telemetry ledgers are merged
+  at the coordinator (``CommLedger.merge_from`` /
+  ``CommLedger.from_dict``).
+
+Supported CI topology (no cluster needed)
+-----------------------------------------
+
+N processes × M forced host devices each, coordinator on localhost::
+
+    COORDINATOR_ADDRESS=127.0.0.1:<port> NUM_PROCESSES=N PROCESS_ID=i \\
+    XLA_FLAGS=--xla_force_host_platform_device_count=M  python <prog>
+
+Every process then sees ``len(jax.local_devices()) == M`` and
+``len(jax.devices()) == N*M``, and the gather/split all-to-alls execute
+across real process boundaries (gloo over TCP).  ``scripts/
+launch_multihost.sh`` spawns exactly this; ``tests/dist_progs/
+harness.py`` is the test-suite spelling of it.  On a real cluster the
+same three env vars point at the rank-0 host and the devices are
+whatever accelerators each host owns.
+
+One discipline multihost imposes on callers: **collective-bearing
+computations must run as a single jitted executable**.  Two executables
+in flight at once race their collectives on the shared cross-process
+transport (observed as gloo ``op.preamble.length <= op.nbytes`` aborts
+on the CPU topology) — which is exactly what *eager* autodiff of a
+sharded loss produces (separate forward and transposed-backward
+executables).  The repo's factories comply: ``make_tp_train_fns`` /
+``make_dp_train_fns`` jit the whole step with the bundle fed as
+arguments (a traced function may not close over arrays spanning
+non-addressable devices), and ``make_tp_value_and_grad`` /
+``make_dp_value_and_grad`` are the jitted equivalence-test handles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import socket
+import sys
+import time
+
+import numpy as np
+
+#: Environment contract of the launcher (scripts/launch_multihost.sh and
+#: any real-cluster scheduler export these for every process).
+ENV_COORDINATOR = "COORDINATOR_ADDRESS"
+ENV_NUM_PROCESSES = "NUM_PROCESSES"
+ENV_PROCESS_ID = "PROCESS_ID"
+#: Optional: seconds before a connect attempt gives up (default 60; the
+#: failure-mode tests shrink it so "unreachable" fails fast).
+ENV_INIT_TIMEOUT = "DIST_INIT_TIMEOUT"
+
+_DEFAULT_TIMEOUT = 60.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    """Resolved process topology after :func:`initialize`."""
+
+    coordinator_address: str | None
+    num_processes: int
+    process_id: int
+    local_device_count: int
+    global_device_count: int
+
+    @property
+    def is_coordinator(self) -> bool:
+        return self.process_id == 0
+
+    @property
+    def is_distributed(self) -> bool:
+        return self.num_processes > 1
+
+
+_CONTEXT: DistContext | None = None
+
+
+def env_topology(env=None) -> dict:
+    """The launcher env contract as ``initialize`` kwargs (missing keys
+    omitted).  ``{}`` means "no multihost env": single-process mode."""
+    env = os.environ if env is None else env
+    out: dict = {}
+    if env.get(ENV_COORDINATOR):
+        out["coordinator_address"] = env[ENV_COORDINATOR]
+    for key, name in ((ENV_NUM_PROCESSES, "num_processes"),
+                      (ENV_PROCESS_ID, "process_id")):
+        if env.get(key):
+            try:
+                out[name] = int(env[key])
+            except ValueError:
+                raise ValueError(
+                    f"environment variable {key}={env[key]!r} must be an "
+                    f"integer") from None
+    if env.get(ENV_INIT_TIMEOUT):
+        try:
+            out["timeout"] = float(env[ENV_INIT_TIMEOUT])
+        except ValueError:
+            raise ValueError(
+                f"environment variable {ENV_INIT_TIMEOUT}="
+                f"{env[ENV_INIT_TIMEOUT]!r} must be a number of "
+                f"seconds") from None
+    return out
+
+
+def _validate(coordinator_address, num_processes, process_id) -> None:
+    """Eager topology validation — catches the classic launcher mistakes
+    before anything can block on the network."""
+    problems = []
+    if num_processes < 1:
+        problems.append(f"num_processes={num_processes} must be >= 1")
+    if not 0 <= process_id < max(num_processes, 1):
+        problems.append(
+            f"process_id={process_id} out of range for "
+            f"num_processes={num_processes} (valid ids: 0.."
+            f"{num_processes - 1}) — every process must be launched with "
+            f"the same {ENV_NUM_PROCESSES} and a distinct {ENV_PROCESS_ID}")
+    if num_processes > 1:
+        if not coordinator_address:
+            problems.append(
+                f"multihost ({num_processes} processes) needs a "
+                f"coordinator address — set {ENV_COORDINATOR}=host:port "
+                f"(the rank-0 host) on every process")
+        else:
+            _, _, port = str(coordinator_address).rpartition(":")
+            if not port.isdigit():
+                problems.append(
+                    f"coordinator address {coordinator_address!r} is not "
+                    f"host:port")
+    if problems:
+        raise ValueError("invalid multihost topology: "
+                         + "; ".join(problems))
+
+
+def _await_coordinator(address: str, timeout: float,
+                       num_processes: int, process_id: int) -> None:
+    """TCP-probe the coordinator before handing control to the XLA
+    distributed client.
+
+    An unreachable coordinator inside the C++ client is a ``LOG(FATAL)``
+    — the process aborts and no Python ``except`` ever sees it.  Probing
+    first (with retries up to ``timeout``: the coordinator may simply
+    not have bound yet) turns the common launcher mistake into a
+    catchable, actionable ``RuntimeError``.
+    """
+    host, _, port = address.rpartition(":")
+    deadline = time.monotonic() + timeout
+    last: Exception | None = None
+    while True:                      # always probe at least once
+        try:
+            with socket.create_connection((host, int(port)),
+                                          timeout=max(0.5, min(2.0,
+                                                               timeout))):
+                return
+        except OSError as e:
+            last = e
+            if time.monotonic() >= deadline:
+                break
+            time.sleep(0.25)
+    raise RuntimeError(
+        f"coordinator at {address!r} unreachable after {timeout:.0f}s "
+        f"(worker {process_id} of {num_processes}): {last}. Check that "
+        f"process 0 is running and reachable at that host:port, that "
+        f"{ENV_COORDINATOR} is identical on every process, and that "
+        f"{ENV_NUM_PROCESSES}/{ENV_PROCESS_ID} describe the actual "
+        f"launch ({ENV_INIT_TIMEOUT} raises this timeout).")
+
+
+def initialize(coordinator_address: str | None = None,
+               num_processes: int | None = None,
+               process_id: int | None = None, *,
+               timeout: float | None = None) -> DistContext:
+    """Join (or start, as process 0) the distributed job and create the
+    global device topology.  Arguments default to the env contract
+    (:func:`env_topology`); with neither args nor env this is the
+    single-process no-op and existing single-host entry points are
+    unchanged.
+
+    Must run before anything creates the JAX backend (any
+    ``jax.devices()`` call): the CPU gloo collectives and the process's
+    local-device slice are fixed at backend creation.  Idempotent once
+    initialized (returns the existing context; re-initializing with a
+    *different* topology raises).
+    """
+    global _CONTEXT
+    envkw = env_topology()
+    if coordinator_address is None:
+        coordinator_address = envkw.get("coordinator_address")
+    if num_processes is None:
+        num_processes = envkw.get("num_processes", 1)
+    if process_id is None:
+        process_id = envkw.get("process_id", 0)
+    if timeout is None:
+        timeout = envkw.get("timeout", _DEFAULT_TIMEOUT)
+    _validate(coordinator_address, num_processes, process_id)
+
+    if _CONTEXT is not None:
+        same = (_CONTEXT.coordinator_address, _CONTEXT.num_processes,
+                _CONTEXT.process_id) == \
+               (coordinator_address, num_processes, process_id)
+        if not same:
+            raise RuntimeError(
+                f"distributed runtime already initialized as process "
+                f"{_CONTEXT.process_id}/{_CONTEXT.num_processes} "
+                f"(coordinator {_CONTEXT.coordinator_address!r}); cannot "
+                f"re-initialize as {process_id}/{num_processes} "
+                f"(coordinator {coordinator_address!r})")
+        return _CONTEXT
+
+    import jax
+
+    if num_processes > 1:
+        from jax._src import xla_bridge as _xb
+        if getattr(_xb, "backends_are_initialized", lambda: False)():
+            raise RuntimeError(
+                "JAX backends are already initialized — "
+                "runtime.distributed.initialize() must run before the "
+                "first jax.devices()/device_put in the process (the "
+                "local-device slice and cross-process collectives are "
+                "fixed at backend creation)")
+        try:
+            # CPU cross-process collectives (the forced-host CI
+            # topology) need gloo; a no-op where the option is absent
+            # or the platform is not CPU.
+            jax.config.update("jax_cpu_collectives_implementation",
+                              "gloo")
+        except (AttributeError, ValueError):
+            pass
+        # preflight, to stderr: failures past this point may be C++
+        # LOG(FATAL)s inside the XLA client (no Python traceback), so
+        # put the topology context next to them in the log
+        print(f"[repro.runtime.distributed] process {process_id}/"
+              f"{num_processes} connecting to coordinator "
+              f"{coordinator_address} (timeout {timeout:.0f}s)",
+              file=sys.stderr, flush=True)
+        if process_id != 0:
+            _await_coordinator(coordinator_address, timeout,
+                               num_processes, process_id)
+        try:
+            jax.distributed.initialize(
+                coordinator_address=coordinator_address,
+                num_processes=num_processes, process_id=process_id,
+                initialization_timeout=int(max(1, timeout)))
+        except Exception as e:  # noqa: BLE001 — re-raise actionable
+            role = ("coordinator" if process_id == 0
+                    else f"worker {process_id}")
+            raise RuntimeError(
+                f"jax.distributed.initialize failed for {role} "
+                f"(coordinator_address={coordinator_address!r}, "
+                f"num_processes={num_processes}, process_id="
+                f"{process_id}, timeout={timeout:.0f}s): "
+                f"{type(e).__name__}: {e}. Check that the coordinator "
+                f"host:port is reachable from every process, that "
+                f"exactly {num_processes} processes were launched with "
+                f"distinct {ENV_PROCESS_ID} values 0.."
+                f"{num_processes - 1}, and that all share the same "
+                f"{ENV_NUM_PROCESSES} and {ENV_COORDINATOR}.") from e
+
+    n_local = len(jax.local_devices())
+    n_global = len(jax.devices())
+    if num_processes > 1 and jax.process_count() != num_processes:
+        raise RuntimeError(
+            f"backend reports {jax.process_count()} processes but "
+            f"initialize was called with num_processes={num_processes}")
+    _CONTEXT = DistContext(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes, process_id=process_id,
+        local_device_count=n_local, global_device_count=n_global)
+    return _CONTEXT
+
+
+def is_initialized() -> bool:
+    return _CONTEXT is not None
+
+
+def _require_initialized_under_multihost_env() -> None:
+    """Topology queried before :func:`initialize` in a job whose env
+    contract says this IS a multihost process: raise instead of letting
+    ``jax.process_count()`` create a local-only backend that reports a
+    wrong single-process topology (every rank would then think it is
+    the coordinator — exactly the duplicate-output/write hazard the
+    process-0 gating exists to prevent) and poisons the later
+    ``initialize`` call."""
+    if env_topology().get("num_processes", 1) > 1:
+        raise RuntimeError(
+            f"multihost environment ({ENV_NUM_PROCESSES}/"
+            f"{ENV_COORDINATOR} are set) but "
+            f"runtime.distributed.initialize() has not run in this "
+            f"process — call it before any topology or device query "
+            f"(or unset {ENV_NUM_PROCESSES}/{ENV_COORDINATOR} if this "
+            f"is not a multihost process)")
+
+
+def context() -> DistContext:
+    """The current topology; synthesizes the single-process context when
+    :func:`initialize` was never called (every entry point works
+    unmodified on one process — this may create the JAX backend, which
+    is harmless there).  Raises if the multihost env contract is set
+    but :func:`initialize` has not run."""
+    if _CONTEXT is not None:
+        return _CONTEXT
+    _require_initialized_under_multihost_env()
+    import jax
+
+    return DistContext(coordinator_address=None,
+                       num_processes=jax.process_count(),
+                       process_id=jax.process_index(),
+                       local_device_count=len(jax.local_devices()),
+                       global_device_count=len(jax.devices()))
+
+
+def process_count() -> int:
+    """Processes in the job.  Uninitialized single-process callers may
+    trigger (harmless) backend creation via ``jax.process_count()``;
+    with the multihost env contract set and :func:`initialize` not run,
+    this raises like :func:`context` does."""
+    if _CONTEXT is not None:
+        return _CONTEXT.num_processes
+    _require_initialized_under_multihost_env()
+    try:
+        import jax
+
+        return jax.process_count()
+    except Exception:  # noqa: BLE001 — accounting only
+        return 1
+
+
+def is_coordinator() -> bool:
+    """True on process 0 (and always on a single process) — the gate for
+    anything that must happen once per job: writing ``BENCH_*.json``,
+    printing result rows, raising ledger asserts."""
+    return context().process_id == 0
+
+
+def topology_note() -> str:
+    """Human-readable per-process device accounting, appended to mesh
+    errors under multihost (``resolve_mesh_shape``'s ``note=``) — a
+    global count alone reads like a single-host bug when each process
+    only holds a slice.
+
+    Decorative, so it must never raise or create a backend: before
+    :func:`initialize` has run it is simply empty (the mesh factories
+    call it on their success path too)."""
+    ctx = _CONTEXT
+    if ctx is None or not ctx.is_distributed:
+        return ""
+    return (f" [multihost: {ctx.num_processes} processes × "
+            f"{ctx.local_device_count} local devices each = "
+            f"{ctx.global_device_count} global devices; this process "
+            f"({ctx.process_id}) holds only jax.local_devices()]")
+
+
+# ---------------------------------------------------------------------------
+# Global placement of host data
+# ---------------------------------------------------------------------------
+
+def put_global(x, mesh, spec):
+    """Place host value ``x`` on ``mesh`` with layout ``spec`` as one
+    global array.
+
+    Single-process this is a plain sharded ``device_put``.  Multihost,
+    every process holds the full host-side value (the repo's bundles are
+    built deterministically from a shared seed on every process) and
+    contributes the shards its local devices own — the
+    ``make_array_from_process_local_data`` placement, spelled through
+    ``make_array_from_callback`` so one call handles sharded *and*
+    replicated (``P()``) leaves alike.
+    """
+    import jax
+    from jax.sharding import NamedSharding
+    from .mesh import as_mesh
+
+    sharding = NamedSharding(as_mesh(mesh), spec)
+    if isinstance(x, jax.Array) and getattr(x, "sharding", None) == \
+            sharding:
+        return x                     # already placed: no round trip
+    xnp = np.asarray(x)
+    if process_count() == 1:
+        return jax.device_put(xnp, sharding)
+    return jax.make_array_from_callback(
+        xnp.shape, sharding, lambda idx: xnp[idx])
+
+
+def replicate(tree, mesh):
+    """Every leaf of ``tree`` → a fully-replicated global array on
+    ``mesh`` (params / optimizer state under multihost: each process
+    computes the identical host value, the callback placement commits it
+    to every device)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    return jax.tree.map(lambda x: put_global(x, mesh, P()), tree)

@@ -140,22 +140,28 @@ class TPMesh:
 
 def tp_mesh(n_workers: int | None = None, axis: str = DEFAULT_AXIS,
             devices=None) -> TPMesh:
-    """Build the paper's 1-D model mesh over local devices.
+    """Build the paper's 1-D model mesh over the visible devices.
 
-    ``n_workers`` defaults to every visible device; passing more than exist
-    is an error (forcing host devices is the launcher's job — see
-    ``XLA_FLAGS=--xla_force_host_platform_device_count``).
+    ``n_workers`` defaults to every visible device — under a
+    ``jax.distributed`` job that is the *global* ``jax.devices()`` list
+    (every process builds the same mesh while holding only its
+    ``jax.local_devices()`` slice; see :mod:`repro.runtime.distributed`).
+    Passing more than exist is an error (forcing host devices is the
+    launcher's job — see ``XLA_FLAGS=--xla_force_host_platform_device_count``).
     """
     devices = list(jax.devices()) if devices is None else list(devices)
     n_workers = len(devices) if n_workers is None else int(n_workers)
     if n_workers < 1 or n_workers > len(devices):
+        from . import distributed as dist
         raise ValueError(
-            f"n_workers={n_workers} but only {len(devices)} devices visible")
+            f"n_workers={n_workers} but only {len(devices)} devices "
+            f"visible{dist.topology_note()}")
     return TPMesh(Mesh(np.array(devices[:n_workers]), (axis,)), axis=axis)
 
 
 def resolve_mesh_shape(n_devices: int, model: int | None = None,
-                       data: int = 1, pod: int = 1) -> tuple[int, int, int]:
+                       data: int = 1, pod: int = 1,
+                       note: str = "") -> tuple[int, int, int]:
     """Resolve an (pod, data, model) request against a device count.
 
     The hybrid-mesh contract, as a pure function (property-tested):
@@ -166,9 +172,15 @@ def resolve_mesh_shape(n_devices: int, model: int | None = None,
     * the resolved shape must consume **all** ``n_devices`` — requesting
       fewer is an error, never a silent truncation of the device list
       (pass an explicit ``devices`` slice to use a subset).
+
+    ``note`` is appended verbatim to the device-accounting errors; the
+    mesh factories pass the per-process topology under multihost
+    (:func:`repro.runtime.distributed.topology_note`) so "8 devices are
+    visible" reads as "2 processes × 4 local devices" instead of looking
+    like a single-host miscount.
     """
     if n_devices < 1:
-        raise ValueError(f"need at least one device, got {n_devices}")
+        raise ValueError(f"need at least one device, got {n_devices}{note}")
     for name, deg in (("pod", pod), ("data", data), ("model", model)):
         if deg is not None and (not isinstance(deg, int) or deg < 1):
             raise ValueError(
@@ -179,14 +191,14 @@ def resolve_mesh_shape(n_devices: int, model: int | None = None,
             raise ValueError(
                 f"cannot infer model degree: {n_devices} devices do not "
                 f"divide into pod×data = {pod}×{data} = {groups} replica "
-                f"groups")
+                f"groups{note}")
         model = n_devices // groups
     if groups * model != n_devices:
         raise ValueError(
             f"mesh shape (pod={pod}, data={data}, model={model}) needs "
             f"{groups * model} devices but {n_devices} are visible — "
             f"refusing to silently truncate the device list; pass an "
-            f"explicit devices= slice to use a subset")
+            f"explicit devices= slice to use a subset{note}")
     return pod, data, model
 
 
@@ -207,11 +219,17 @@ def hybrid_mesh(model: int | None = None, data: int = 1, pod: int = 1,
     device-list order, which is deterministic and what the forced-host
     equivalence tests expect.
 
-    Strict device accounting — see :func:`resolve_mesh_shape`.
+    Strict device accounting — see :func:`resolve_mesh_shape`.  Under a
+    ``jax.distributed`` job the default device list is the *global*
+    ``jax.devices()`` (identical on every process), so the same call on
+    every host builds the same global mesh; accounting errors then name
+    the per-process topology (processes × local devices).
     """
+    from . import distributed as dist
     devices = list(jax.devices()) if devices is None else list(devices)
     pod, data, model = resolve_mesh_shape(
-        len(devices), model=model, data=data, pod=pod)
+        len(devices), model=model, data=data, pod=pod,
+        note=dist.topology_note())
     if pod > 1:
         shape, axes = (pod, data, model), ("pod", "data", axis)
         data_axes = ("pod", "data")
@@ -274,6 +292,38 @@ def resolve_replicas(mesh, axis: str = DEFAULT_AXIS,
     for a in data_axes:
         replicas *= m.shape[a]
     return n, replicas
+
+
+def mesh_axes(mesh, axis: str = DEFAULT_AXIS) -> tuple[str, tuple]:
+    """(model axis, data_axes) of a TPMesh or raw mesh — the spec
+    vocabulary of the bundle preparers and placement helpers."""
+    if isinstance(mesh, TPMesh):
+        return mesh.axis, mesh.data_axes
+    return axis, data_axes_for(as_mesh(mesh), axis)
+
+
+def resolve_bundle_degrees(mesh, n_workers: int | None = None,
+                           n_replicas: int | None = None, *,
+                           caller: str = "prepare_bundle",
+                           worker_name: str = "n_workers"
+                           ) -> tuple[int, int]:
+    """Resolve a bundle preparer's (workers, replicas) request against
+    ``mesh``: ``None`` degrees are derived from the mesh, explicit ones
+    must match it exactly — a bundle padded for different degrees than
+    the execution mesh would only fail later and further from the
+    mistake.  The one shared contract behind ``prepare_bundle`` /
+    ``prepare_dp_bundle``'s ``mesh=`` arguments."""
+    axis, data_axes = mesh_axes(mesh)
+    mesh_workers, mesh_replicas = resolve_replicas(mesh, axis, data_axes)
+    n_workers = mesh_workers if n_workers is None else n_workers
+    n_replicas = mesh_replicas if n_replicas is None else n_replicas
+    if (n_workers, n_replicas) != (mesh_workers, mesh_replicas):
+        raise ValueError(
+            f"{caller}({worker_name}={n_workers}, n_replicas="
+            f"{n_replicas}) contradicts mesh degrees (model="
+            f"{mesh_workers}, replicas={mesh_replicas}) — drop the "
+            f"explicit counts or pass the matching mesh")
+    return n_workers, n_replicas
 
 
 def as_mesh(mesh) -> Mesh:

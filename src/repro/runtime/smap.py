@@ -114,7 +114,12 @@ def engine(fn: Callable, in_specs, out_specs, *, mesh=None,
     """The repo-wide sharded-execution entry point.
 
     ``mesh`` may be a TPMesh, a raw jax Mesh, or None (a fresh 1-D "model"
-    mesh over every visible device).  Multi-axis meshes (``hybrid_mesh``'s
+    mesh over every visible device — under a ``jax.distributed`` job that
+    is the *global* ``jax.devices()``, so the default is multihost-correct:
+    every process maps the same program over the same global mesh while
+    holding only its local devices; operands must then be global arrays,
+    see :func:`repro.runtime.distributed.put_global` and the bundle
+    ``mesh=`` placement).  Multi-axis meshes (``hybrid_mesh``'s
     (data, model) / (pod, data, model)) are first-class on both backends:
     a spec dimension may name a tuple of mesh axes — the hybrid vertex
     layout ``P(("model",) + data_axes)`` shards the batch/replica

@@ -202,6 +202,30 @@ class CommLedger:
         return {"|".join(k): dataclasses.asdict(v)
                 for k, v in sorted(self._entries.items())}
 
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Mapping[str, float]]) -> "CommLedger":
+        """Inverse of :func:`as_dict` — how per-process ledgers travel
+        under multihost (each process JSON-serializes its trace-time
+        ledger; the coordinator rebuilds and merges them).  Axis labels
+        may contain ``+`` (joined multi-axis keys) but never ``|``."""
+        ledger = cls()
+        for key, counters in d.items():
+            parts = key.split("|")
+            if len(parts) != 3:
+                raise TelemetryError(
+                    f"malformed ledger key {key!r} (want 'op|axis|dtype')")
+            ledger._entries[tuple(parts)] = CommEntry(**dict(counters))
+        return ledger
+
+    def merge_from(self, other: "CommLedger") -> "CommLedger":
+        """Accumulate ``other``'s counters into this ledger (coordinator-
+        side merge of per-process ledgers: each process traces the same
+        SPMD program, so per-device counters are summed to job totals —
+        or compared for equality first, as test_multihost does)."""
+        for key, entry in other._entries.items():
+            self._entries.setdefault(key, CommEntry()).merge(entry)
+        return self
+
     def __len__(self) -> int:
         return len(self._entries)
 

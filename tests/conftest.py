@@ -1,23 +1,28 @@
 import os
-import subprocess
 import sys
 
 # src/ layout import path (tests also work without `pip install -e .`)
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, SRC)
+# tests/ itself, so the dist_progs harness is importable as a module
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from dist_progs import harness  # noqa: E402
 
 # NOTE: no XLA_FLAGS device-count forcing here — unit tests and benches run
 # on the single real CPU device.  Multi-device behaviour is covered by the
-# subprocess checks under tests/dist_progs/, launched via ``run_dist_prog``
-# below, whose children pin DIST_XLA_FLAGS so the runtime-engine
-# collectives (all_to_all gather/split, halo exchange, psum) execute
-# across 8 real device buffers.
+# subprocess checks under tests/dist_progs/, launched via the harness
+# (tests/dist_progs/harness.py): ``run_dist_prog`` below is its N=1
+# (single-process) case, and ``harness.run_multiproc`` spawns the real
+# N-process ``jax.distributed`` topology with a localhost coordinator
+# (tests/test_multihost.py).  Children pin XLA_FLAGS so the
+# runtime-engine collectives execute across real device buffers.
 
 #: The one place the forced device count is spelled; the dist_progs assert
 #: they were launched with exactly this value.
-DIST_XLA_FLAGS = "--xla_force_host_platform_device_count=8"
+DIST_XLA_FLAGS = harness.xla_flags(harness.DEFAULT_DEVICES)
 
-PROGS = os.path.join(os.path.dirname(__file__), "dist_progs")
+PROGS = harness.PROGS
 
 
 def max_tree_diff(a, b) -> float:
@@ -36,13 +41,8 @@ def max_tree_diff(a, b) -> float:
 
 
 def run_dist_prog(name: str, timeout: int = 600) -> None:
-    """Run tests/dist_progs/<name> as a child with pinned XLA_FLAGS."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = DIST_XLA_FLAGS
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    proc = subprocess.run(
-        [sys.executable, os.path.join(PROGS, name)],
-        capture_output=True, text=True, timeout=timeout, env=env)
-    assert proc.returncode == 0, \
-        f"{name} failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
-    assert proc.stdout.strip().endswith(f"OK {name[:-3]}")
+    """Run tests/dist_progs/<name> as a child with pinned XLA_FLAGS —
+    the N=1 case of :func:`dist_progs.harness.run_multiproc`."""
+    harness.run_multiproc(name, n_processes=1,
+                          devices_per_process=harness.DEFAULT_DEVICES,
+                          timeout=timeout, check=True)

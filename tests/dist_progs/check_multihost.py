@@ -1,0 +1,223 @@
+"""Multi-host equivalence: 2 processes × 4 fake devices == 1 process × 8.
+
+The same global programs (all four execution modes × both engine
+backends, pure TP model=8 and hybrid (data=2, model=4)) must produce
+the same losses AND grads whether one process owns all 8 devices or two
+``jax.distributed`` processes own 4 each — the launcher converts the
+process topology, never the math.
+
+Dual-role program, driven by the harness (tests/dist_progs/harness.py):
+
+* **reference mode** (no ``NUM_PROCESSES`` env; 8 forced devices): the
+  PR 3 single-process suite's configurations are evaluated and their
+  losses/grads written as JSON to ``$CHECK_MULTIHOST_REF``.
+* **distributed mode** (harness env contract set; N×M forced devices):
+  ``repro.runtime.distributed.initialize()`` joins the job from the env
+  alone, every bundle is committed per-host (``prepare_bundle(...,
+  mesh=)``), and every configuration must match the reference file to
+  atol 1e-5.  Also exercises the multihost device-accounting error text
+  and emits this process's telemetry ledger as a harness JSON verdict
+  (merged at the coordinator by tests/test_multihost.py).
+* **failure modes** (``$CHECK_MULTIHOST_MODE``): ``unreachable`` and
+  ``mismatch`` assert that a bad coordinator address / process id fails
+  fast with an actionable error instead of hanging.
+"""
+import json
+import os
+
+MODE = os.environ.get("CHECK_MULTIHOST_MODE", "")
+
+if MODE == "mismatch":
+    # topology validation is eager — no sockets, no backend
+    from repro.runtime import distributed as dist
+
+    for kwargs, needle in (
+            (dict(coordinator_address="127.0.0.1:9", num_processes=2,
+                  process_id=7), "process_id=7 out of range"),
+            (dict(coordinator_address=None, num_processes=2,
+                  process_id=1), "coordinator address"),
+            (dict(coordinator_address="nocolon", num_processes=2,
+                  process_id=1), "host:port"),
+    ):
+        try:
+            dist.initialize(**kwargs)
+        except ValueError as e:
+            assert needle in str(e), (needle, str(e))
+        else:
+            raise AssertionError(f"no error for {kwargs}")
+    print("OK check_multihost")
+    raise SystemExit(0)
+
+if MODE == "unreachable":
+    # a worker pointed at a dead coordinator must fail within the
+    # timeout, naming the address and the env contract — never hang
+    import time
+
+    from repro.runtime import distributed as dist
+
+    t0 = time.monotonic()
+    try:
+        dist.initialize(coordinator_address="127.0.0.1:9",
+                        num_processes=2, process_id=1, timeout=3)
+    except RuntimeError as e:
+        msg = str(e)
+        assert "127.0.0.1:9" in msg and "NUM_PROCESSES" in msg, msg
+        assert time.monotonic() - t0 < 60, "error not within timeout"
+    else:
+        raise AssertionError("unreachable coordinator did not raise")
+    print("OK check_multihost")
+    raise SystemExit(0)
+
+REF_PATH = os.environ["CHECK_MULTIHOST_REF"]
+DISTRIBUTED = bool(os.environ.get("NUM_PROCESSES"))
+
+from repro.runtime import distributed as dist  # noqa: E402
+
+if DISTRIBUTED:
+    ctx = dist.initialize()          # env contract: COORDINATOR_ADDRESS...
+else:
+    assert "--xla_force_host_platform_device_count=8" in \
+        os.environ.get("XLA_FLAGS", "")
+    ctx = None
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import optim  # noqa: E402
+from repro.core import decouple as D  # noqa: E402
+from repro.gnn import dp_baseline as DP  # noqa: E402
+from repro.gnn import models as M  # noqa: E402
+from repro.graph import sbm_power_law  # noqa: E402
+from repro.runtime import collect_comm, hybrid_mesh, tp_mesh  # noqa: E402
+
+assert len(jax.devices()) == 8, jax.devices()
+if DISTRIBUTED:
+    assert ctx.num_processes == 2 and ctx.local_device_count == 4, ctx
+    assert len(jax.local_devices()) == 4
+
+ATOL = 1e-5
+TP_MODES = ("decoupled", "decoupled_pipelined", "naive")
+BACKENDS = ("explicit", "constraint")
+
+data = sbm_power_law(n=240, num_classes=8, feat_dim=16, avg_degree=8, seed=0)
+opt_mesh = (lambda m: m if DISTRIBUTED else None)   # place only multihost
+
+
+def tp_cases():
+    for tag, mesh, mm, dd in (("tp8", tp_mesh(8), 8, 1),
+                              ("d2xm4", hybrid_mesh(model=4, data=2), 4, 2)):
+        bundle = D.prepare_bundle(data, n_workers=mm, n_chunks=2,
+                                  n_replicas=dd, mesh=opt_mesh(mesh))
+        cfg = D.padded_gnn_config(data, bundle, model="gcn", hidden_dim=16,
+                                  num_layers=2)
+        params = M.init_params(jax.random.PRNGKey(1), cfg)
+        if DISTRIBUTED:
+            params = dist.replicate(params, mesh)
+        for mode in TP_MODES:
+            for backend in BACKENDS:
+                # the jitted value-and-grad handle: on a multi-process
+                # mesh every collective must live in ONE in-flight
+                # executable (eager autodiff's separate fwd/bwd
+                # executables race their collectives on the shared
+                # gloo transport — see make_tp_value_and_grad)
+                fn = D.make_tp_value_and_grad(cfg, bundle, mesh,
+                                              mode=mode, backend=backend)
+                yield (f"{tag}:{mode}:{backend}", fn, params,
+                       bundle.train_mask)
+
+
+def dp_cases():
+    cfg = M.GNNConfig(model="gcn", in_dim=16, hidden_dim=16, num_classes=8,
+                      num_layers=2, decoupled=False)
+    params0 = M.init_params(jax.random.PRNGKey(0), cfg)
+    for tag, mesh, kk, dd in (("tp8", tp_mesh(8), 8, 1),
+                              ("d2xm4", hybrid_mesh(model=4, data=2), 4, 2)):
+        bundle = DP.prepare_dp_bundle(data, k=kk, n_replicas=dd,
+                                      mesh=opt_mesh(mesh))
+        params = dist.replicate(params0, mesh) if DISTRIBUTED else params0
+        for backend in BACKENDS:
+            fn = DP.make_dp_value_and_grad(cfg, bundle, mesh,
+                                           backend=backend)
+            yield f"{tag}:dp:{backend}", fn, params, bundle.train_mask
+
+
+def evaluate(fn, params, mask):
+    loss, grads = fn(params, mask)
+    leaves = [np.asarray(g) for g in jax.tree.leaves(grads)]
+    return float(loss), leaves
+
+
+if not DISTRIBUTED:
+    # ---- reference: the PR 3 single-process suite's values ----
+    ref = {}
+    for key, fn, params, mask in list(tp_cases()) + list(dp_cases()):
+        loss, leaves = evaluate(fn, params, mask)
+        ref[key] = {"loss": loss, "grads": [g.tolist() for g in leaves]}
+        print(f"ref {key} loss={loss:.6f}", flush=True)
+    with open(REF_PATH, "w") as f:
+        json.dump(ref, f)
+    print("OK check_multihost")
+    raise SystemExit(0)
+
+# ---- distributed mode: 2 × 4 must reproduce the reference ----
+with open(REF_PATH) as f:
+    ref = json.load(f)
+
+for key, fn, params, mask in list(tp_cases()) + list(dp_cases()):
+    loss, leaves = evaluate(fn, params, mask)
+    want = ref[key]
+    dl = abs(loss - want["loss"])
+    dg = max(float(np.abs(g - np.asarray(w)).max())
+             for g, w in zip(leaves, want["grads"]))
+    assert len(leaves) == len(want["grads"])
+    assert dl < ATOL and dg < ATOL, (key, dl, dg)
+    if ctx.is_coordinator:
+        print(f"match {key} dloss={dl:.2e} dgrad={dg:.2e}", flush=True)
+
+# ---- device-accounting errors name the per-process topology ----
+try:
+    hybrid_mesh(model=16)
+except ValueError as e:
+    msg = str(e)
+    assert "2 processes" in msg and "4 local devices" in msg, msg
+else:
+    raise AssertionError("over-subscribed mesh did not raise")
+try:
+    tp_mesh(16)
+except ValueError as e:
+    assert "2 processes" in str(e) and "4 local devices" in str(e), str(e)
+else:
+    raise AssertionError("tp_mesh(16) did not raise")
+
+# ---- a few real train steps make progress through the full stack ----
+mesh = tp_mesh(8)
+bundle = D.prepare_bundle(data, n_chunks=2, mesh=mesh)
+cfg = D.padded_gnn_config(data, bundle, model="gcn", hidden_dim=16,
+                          num_layers=2)
+opt = optim.adamw(1e-2)
+params = dist.replicate(M.init_params(jax.random.PRNGKey(0), cfg), mesh)
+step, ev = D.make_tp_train_fns(cfg, bundle, mesh, opt, mode="decoupled",
+                               backend="explicit")
+p, o = params, dist.replicate(opt.init(params), mesh)
+# per-process trace-time ledger, merged at the coordinator by the test
+with collect_comm() as ledger:
+    lowered = step.lower(p, o)
+losses = []
+for _ in range(5):
+    p, o, loss = step(p, o)
+    losses.append(float(loss))
+assert losses[-1] < losses[0], losses
+_, acc = ev(p, "train")
+assert 0.0 <= float(acc) <= 1.0
+
+print("VERDICT " + json.dumps({
+    "process_id": ctx.process_id,
+    "ledger": ledger.as_dict(),
+    "losses": losses,
+}), flush=True)
+# synchronize exits: a process tearing down the coordination service
+# while a peer still talks to it turns a clean pass into an abort
+from jax.experimental import multihost_utils  # noqa: E402
+
+multihost_utils.sync_global_devices("check_multihost done")
+print("OK check_multihost")

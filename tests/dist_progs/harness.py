@@ -1,0 +1,189 @@
+"""Reusable multi-process launcher for the dist_prog checks.
+
+One function, :func:`run_multiproc`, launches a ``tests/dist_progs``
+program as **N coordinator+worker subprocesses** with pinned
+``XLA_FLAGS`` (M forced host devices each) and the
+``runtime.distributed`` env contract (``COORDINATOR_ADDRESS`` on a
+fresh localhost port, ``NUM_PROCESSES``, per-child ``PROCESS_ID``) —
+the supported no-cluster CI topology of
+:mod:`repro.runtime.distributed`.  It
+
+* collects each process's stdout/stderr and any **JSON verdicts** the
+  program emitted (lines of the form ``VERDICT {...}`` — e.g. the
+  per-process telemetry ledgers that test_multihost merges at the
+  coordinator);
+* kills stragglers as soon as any process fails (a dead peer leaves
+  the others blocked in a gloo collective forever — first failure wins,
+  the rest get SIGTERM then SIGKILL);
+* enforces a **hard wall-clock timeout** on the whole group, so a hung
+  barrier (unreachable coordinator, mismatched ``NUM_PROCESSES``) can
+  never hang the test suite past it.
+
+``conftest.run_dist_prog`` is the N=1 case of this launcher (no
+distributed env, 8 forced devices): the pre-existing single-process
+checks (check_hybrid_mesh, check_telemetry, ...) run under it
+unmodified.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+PROGS = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.abspath(os.path.join(PROGS, "..", "..", "src"))
+
+#: Prefix a dist prog uses to hand a JSON verdict back to the harness.
+VERDICT_PREFIX = "VERDICT "
+
+#: The default forced device count of the single-process checks (the one
+#: place the number 8 is spelled — conftest re-exports it).
+DEFAULT_DEVICES = 8
+
+
+def xla_flags(devices: int) -> str:
+    return f"--xla_force_host_platform_device_count={devices}"
+
+
+def free_port() -> int:
+    """A currently-free localhost TCP port for the coordinator."""
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@dataclasses.dataclass
+class ProcResult:
+    """Outcome of one process of a :func:`run_multiproc` group."""
+
+    process_id: int
+    #: Exit status; killed stragglers record the signal (-15/-9), so
+    #: after run_multiproc's final kill this is never None.
+    returncode: int | None
+    stdout: str
+    stderr: str
+
+    @property
+    def verdicts(self) -> list[dict]:
+        """JSON verdicts the program emitted (``VERDICT {...}`` lines)."""
+        out = []
+        for line in self.stdout.splitlines():
+            if line.startswith(VERDICT_PREFIX):
+                out.append(json.loads(line[len(VERDICT_PREFIX):]))
+        return out
+
+    def summary(self, tail: int = 4000) -> str:
+        return (f"--- process {self.process_id} "
+                f"(rc={self.returncode}) ---\n"
+                f"STDOUT:\n{self.stdout[-tail:]}\n"
+                f"STDERR:\n{self.stderr[-tail:]}")
+
+
+def _kill(procs) -> None:
+    for p in procs:
+        if p.poll() is None:
+            try:
+                p.terminate()
+            except OSError:
+                pass
+    deadline = time.monotonic() + 5.0
+    for p in procs:
+        while p.poll() is None and time.monotonic() < deadline:
+            time.sleep(0.05)
+        if p.poll() is None:
+            try:
+                p.send_signal(signal.SIGKILL)
+            except OSError:
+                pass
+            p.wait()
+
+
+def run_multiproc(name: str, n_processes: int = 1,
+                  devices_per_process: int = DEFAULT_DEVICES,
+                  timeout: int = 600, env: dict | None = None,
+                  check: bool = True) -> list[ProcResult]:
+    """Run ``tests/dist_progs/<name>`` as ``n_processes`` subprocesses.
+
+    ``n_processes == 1`` launches the classic single-process check: no
+    distributed env at all (any inherited ``NUM_PROCESSES``/... is
+    scrubbed), just pinned XLA_FLAGS.  ``n_processes > 1`` additionally
+    exports the ``runtime.distributed`` env contract with a fresh
+    localhost coordinator port.
+
+    ``check=True`` (default) asserts every process exited 0 with stdout
+    ending in the conventional ``OK <progname>`` line, raising with all
+    logs otherwise; ``check=False`` returns the results for the caller
+    to inspect (failure-mode tests).  Either way, the first failing
+    process gets the rest killed, and ``timeout`` seconds is a hard cap
+    on the whole group (stragglers are killed, TimeoutError raised).
+    """
+    base = dict(os.environ)
+    base["XLA_FLAGS"] = xla_flags(devices_per_process)
+    base["PYTHONPATH"] = SRC + os.pathsep + base.get("PYTHONPATH", "")
+    for key in ("COORDINATOR_ADDRESS", "NUM_PROCESSES", "PROCESS_ID",
+                "DIST_INIT_TIMEOUT"):
+        base.pop(key, None)
+    if env:
+        base.update(env)
+    if n_processes > 1:
+        base.setdefault("COORDINATOR_ADDRESS", f"127.0.0.1:{free_port()}")
+        base.setdefault("NUM_PROCESSES", str(n_processes))
+
+    prog = os.path.join(PROGS, name)
+    procs, files = [], []
+    try:
+        for i in range(n_processes):
+            child_env = dict(base)
+            if n_processes > 1:
+                child_env["PROCESS_ID"] = str(i)
+            out = tempfile.TemporaryFile(mode="w+")
+            err = tempfile.TemporaryFile(mode="w+")
+            files.append((out, err))
+            procs.append(subprocess.Popen(
+                [sys.executable, prog], stdout=out, stderr=err,
+                env=child_env, text=True))
+
+        deadline = time.monotonic() + timeout
+        timed_out = False
+        while any(p.poll() is None for p in procs):
+            if any(p.poll() not in (None, 0) for p in procs):
+                _kill(procs)             # first failure kills stragglers
+                break
+            if time.monotonic() > deadline:
+                timed_out = True
+                _kill(procs)             # hard cap: no silent hang past it
+                break
+            time.sleep(0.1)
+
+        results = []
+        for i, (p, (out, err)) in enumerate(zip(procs, files)):
+            out.seek(0)
+            err.seek(0)
+            results.append(ProcResult(
+                process_id=i, returncode=p.poll(),
+                stdout=out.read(), stderr=err.read()))
+    finally:
+        _kill(procs)
+        for out, err in files:
+            out.close()
+            err.close()
+
+    if timed_out:
+        raise TimeoutError(
+            f"{name} (x{n_processes}) exceeded the {timeout}s hard "
+            f"timeout; stragglers killed.\n"
+            + "\n".join(r.summary() for r in results))
+    if check:
+        logs = "\n".join(r.summary() for r in results)
+        assert all(r.returncode == 0 for r in results), \
+            f"{name} (x{n_processes}) failed:\n{logs}"
+        for r in results:
+            assert r.stdout.strip().endswith(f"OK {name[:-3]}"), \
+                f"{name} process {r.process_id} missing OK line:\n{logs}"
+    return results
