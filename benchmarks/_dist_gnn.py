@@ -35,11 +35,17 @@ corrupt the parent's CSV parse).
 ``--assert-ledger`` additionally asserts, in-process at full precision,
 that the ledger matches the analytic §3.2 formulas
 (:func:`benchmarks.bench_comm_volume.expected_ledger`) — and the HLO
-census when enabled.  ``--hlo-census`` appends the demoted HLO-regex
-census columns (a2a/ag/ar/rs = per-device wire bytes split by HLO kind)
-as an independent cross-check of the ledger.  ``--trace-only`` skips
-execution and timing entirely (rows carry 0.0 μs and loss=nan): tracing
-alone fills the ledger, which is what ci.sh's telemetry smoke uses.
+census when enabled.  ``--audit`` runs the tier-2 structural audit
+(:mod:`repro.analysis.jaxpr_audit`): collective primitives counted in
+the step's closed jaxpr must equal what the ledger implies, plus a
+phantom-entry self-check proving the audit would catch a forged
+counter.  ``--hlo-census`` appends the **deprecated** HLO-regex census
+columns (a2a/ag/ar/rs = per-device wire bytes split by HLO kind) as an
+independent cross-check of the ledger — the jaxpr audit is its
+structural replacement, so the flag emits a DeprecationWarning.
+``--trace-only`` skips execution and timing entirely (rows carry 0.0 μs
+and loss=nan): tracing alone fills the ledger, which is what ci.sh's
+telemetry smoke uses.
 """
 from __future__ import annotations
 
@@ -117,7 +123,14 @@ def main():
     ap.add_argument("--tag-prefix", default="")
     ap.add_argument("--hlo-census", action="store_true",
                     help="also report the HLO-regex census columns "
-                         "(demoted cross-check of the telemetry ledger)")
+                         "(DEPRECATED cross-check of the telemetry "
+                         "ledger — superseded by the structural jaxpr "
+                         "audit, --audit)")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the tier-2 jaxpr audit on every step: "
+                         "jaxpr collective counts == ledger counts "
+                         "(repro.analysis.jaxpr_audit), plus a phantom-"
+                         "entry self-check")
     ap.add_argument("--assert-ledger", action="store_true",
                     help="assert ledger == analytic formulas (and == "
                          "census when --hlo-census) in-process")
@@ -135,6 +148,15 @@ def main():
                          "committed per-host, and rows/asserts are "
                          "process-0-only")
     args = ap.parse_args()
+
+    if args.hlo_census:
+        import warnings
+        warnings.warn(
+            "--hlo-census (the HLO-regex census) is deprecated: the "
+            "structural cross-check of the telemetry ledger is the jaxpr "
+            "audit (--audit, repro.analysis.jaxpr_audit); the census "
+            "remains only as an independent bytes-level parse",
+            DeprecationWarning, stacklevel=2)
 
     from repro.runtime import distributed as dist
 
@@ -215,6 +237,28 @@ def main():
             with collect_comm() as ledger:
                 lowered = step.lower(p, o)
             led = _ledger_columns(ledger, mesh.axis, mesh.data_axes)
+            if args.audit and is_c:
+                from repro.analysis import jaxpr_audit as audit_mod
+                from repro.runtime.telemetry import CommLedger
+
+                # re-tracing outside collect_comm records nothing — the
+                # wrappers no-op without an active ledger
+                jxp = jax.make_jaxpr(step)(p, o)
+                audit_mod.assert_clean(
+                    jxp, ledger, backend=backend,
+                    tag=f"{args.tag_prefix}{mode}/{backend}")
+                if backend == "explicit":
+                    # self-check: a forged counter must be caught, so a
+                    # passing audit means "verified", not "vacuous"
+                    forged = CommLedger.from_dict(ledger.as_dict())
+                    forged.add("ppermute", mesh.axis, "float32",
+                               payload=1.0, wire=1.0)
+                    kinds = [f.kind
+                             for f in audit_mod.audit(jxp, forged)]
+                    if kinds != ["phantom_ledger_entry"]:
+                        raise AssertionError(
+                            f"{mode}/{backend}: audit failed to flag a "
+                            f"forged ledger entry (got {kinds})")
             if args.trace_only:
                 dt, loss = 0.0, float("nan")
             else:
@@ -254,6 +298,8 @@ def main():
                 _assert_ledger(args.tag_prefix + mode, mode, args.model,
                                led, cb, expected)
                 derived += ";led_ok=1"
+            if args.audit and is_c:
+                derived += ";audit_ok=1"
             tag = mode if backend == "explicit" else f"{mode}_{backend}"
             if replicas > 1:
                 tag += f"_d{replicas}x{k}"

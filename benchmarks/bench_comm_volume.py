@@ -245,17 +245,19 @@ def main(argv=()):
         smoke = run_subprocess_bench(
             "benchmarks._dist_gnn", devices=8,
             args=["--modes", "dp,naive,decoupled", "--trace-only",
-                  "--assert-ledger", "--n", "512", "--feat-dim", "32",
-                  "--hidden", "32", "--tag-prefix", "telemetry_smoke_"])
+                  "--assert-ledger", "--audit", "--n", "512",
+                  "--feat-dim", "32", "--hidden", "32",
+                  "--tag-prefix", "telemetry_smoke_"])
         print(record_output(smoke), end="")
         smoke_h = run_subprocess_bench(
             "benchmarks._dist_gnn", devices=8,
             args=["--modes", "decoupled,naive", "--trace-only",
-                  "--assert-ledger", "--data", "2", "--n", "512",
-                  "--feat-dim", "32", "--hidden", "32",
+                  "--assert-ledger", "--audit", "--data", "2",
+                  "--n", "512", "--feat-dim", "32", "--hidden", "32",
                   "--tag-prefix", "telemetry_smoke_"])
         print(record_output(smoke_h), end="")
-        _require_ledger_rows(smoke + smoke_h, "telemetry_smoke_")
+        _require_ledger_rows(smoke + smoke_h, "telemetry_smoke_",
+                             audited=True)
 
     # --- measured, both engine backends: the telemetry ledger is the
     # primary column (asserted against the analytic formulas in-process
@@ -294,17 +296,22 @@ def _census_field(derived: str, key: str) -> float | None:
     return None
 
 
-def _require_ledger_rows(out: str, prefix: str) -> None:
+def _require_ledger_rows(out: str, prefix: str, *,
+                         audited: bool = False) -> None:
     """Every row of a --assert-ledger run must carry nonzero led_a2a and
     the in-process assertion marker — an empty ledger that still printed
-    rows would be the silent-zero failure mode."""
+    rows would be the silent-zero failure mode.  ``audited=True`` also
+    requires the tier-2 structural marker (``--audit``: jaxpr collective
+    counts == ledger counts, repro.analysis.jaxpr_audit)."""
     from .common import parse_rows
 
     rows = [r for r in parse_rows(out) if r["name"].startswith(prefix)]
     assert rows, f"no {prefix}* rows in child output"
     bad = [r["name"] for r in rows
            if not (_census_field(r["derived"], "led_a2a") or 0) > 0
-           or _census_field(r["derived"], "led_ok") != 1.0]
+           or _census_field(r["derived"], "led_ok") != 1.0
+           or (audited and
+               _census_field(r["derived"], "audit_ok") != 1.0)]
     assert not bad, f"rows without asserted ledger bytes: {bad}"
 
 

@@ -7,6 +7,10 @@
 #   scripts/ci.sh --fast     # fast lane + bench smokes only (-m "not slow")
 #   scripts/ci.sh --multihost-smoke   # just the multihost smoke stage
 #
+# Every lane (default and --fast) starts with the distributed-discipline
+# lint stage (scripts/lint_dist.py): AST rules RT001-RT005 over src/repro
+# and tests/dist_progs, nonzero exit on any error finding.
+#
 # The main pytest process stays on the single real device.  The "slow"
 # tests launch child processes via tests/conftest.py::run_dist_prog, which
 # pins XLA_FLAGS=--xla_force_host_platform_device_count=8 (the single
@@ -66,6 +70,12 @@ if [[ "${1:-}" == "--multihost-smoke" ]]; then
     multihost_smoke
     exit 0
 fi
+
+# Tier-1 static analysis: the AST linter over the real tree (RT001–RT005
+# distributed-discipline rules, see repro.analysis.lint).  Error findings
+# fail CI; the JSON artifact lands next to the BENCH files in results/.
+mkdir -p results
+python scripts/lint_dist.py --json results/lint_dist.json
 
 python -m pytest -q -m "not slow"
 

@@ -1,0 +1,30 @@
+"""Static analysis of the repo's distributed disciplines.
+
+The PR 1-5 arc made correctness depend on *disciplines* rather than
+locality: every collective routes through ``runtime/collectives.py``,
+every data-moving call site declares its autodiff ``mirror=``, scans
+whose bodies communicate carry ``telemetry.loop_scope`` trip
+multipliers, and ``jax.distributed`` is entered only via
+``runtime/distributed.py``.  This package is the layer that turns a
+violation of any of them into a fast structural error instead of a slow
+byte-equality failure (or a silently skewed Fig. 8 row):
+
+* :mod:`repro.analysis.lint` — tier 1, an AST linter over the source
+  tree (rule registry RT001..RT005 + report-only W-rules; CLI:
+  ``scripts/lint_dist.py``).  Catches every *spelling* of a violation
+  (``from jax.lax import all_to_all``, ``import jax.lax as _l``) that
+  the retired line-regex check in tests/test_collectives_chokepoint.py
+  was blind to.
+* :mod:`repro.analysis.jaxpr_audit` — tier 2, a trace-time sanitizer
+  that recursively counts collective primitives in the closed jaxpr of
+  an engine program (scan trip multipliers included) and cross-checks
+  them against the trace-time :class:`repro.runtime.telemetry.CommLedger`
+  — ledger == analytic == *structure*, without regex-parsing HLO text
+  (the :func:`repro.launch.roofline.hlo_census` path this supersedes).
+
+See ROADMAP.md "Distributed discipline" for the rule-by-rule invariant
+table and the PRs that motivated each rule.
+"""
+from . import jaxpr_audit, lint  # noqa: F401
+
+__all__ = ["lint", "jaxpr_audit"]

@@ -1,0 +1,285 @@
+"""Trace-time jaxpr collective audit (tier 2).
+
+The telemetry :class:`~repro.runtime.telemetry.CommLedger` is filled by
+Python-side wrappers while a program traces; nothing forces it to agree
+with the program JAX actually built.  The PR 2-4 arc cross-checked it
+against a *regex parse of compiled HLO text* (``launch.roofline.
+hlo_census``), which shipped two silent-zero parser bugs and reads
+whatever XLA emitted, not what the program *is*.  This module replaces
+that structural leg: it recursively walks the **closed jaxpr** of an
+engine program — through ``scan``/``while``/``pjit``/``custom_vjp``
+sub-jaxprs, multiplying scan bodies by their static trip count — counts
+collective primitives per (op, axis label, dtype), and diffs the counts
+against what the ledger implies:
+
+* a jaxpr collective the ledger did not record → ``unledgered_collective``
+  (someone bypassed the runtime choke point, or forgot ``loop_scope``);
+* a ledger entry with no jaxpr counterpart → ``phantom_ledger_entry``
+  (a wrapper recorded bytes autodiff never emits, e.g. a wrong
+  ``mirror=`` declaration);
+* collectives inside a ``while`` body (unknown trip count) →
+  ``unbounded_loop`` — the repo's loops are scans with static lengths.
+
+Exactness contract: the diff is exact over the data-moving ops
+(``all_to_all``, ``all_gather``, ``psum_scatter``, ``ppermute``) —
+including autodiff mirrors, which appear in the jaxpr as the transposed
+primitive (``all_gather`` ↔ ``reduce_scatter``, ``a2a`` ↔ ``a2a``,
+``ppermute`` ↔ reversed ``ppermute``) and in the ledger as
+``mirrored_calls`` under the forward op.  ``psum`` is checked
+one-directionally (phantom entries only): shard_map's transpose emits
+parameter-gradient all-reduces with no forward counterpart, which the
+ledger documents as out of scope (runtime/telemetry.py).
+
+The constraint backend builds programs with **zero** collective
+primitives — the SPMD partitioner materializes them after lowering — so
+``backend="constraint"`` instead asserts that, and checks each
+*anchored* layout transition the ledger recorded
+(:class:`~repro.runtime.telemetry.TransitionRecord`, from
+``layout_cast``) against the program's ``sharding_constraint``
+equations by (global shape, dtype, normalized PartitionSpec).
+
+Obtain the jaxpr with ``jax.make_jaxpr`` *outside* ``collect_comm`` —
+the telemetry wrappers no-op without an active ledger, so re-tracing for
+the audit records nothing.  8-device coverage of all four GNN modes ×
+both backends lives in tests/dist_progs/check_telemetry.py; the bench
+smoke (``benchmarks/_dist_gnn.py --audit``) runs it in tier-1 CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..runtime import telemetry as T
+
+__all__ = [
+    "AuditFinding", "audit", "assert_clean", "collective_counts",
+    "sharding_constraint_counts", "expected_from_ledger",
+    "DATA_OPS", "PRIM_TO_OP", "MIRROR_OP",
+]
+
+#: jaxpr primitive name → ledger op kind.
+PRIM_TO_OP = {
+    "psum": "psum",
+    "all_gather": "all_gather",
+    "all_to_all": "all_to_all",
+    "ppermute": "ppermute",
+    "reduce_scatter": "psum_scatter",
+    "psum_scatter": "psum_scatter",
+}
+
+#: Ops audited exactly (count equality both directions).  psum is
+#: excluded — see module docstring.
+DATA_OPS = ("all_to_all", "all_gather", "ppermute", "psum_scatter")
+
+#: Forward ledger op → primitive its autodiff transpose emits.
+MIRROR_OP = {
+    "all_to_all": "all_to_all",
+    "all_gather": "psum_scatter",
+    "psum_scatter": "all_gather",
+    "ppermute": "ppermute",
+    "psum": "psum",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditFinding:
+    """One structural disagreement between jaxpr and ledger."""
+
+    kind: str        # unledgered_collective | phantom_ledger_entry |
+    #                  unbounded_loop | collective_in_constraint_program |
+    #                  missing_constraint
+    op: str
+    axis: str
+    expected: float  # what the ledger implies
+    actual: float    # what the jaxpr contains
+    detail: str = ""
+
+    def format(self) -> str:
+        return (f"{self.kind}: op={self.op} axis={self.axis} "
+                f"ledger={self.expected:g} jaxpr={self.actual:g}"
+                + (f" — {self.detail}" if self.detail else ""))
+
+
+def _axis_label(axes) -> str:
+    if axes is None:
+        return ""
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    return "+".join(str(a) for a in axes)
+
+
+def _as_jaxpr(jaxpr):
+    return getattr(jaxpr, "jaxpr", jaxpr)
+
+
+def _sub_jaxprs(eqn):
+    """Every Jaxpr/ClosedJaxpr hanging off an equation's params —
+    generic, so scan/while/pjit/cond/custom_vjp/shard_map (and whatever
+    a future JAX adds) are all walked without a primitive whitelist."""
+    for v in eqn.params.values():
+        for sub in (v if isinstance(v, (tuple, list)) else (v,)):
+            if hasattr(sub, "eqns"):
+                yield sub
+            else:
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    yield inner
+
+
+def _eqn_dtype(eqn) -> str:
+    for v in eqn.invars:
+        aval = getattr(v, "aval", None)
+        if aval is not None and hasattr(aval, "dtype"):
+            return str(aval.dtype)
+    return "?"
+
+
+def _walk(jaxpr, mult, in_while, counts, constraints, unbounded):
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        op = PRIM_TO_OP.get(name)
+        if op is not None:
+            axes = eqn.params.get("axes", eqn.params.get("axis_name"))
+            label = _axis_label(axes)
+            if label:               # axes=() psums move nothing — skip
+                key = (op, label, _eqn_dtype(eqn))
+                if in_while:
+                    unbounded.add(key)
+                else:
+                    counts[key] = counts.get(key, 0.0) + mult
+            continue
+        if name == "sharding_constraint":
+            sharding = eqn.params.get("sharding")
+            spec = getattr(sharding, "spec", None)
+            aval = eqn.outvars[0].aval
+            key = (tuple(aval.shape), str(aval.dtype),
+                   T.normalize_spec(spec) if spec is not None else ())
+            constraints[key] = constraints.get(key, 0.0) + mult
+            continue
+        sub_mult = mult
+        if name == "scan":
+            sub_mult = mult * float(eqn.params.get("length", 1))
+        for sub in _sub_jaxprs(eqn):
+            _walk(sub, sub_mult, in_while or name == "while",
+                  counts, constraints, unbounded)
+
+
+def _walk_all(jaxpr):
+    counts: dict[tuple, float] = {}
+    constraints: dict[tuple, float] = {}
+    unbounded: set[tuple] = set()
+    _walk(_as_jaxpr(jaxpr), 1.0, False, counts, constraints, unbounded)
+    return counts, constraints, unbounded
+
+
+def collective_counts(jaxpr) -> dict[tuple, float]:
+    """(op, axis label, dtype) → execution count of every collective
+    primitive reachable from ``jaxpr``, scan bodies multiplied by their
+    static trip counts.  While-body collectives are excluded (see
+    :func:`audit`, which reports them as ``unbounded_loop``)."""
+    return _walk_all(jaxpr)[0]
+
+
+def sharding_constraint_counts(jaxpr) -> dict[tuple, float]:
+    """(global shape, dtype, normalized spec) → count of
+    ``sharding_constraint`` equations, scan-trip multiplied."""
+    return _walk_all(jaxpr)[1]
+
+
+def expected_from_ledger(ledger: T.CommLedger) -> dict[tuple, float]:
+    """Jaxpr-side collective counts the ledger implies: forward ``calls``
+    under the op itself, ``mirrored_calls`` under the primitive its
+    transpose emits (:data:`MIRROR_OP`)."""
+    exp: dict[tuple, float] = {}
+
+    def bump(key, n):
+        if n:
+            exp[key] = exp.get(key, 0.0) + n
+
+    for (op, label, dtype), e in ledger.entries().items():
+        bump((op, label, dtype), e.calls)
+        bump((MIRROR_OP[op], label, dtype), e.mirrored_calls)
+    return exp
+
+
+def audit(jaxpr, ledger: T.CommLedger, *,
+          backend: str = "explicit") -> list[AuditFinding]:
+    """Diff ``jaxpr``'s collective structure against ``ledger``.
+
+    Returns structured findings (empty list = clean).  See the module
+    docstring for the exactness contract per backend.
+    """
+    counts, constraints, unbounded = _walk_all(jaxpr)
+    findings = []
+    for key in sorted(unbounded):
+        op, label, _ = key
+        findings.append(AuditFinding(
+            "unbounded_loop", op, label, 0.0, float("nan"),
+            "collective inside a while body — trip count is not static, "
+            "so neither the ledger nor this audit can count it; use a "
+            "scan with a static length under telemetry.loop_scope"))
+
+    if backend == "constraint":
+        for (op, label, dtype), n in sorted(counts.items()):
+            findings.append(AuditFinding(
+                "collective_in_constraint_program", op, label, 0.0, n,
+                f"dtype={dtype}: constraint-backend programs carry no "
+                f"collective primitives (the SPMD partitioner "
+                f"materializes them after lowering) — a {op} here means "
+                f"explicit-backend code leaked into a global-view body"))
+        for t in ledger.transitions():
+            if not t.anchored:
+                continue
+            for side, spec in (("src", t.src_spec), ("dst", t.dst_spec)):
+                key = (t.shape, t.dtype, spec)
+                have = constraints.get(key, 0.0)
+                if have < t.calls:
+                    findings.append(AuditFinding(
+                        "missing_constraint", "sharding_constraint",
+                        "+".join(str(s) for s in spec), t.calls, have,
+                        f"anchored layout transition {t.src_spec} -> "
+                        f"{t.dst_spec} of {t.dtype}{list(t.shape)} has "
+                        f"no {side}-side sharding_constraint equation — "
+                        f"layout_cast recorded a transition the traced "
+                        f"program does not anchor"))
+        return findings
+
+    exp = expected_from_ledger(ledger)
+    keys = {k for k in counts if k[0] in DATA_OPS} | \
+           {k for k in exp if k[0] in DATA_OPS}
+    for key in sorted(keys):
+        op, label, dtype = key
+        have, want = counts.get(key, 0.0), exp.get(key, 0.0)
+        if have > want:
+            findings.append(AuditFinding(
+                "unledgered_collective", op, label, want, have,
+                f"dtype={dtype}: the traced program contains {have:g} "
+                f"{op} over {label!r} but the ledger accounts for "
+                f"{want:g} — a collective bypassed "
+                f"runtime/collectives.py, or a communicating scan lacks "
+                f"telemetry.loop_scope"))
+        elif want > have:
+            findings.append(AuditFinding(
+                "phantom_ledger_entry", op, label, want, have,
+                f"dtype={dtype}: the ledger accounts for {want:g} {op} "
+                f"over {label!r} but the traced program contains only "
+                f"{have:g} — a wrapper recorded bytes autodiff never "
+                f"emits (wrong mirror= declaration?)"))
+    for key in sorted(k for k in exp if k[0] == "psum"):
+        op, label, dtype = key
+        if exp[key] > counts.get(key, 0.0):
+            findings.append(AuditFinding(
+                "phantom_ledger_entry", op, label, exp[key],
+                counts.get(key, 0.0),
+                f"dtype={dtype}: ledger psum count exceeds the program's "
+                f"(the reverse direction is expected — parameter-"
+                f"gradient all-reduces are out of ledger scope)"))
+    return findings
+
+
+def assert_clean(jaxpr, ledger: T.CommLedger, *,
+                 backend: str = "explicit", tag: str = "") -> None:
+    """Raise AssertionError listing every finding (CI entry point)."""
+    findings = audit(jaxpr, ledger, backend=backend)
+    if findings:
+        head = f"jaxpr audit failed{f' [{tag}]' if tag else ''}:"
+        raise AssertionError(
+            "\n  ".join([head] + [f.format() for f in findings]))

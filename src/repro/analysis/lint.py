@@ -1,0 +1,628 @@
+"""AST linter for the repo's distributed disciplines (tier 1).
+
+Why AST and not regex: the retired choke-point check
+(tests/test_collectives_chokepoint.py before this module) matched the
+literal text ``lax.<op>(`` — blind to ``from jax.lax import all_to_all``
+and ``import jax.lax as _l`` spellings (regression fixtures under
+tests/fixtures/lint/ prove both misses).  This linter resolves imports
+(absolute, relative, aliased) to fully-qualified dotted names first, so
+a rule fires on *what a name means*, not on how it is spelled.
+
+Rules (ROADMAP.md "Distributed discipline" maps each to the PR whose
+invariant it pins):
+
+==== ========= ==========================================================
+id   severity  invariant
+==== ========= ==========================================================
+RT001 error    ``jax.lax`` collectives only in ``runtime/collectives.py``
+                — the telemetry/backends choke point — in any spelling.
+RT002 error    ``shard_map`` (any spelling) only under ``runtime/``.
+RT003 error    data-moving collective call sites in engine code
+                (``core/``, ``gnn/``, ``nn/`` path segments) pass an
+                explicit ``mirror=`` — the autodiff-mirror declaration
+                the ledger's backward accounting is built on.
+RT004 error    ``lax.scan``/``fori_loop``/``while_loop`` whose body
+                invokes runtime collectives is lexically wrapped in
+                ``telemetry.loop_scope`` (trip multipliers).
+RT005 error    multihost discipline: ``jax.distributed.initialize`` and
+                reads of the COORDINATOR_ADDRESS/NUM_PROCESSES/
+                PROCESS_ID env contract only in ``runtime/distributed``.
+W100  warn     seed-stub modules (``configs/*`` LLM configs,
+                ``serve/engine``) referenced only from their own package
+                — tracked dead code for the serving arc.
+==== ========= ==========================================================
+
+Suppression: append ``# lint-ok: <RULE>`` (or a bare ``# lint-ok``) to
+the offending line, with a reason — used exactly once in-tree, for the
+jaxpr audit's deliberate-violation negative test.
+
+API: :func:`lint_paths` (files + directories → findings, file- and
+tree-level rules), :func:`lint_text` (one in-memory source, file-level
+rules only — the unit-test entry point).  CLI: ``scripts/lint_dist.py``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Callable, Iterator
+
+__all__ = [
+    "LintFinding", "Rule", "FILE_RULES", "TREE_RULES", "all_rules",
+    "lint_paths", "lint_text", "iter_py_files", "module_name_for",
+]
+
+# ---------------------------------------------------------------------------
+# Findings and rule registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    """One rule violation at one source location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    severity: str = "error"          # "error" (gates CI) | "warn" (report)
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.severity}] {self.message}")
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    severity: str
+    invariant: str                   # one line; ROADMAP table + --rules
+    fn: Callable = None
+
+
+FILE_RULES: list[Rule] = []          # fn(ctx) -> list[LintFinding]
+TREE_RULES: list[Rule] = []          # fn(list[ctx]) -> list[LintFinding]
+
+
+def _register(registry, rule_id, severity, invariant):
+    def deco(fn):
+        registry.append(Rule(rule_id, severity, invariant, fn))
+        return fn
+    return deco
+
+
+def file_rule(rule_id, severity, invariant):
+    return _register(FILE_RULES, rule_id, severity, invariant)
+
+
+def tree_rule(rule_id, severity, invariant):
+    return _register(TREE_RULES, rule_id, severity, invariant)
+
+
+def all_rules() -> list[Rule]:
+    return sorted(FILE_RULES + TREE_RULES, key=lambda r: r.id)
+
+
+# ---------------------------------------------------------------------------
+# Per-file context: imports resolved to fully-qualified dotted names
+# ---------------------------------------------------------------------------
+
+def module_name_for(path: str) -> str | None:
+    """Dotted module name of ``path``, or None when it is not under a
+    ``src/`` root (scripts and test programs import absolutely, so their
+    relative imports — which need a package context — stay unresolved
+    rather than guessed)."""
+    parts = os.path.normpath(os.path.abspath(path)).split(os.sep)
+    if "src" not in parts:
+        return None
+    i = len(parts) - 1 - parts[::-1].index("src")
+    mods = parts[i + 1:]
+    if not mods or not mods[-1].endswith(".py"):
+        return None
+    mods[-1] = mods[-1][:-3]
+    if mods[-1] == "__init__":
+        mods.pop()
+    return ".".join(mods) or None
+
+
+class _FileContext:
+    """Parsed file + the name-resolution tables every rule shares."""
+
+    def __init__(self, path: str, text: str, module: str | None = None):
+        self.path = path
+        self.parts = os.path.normpath(os.path.abspath(path)).split(os.sep)
+        self.lines = text.splitlines()
+        self.module = module if module is not None else \
+            module_name_for(path)
+        # package context for relative imports: a module's package is its
+        # parent; an __init__ IS its package (module_name_for strips it)
+        base = os.path.basename(path)
+        self.package = self.module if base == "__init__.py" else (
+            self.module.rsplit(".", 1)[0]
+            if self.module and "." in self.module else None)
+        self.tree = ast.parse(text, filename=path)
+        self.aliases: dict[str, str] = {}       # local name -> dotted fq
+        self.import_nodes: list = []            # (node, base) for rules
+        self.funcs: dict[str, ast.AST] = {}     # name -> (last) FunctionDef
+        self.parent: dict[ast.AST, ast.AST] = {}
+        self._index()
+
+    # -- construction ----------------------------------------------------
+
+    def _index(self) -> None:
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parent[child] = node
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        self.aliases[a.asname] = a.name
+                    else:   # ``import jax.lax`` binds the root name only
+                        root = a.name.split(".")[0]
+                        self.aliases[root] = root
+                self.import_nodes.append((node, None))
+            elif isinstance(node, ast.ImportFrom):
+                base = self._from_base(node)
+                if base is not None:
+                    for a in node.names:
+                        if a.name == "*":
+                            continue
+                        self.aliases[a.asname or a.name] = \
+                            f"{base}.{a.name}" if base else a.name
+                self.import_nodes.append((node, base))
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.funcs[node.name] = node
+
+    def _from_base(self, node: ast.ImportFrom) -> str | None:
+        if node.level == 0:
+            return node.module or ""
+        if self.package is None:
+            return None                      # unknown package context
+        parts = self.package.split(".")
+        # level 1 = current package; each extra level climbs one parent
+        parts = parts[: len(parts) - (node.level - 1)]
+        if not parts:
+            return None
+        if node.module:
+            parts += node.module.split(".")
+        return ".".join(parts)
+
+    # -- queries ---------------------------------------------------------
+
+    def resolve(self, node) -> str | None:
+        """Fully-qualified dotted name of a Name/Attribute chain, through
+        the file's import aliases; None when the root is not imported."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        base = self.aliases.get(node.id)
+        if base is None:
+            return None
+        parts.append(base)
+        return ".".join(reversed(parts))
+
+    def path_has_segment(self, *segments: str) -> bool:
+        return any(s in self.parts for s in segments)
+
+    def rel_endswith(self, suffix: str) -> bool:
+        return os.path.join(*self.parts[-len(suffix.split("/")):]) == \
+            os.path.join(*suffix.split("/"))
+
+    def suppressed(self, finding: LintFinding) -> bool:
+        if not 1 <= finding.line <= len(self.lines):
+            return False
+        line = self.lines[finding.line - 1]
+        if "# lint-ok" not in line:
+            return False
+        tail = line.split("# lint-ok", 1)[1].lstrip()
+        if not tail.startswith(":"):
+            return True                  # bare `# lint-ok`: all rules
+        spec = tail[1:].strip()
+        return spec == "" or finding.rule in spec
+
+
+# ---------------------------------------------------------------------------
+# RT001 — jax.lax collectives only in runtime/collectives.py
+# ---------------------------------------------------------------------------
+
+#: The ops that put bytes on the wire, plus the axis introspection engine
+#: bodies rely on (same vocabulary the retired regex check pinned).
+LAX_COLLECTIVES = frozenset({
+    "psum", "pmean", "pmax", "pmin", "all_gather", "all_to_all",
+    "ppermute", "psum_scatter", "axis_index", "axis_size",
+})
+
+_RT001_ALLOWED = "runtime/collectives.py"
+
+
+@file_rule("RT001", "error",
+           "jax.lax collectives route through runtime/collectives.py "
+           "(the telemetry/backends choke point), in any spelling")
+def _rt001(ctx: _FileContext) -> list[LintFinding]:
+    if ctx.rel_endswith(_RT001_ALLOWED):
+        return []
+    out = []
+    for node, base in ctx.import_nodes:
+        if isinstance(node, ast.ImportFrom) and base == "jax.lax":
+            for a in node.names:
+                if a.name in LAX_COLLECTIVES:
+                    out.append(LintFinding(
+                        "RT001", ctx.path, node.lineno, node.col_offset,
+                        f"importing jax.lax.{a.name} outside "
+                        f"runtime/collectives.py — route it through "
+                        f"repro.runtime.collectives.{a.name} so the "
+                        f"telemetry ledger sees the bytes"))
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.Attribute, ast.Name)):
+            continue
+        if not isinstance(getattr(node, "ctx", None), ast.Load):
+            continue
+        # only report the outermost attribute chain (jax.lax.psum once,
+        # not again for its jax.lax prefix)
+        if isinstance(ctx.parent.get(node), ast.Attribute):
+            continue
+        fq = ctx.resolve(node)
+        if fq and fq.startswith("jax.lax.") and \
+                fq.rsplit(".", 1)[1] in LAX_COLLECTIVES:
+            out.append(LintFinding(
+                "RT001", ctx.path, node.lineno, node.col_offset,
+                f"direct use of {fq} outside runtime/collectives.py — "
+                f"call repro.runtime.collectives.{fq.rsplit('.', 1)[1]} "
+                f"instead (the choke point the CommLedger counts at)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RT002 — shard_map only under runtime/
+# ---------------------------------------------------------------------------
+
+@file_rule("RT002", "error",
+           "shard_map (any spelling) is entered only by the runtime "
+           "layer (runtime/smap.py is the version-portable entry)")
+def _rt002(ctx: _FileContext) -> list[LintFinding]:
+    if ctx.path_has_segment("runtime"):
+        return []
+    out = []
+
+    def hit(node, what):
+        out.append(LintFinding(
+            "RT002", ctx.path, node.lineno, node.col_offset,
+            f"{what} outside runtime/ — sharded execution enters "
+            f"through repro.runtime.engine (runtime/smap.py owns the "
+            f"version-portable shard_map import)"))
+
+    for node, base in ctx.import_nodes:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if "shard_map" in a.name.split("."):
+                    hit(node, f"import of {a.name}")
+        elif base is not None:
+            if "shard_map" in base.split("."):
+                hit(node, f"import from {base}")
+            else:
+                for a in node.names:
+                    if a.name == "shard_map":
+                        hit(node, f"import of {base}.shard_map")
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Attribute) and node.attr == "shard_map":
+            fq = ctx.resolve(node)
+            if fq and fq.startswith("jax."):
+                hit(node, f"use of {fq}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RT003 — explicit mirror= in engine code
+# ---------------------------------------------------------------------------
+
+#: Call targets whose backward accounting depends on the caller declaring
+#: mirror= (psum/psum_replicas are excluded: mirror=False is their
+#: documented convention — see runtime/telemetry.py).
+MIRROR_REQUIRED = frozenset({
+    "repro.runtime.collectives.all_gather",
+    "repro.runtime.collectives.all_to_all",
+    "repro.runtime.collectives.ppermute",
+    "repro.runtime.collectives.replica_gather",
+    "repro.core.tp.split",
+    "repro.core.tp.gather",
+    "repro.core.tp.split_constraint",
+    "repro.core.tp.gather_constraint",
+    "repro.runtime.constraint.layout_cast",
+})
+
+#: Engine-code path segments RT003 applies to (runtime/ and sharding/
+#: are the implementation layers that own the defaults).
+_RT003_SEGMENTS = ("core", "gnn", "nn")
+
+
+@file_rule("RT003", "error",
+           "data-moving collective call sites in engine code (core/, "
+           "gnn/, nn/) declare mirror= explicitly — the ledger's "
+           "backward bytes are derived from that declaration")
+def _rt003(ctx: _FileContext) -> list[LintFinding]:
+    if not ctx.path_has_segment(*_RT003_SEGMENTS):
+        return []
+    if ctx.path_has_segment("runtime"):
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fq = ctx.resolve(node.func)
+        if fq not in MIRROR_REQUIRED:
+            continue
+        if any(kw.arg == "mirror" for kw in node.keywords):
+            continue
+        short = fq.rsplit(".", 1)[1]
+        out.append(LintFinding(
+            "RT003", ctx.path, node.lineno, node.col_offset,
+            f"{short}(...) without an explicit mirror= — declare whether "
+            f"autodiff transposes this collective (mirror=True) or the "
+            f"moved data is undifferentiated (mirror=False); the ledger "
+            f"counts backward bytes from this declaration (PR 4)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RT004 — communicating loop bodies wrapped in telemetry.loop_scope
+# ---------------------------------------------------------------------------
+
+#: loop fn -> positional index of the body callable.
+_LOOP_FNS = {"jax.lax.scan": 0, "jax.lax.fori_loop": 2,
+             "jax.lax.while_loop": 1}
+_BODY_KW = {"jax.lax.scan": "f", "jax.lax.fori_loop": "body_fun",
+            "jax.lax.while_loop": "body_fun"}
+
+#: Calls that put bytes on the wire from inside a loop body: the ledger-
+#: recording wrappers, plus the chunk-collective helpers whose bodies
+#: contain the all-to-alls (the pipelined scans' indirection).
+_COMM_FNS = frozenset(
+    {f"repro.runtime.collectives.{f}"
+     for f in ("psum", "all_gather", "all_to_all", "ppermute",
+               "replica_gather", "psum_replicas")} |
+    {"repro.core.chunks.chunk_split_step",
+     "repro.core.chunks.chunk_gather_step"})
+
+_WRAPPERS = frozenset({"jax.checkpoint", "jax.remat"})
+
+
+def _body_node(ctx, call, fq):
+    args = call.args
+    idx = _LOOP_FNS[fq]
+    body = args[idx] if len(args) > idx else None
+    if body is None:
+        kw = _BODY_KW[fq]
+        body = next((k.value for k in call.keywords if k.arg == kw), None)
+    # unwrap jax.checkpoint(step) / jax.remat(step)
+    while isinstance(body, ast.Call) and \
+            (ctx.resolve(body.func) in _WRAPPERS) and body.args:
+        body = body.args[0]
+    if isinstance(body, ast.Name):
+        return ctx.funcs.get(body.id)
+    if isinstance(body, (ast.Lambda, ast.FunctionDef)):
+        return body
+    return None
+
+
+def _communicates(ctx, fn_node, seen) -> bool:
+    if fn_node is None or fn_node in seen:
+        return False
+    seen.add(fn_node)
+    for node in ast.walk(fn_node):
+        if not isinstance(node, ast.Call):
+            continue
+        fq = ctx.resolve(node.func)
+        if fq in _COMM_FNS:
+            return True
+        if isinstance(node.func, ast.Name) and \
+                node.func.id in ctx.funcs and \
+                _communicates(ctx, ctx.funcs[node.func.id], seen):
+            return True
+    return False
+
+
+def _in_loop_scope(ctx, node) -> bool:
+    cur = ctx.parent.get(node)
+    while cur is not None:
+        if isinstance(cur, ast.With):
+            for item in cur.items:
+                c = item.context_expr
+                if isinstance(c, ast.Call):
+                    fq = ctx.resolve(c.func)
+                    if fq and fq.rsplit(".", 1)[-1] == "loop_scope":
+                        return True
+        cur = ctx.parent.get(cur)
+    return False
+
+
+@file_rule("RT004", "error",
+           "scan/fori_loop/while_loop bodies that invoke runtime "
+           "collectives are wrapped in telemetry.loop_scope so the "
+           "ledger counts in-loop collectives trip-many times")
+def _rt004(ctx: _FileContext) -> list[LintFinding]:
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fq = ctx.resolve(node.func)
+        if fq not in _LOOP_FNS:
+            continue
+        body = _body_node(ctx, node, fq)
+        if not _communicates(ctx, body, set()):
+            continue
+        if _in_loop_scope(ctx, node):
+            continue
+        out.append(LintFinding(
+            "RT004", ctx.path, node.lineno, node.col_offset,
+            f"{fq.rsplit('.', 1)[1]} body communicates but the call is "
+            f"not inside `with telemetry.loop_scope(trips):` — the body "
+            f"traces once yet executes trip-many times, so an unscoped "
+            f"loop undercounts the ledger by the trip factor (PR 4)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RT005 — multihost env contract only in runtime/distributed.py
+# ---------------------------------------------------------------------------
+
+#: The launcher env contract (runtime/distributed.py constants); reads
+#: anywhere else bypass env_topology()'s validation and single ownership.
+MULTIHOST_ENV = frozenset({
+    "COORDINATOR_ADDRESS", "NUM_PROCESSES", "PROCESS_ID",
+    "DIST_INIT_TIMEOUT",
+})
+
+_RT005_ALLOWED = "runtime/distributed.py"
+
+
+def _const_str(node) -> str | None:
+    return node.value if isinstance(node, ast.Constant) and \
+        isinstance(node.value, str) else None
+
+
+@file_rule("RT005", "error",
+           "jax.distributed.initialize and reads of the COORDINATOR_"
+           "ADDRESS/NUM_PROCESSES/PROCESS_ID env contract happen only "
+           "in runtime/distributed.py (single validated entry, PR 5)")
+def _rt005(ctx: _FileContext) -> list[LintFinding]:
+    if ctx.rel_endswith(_RT005_ALLOWED):
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            fq = ctx.resolve(node.func)
+            if fq == "jax.distributed.initialize":
+                out.append(LintFinding(
+                    "RT005", ctx.path, node.lineno, node.col_offset,
+                    "direct jax.distributed.initialize — use "
+                    "repro.runtime.distributed.initialize (eager "
+                    "validation, actionable errors, idempotence)"))
+                continue
+            if fq in ("os.environ.get", "os.getenv") and node.args:
+                key = _const_str(node.args[0])
+                if key in MULTIHOST_ENV:
+                    out.append(LintFinding(
+                        "RT005", ctx.path, node.lineno, node.col_offset,
+                        f"reading {key} from the environment — the "
+                        f"multihost env contract is owned by "
+                        f"repro.runtime.distributed (use "
+                        f"dist.env_topology())"))
+        elif isinstance(node, ast.Subscript) and \
+                isinstance(node.ctx, ast.Load):
+            if ctx.resolve(node.value) == "os.environ":
+                key = _const_str(getattr(node, "slice", None))
+                if key in MULTIHOST_ENV:
+                    out.append(LintFinding(
+                        "RT005", ctx.path, node.lineno, node.col_offset,
+                        f"reading os.environ[{key!r}] — use "
+                        f"repro.runtime.distributed.env_topology()"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# W100 — seed stubs referenced only from their own package (tree rule)
+# ---------------------------------------------------------------------------
+
+def _watched_stub(ctx: _FileContext) -> bool:
+    if ctx.module is None:
+        return False
+    if ctx.module.startswith("repro.configs.") and \
+            not ctx.module.endswith("__init__"):
+        return True
+    return ctx.module == "repro.serve.engine"
+
+
+@tree_rule("W100", "warn",
+           "seed-stub modules (configs/* LLM configs, serve/engine) "
+           "referenced only from their own package — tracked dead code "
+           "for the serving arc")
+def _w100(ctxs: list[_FileContext]) -> list[LintFinding]:
+    watched = {c.module: c for c in ctxs if _watched_stub(c)}
+    if not watched:
+        return []
+    referenced: set[str] = set()
+    for ctx in ctxs:
+        for mod in watched:
+            if ctx.module == mod:
+                continue
+            pkg = mod.rsplit(".", 1)[0]
+            if ctx.package == pkg or ctx.module == pkg:
+                continue        # its own package (registry re-exports)
+            for target in ctx.aliases.values():
+                if target == mod or target.startswith(mod + "."):
+                    referenced.add(mod)
+                    break
+    out = []
+    for mod, ctx in sorted(watched.items()):
+        if mod in referenced:
+            continue
+        out.append(LintFinding(
+            "W100", ctx.path, 1, 0,
+            f"seed stub {mod} is referenced only from its own package — "
+            f"tracked dead code until the serving arc wires it up "
+            f"(ROADMAP 'Distributed discipline')", severity="warn"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+def iter_py_files(paths) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__",))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def _run_file_rules(ctx: _FileContext) -> list[LintFinding]:
+    out = []
+    for rule in FILE_RULES:
+        for f in rule.fn(ctx):
+            if not ctx.suppressed(f):
+                out.append(f)
+    return out
+
+
+def lint_text(text: str, path: str = "<memory>",
+              module: str | None = None) -> list[LintFinding]:
+    """Lint one in-memory source file (file-level rules only)."""
+    return _run_file_rules(_FileContext(path, text, module=module))
+
+
+def lint_paths(paths) -> list[LintFinding]:
+    """Lint files and directory trees; runs file- and tree-level rules.
+
+    Unparseable files produce an E999 error finding instead of raising —
+    a linter that dies on the first syntax error can't report the rest.
+    """
+    ctxs, findings = [], []
+    for path in iter_py_files(paths):
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        try:
+            ctxs.append(_FileContext(path, text))
+        except SyntaxError as e:
+            findings.append(LintFinding(
+                "E999", path, e.lineno or 1, e.offset or 0,
+                f"syntax error: {e.msg}"))
+    for ctx in ctxs:
+        findings.extend(_run_file_rules(ctx))
+    for rule in TREE_RULES:
+        findings.extend(rule.fn(ctxs))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings

@@ -114,7 +114,8 @@ def chunk_split_step(h_local: jax.Array, rows_c: jax.Array,
     rows = jnp.take(h_local, local, axis=0, mode="clip")
     rows = jnp.where((mine >= 0)[:, None], rows, 0.0)     # (M, D)
     send = rows.reshape(rows.shape[0], n, ds).transpose(1, 0, 2)  # (N, M, Ds)
-    recv = C.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    recv = C.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                        mirror=True)
     # recv[j] = slices (this worker's dims) of rows owned by worker j
     ids = rows_c.reshape(-1)
     ids = jnp.where(ids >= 0, ids, zbuf.shape[0])          # pad → dropped
@@ -139,7 +140,8 @@ def chunk_gather_step(z_chunk: jax.Array, rows_c: jax.Array,
     send = jnp.take(z_chunk, in_chunk.reshape(-1), axis=0, mode="clip")
     send = jnp.where((rows_c >= 0).reshape(-1, 1), send, 0.0)
     send = send.reshape(n, rows_c.shape[1], ds)
-    recv = C.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    recv = C.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                        mirror=True)
     # recv[j] = worker j's dim-slice of MY rows → concat along features
     full = recv.transpose(1, 0, 2).reshape(rows_c.shape[1], n * ds)  # (M, D)
     mine = rows_c[i]

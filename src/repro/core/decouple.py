@@ -333,8 +333,8 @@ def _edge_weights_tp(params, cfg: M.GNNConfig, edges: L.EdgeListDev,
     all-gather of two (V,) vectors — O(V) communication, not O(E·D)."""
     if cfg.model == "gat":
         p = params["layers"][-1]
-        sl = C.all_gather(h_local @ p["a_l"], axis)
-        sr = C.all_gather(h_local @ p["a_r"], axis)
+        sl = C.all_gather(h_local @ p["a_l"], axis, mirror=True)
+        sr = C.all_gather(h_local @ p["a_r"], axis, mirror=True)
         e = jax.nn.leaky_relu(sl[edges.src] + sr[edges.dst], 0.2)
         alpha = L.segment_softmax(e, edges.dst, sl.shape[0])
         return cfg.gamma * alpha
@@ -362,16 +362,16 @@ def tp_decoupled_forward(params, cfg: M.GNNConfig, graph: TPGraph,
     """
     cg, plan = graph.chunked, graph.comm_plan
     h = M.mlp_phase(params, cfg, x_local)              # NN phase, local rows
-    h = C.replica_gather(h, data_axes)                 # (V/N, C)
+    h = C.replica_gather(h, data_axes, mirror=True)    # (V/N, C)
     w_flat = _edge_weights_tp(params, cfg, graph.edges, h, axis)
     w_chunk = L.rechunk_edge_values(cg, w_flat)
     n_rounds = cfg.num_layers
     d_full = h.shape[1]
 
     if not pipelined:
-        z = tp.split(h, axis)                          # (V, C/N)
+        z = tp.split(h, axis, mirror=True)             # (V, C/N)
         z = _propagate_plain(cg, z, w_chunk, n_rounds)
-        out = tp.gather(z, axis)                       # (V/N, C)
+        out = tp.gather(z, axis, mirror=True)          # (V/N, C)
     elif n_rounds == 1:
         out = _round_split_gather_pipelined(
             h, cg, plan, w_chunk, d_full, axis)
@@ -402,16 +402,16 @@ def tp_naive_forward(params, cfg: M.GNNConfig, graph: TPGraph,
         if cfg.model == "gat":
             p = params["layers"][i]
             hw = h @ p["w"]                            # dense on local rows
-            hw = C.replica_gather(hw, data_axes)       # (V/N, D')
-            sl = C.all_gather(hw @ p["a_l"], axis)
-            sr = C.all_gather(hw @ p["a_r"], axis)
+            hw = C.replica_gather(hw, data_axes, mirror=True)  # (V/N, D')
+            sl = C.all_gather(hw @ p["a_l"], axis, mirror=True)
+            sr = C.all_gather(hw @ p["a_r"], axis, mirror=True)
             e = jax.nn.leaky_relu(sl[graph.edges.src] + sr[graph.edges.dst],
                                   0.2)
             alpha = L.segment_softmax(e, graph.edges.dst, sl.shape[0])
             w_chunk = L.rechunk_edge_values(cg, alpha)
-            z = tp.split(hw, axis)
+            z = tp.split(hw, axis, mirror=True)
             z = L.aggregate_chunked(cg, z, edge_weight=w_chunk)
-            h = C.replica_slice(tp.gather(z, axis), data_axes)
+            h = C.replica_slice(tp.gather(z, axis, mirror=True), data_axes)
             if i < n_layers - 1:
                 h = jax.nn.elu(h)
         else:
@@ -496,10 +496,10 @@ def tp_decoupled_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
     h = K.constrain(h, vspec)                          # anchor: vertex-sharded
     w_flat = _edge_weights_constraint(params, cfg, graph.edges, h, axis)
     w_chunk = L.rechunk_edge_values(cg, w_flat)
-    z = tp.split_constraint(h, axis, data_axes)        # → dim-sharded
+    z = tp.split_constraint(h, axis, data_axes, mirror=True)
     for _ in range(cfg.num_layers):
         z = _aggregate_chunked_constraint(cg, z, w_chunk, axis)
-    return tp.gather_constraint(z, axis, data_axes)    # → vertex-sharded
+    return tp.gather_constraint(z, axis, data_axes, mirror=True)
 
 
 def tp_naive_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
@@ -523,9 +523,9 @@ def tp_naive_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
                                   0.2)
             alpha = L.segment_softmax(e, graph.edges.dst, sl.shape[0])
             w_chunk = L.rechunk_edge_values(cg, alpha)
-            z = tp.split_constraint(hw, axis, data_axes)
+            z = tp.split_constraint(hw, axis, data_axes, mirror=True)
             z = _aggregate_chunked_constraint(cg, z, w_chunk, axis)
-            h = tp.gather_constraint(z, axis, data_axes)
+            h = tp.gather_constraint(z, axis, data_axes, mirror=True)
             if i < n_layers - 1:
                 h = jax.nn.elu(h)
         else:

@@ -9,14 +9,17 @@ FLOPs/bytes come from ``compiled.cost_analysis()`` (whole-program, already
 per-partition under SPMD — we document the convention below); collective
 bytes are parsed from the compiled HLO text since cost_analysis omits them.
 
-NOTE: for the distributed-GNN benches the HLO census is no longer the
-primary wire-byte measurement — :mod:`repro.runtime.telemetry` counts
-bytes at the runtime choke point at trace time, and the census here is
-the independent *cross-check* (``benchmarks/_dist_gnn.py --hlo-census``),
-asserted byte-for-byte against the ledger so a parser regression (this
-file has shipped two silent-zero bugs: tuple-result ``/*index=N*/``
-comments breaking ``_DEF_RE``, and literal ``replica_groups={{...}}``
-falling back to group size 1) fails loudly instead of skewing Fig. 8.
+DEPRECATED for the distributed-GNN benches: the HLO census is neither
+the primary wire-byte measurement (:mod:`repro.runtime.telemetry` counts
+bytes at the runtime choke point at trace time) nor the primary
+structural check (:mod:`repro.analysis.jaxpr_audit` diffs the jaxpr's
+collective primitives against the ledger per (op, axis, dtype), through
+scan/while sub-jaxprs).  The census survives only as a demoted,
+opt-in HLO-text cross-check (``benchmarks/_dist_gnn.py --hlo-census``,
+which emits a DeprecationWarning), still asserted byte-for-byte against
+the ledger because this file has shipped two silent-zero parser bugs:
+tuple-result ``/*index=N*/`` comments breaking ``_DEF_RE``, and literal
+``replica_groups={{...}}`` falling back to group size 1.
 """
 from __future__ import annotations
 
@@ -151,6 +154,12 @@ def _multipliers(comps: dict, entry: str | None) -> dict[str, float]:
 def hlo_census(hlo_text: str) -> dict:
     """Trip-count-aware FLOP / byte / collective census of compiled HLO.
 
+    .. deprecated:: superseded by :mod:`repro.analysis.jaxpr_audit` as
+       the structural collective check for the distributed-GNN benches
+       (jaxprs carry typed primitives; HLO text is a moving target).
+       Retained for the roofline terms and as the opt-in
+       ``--hlo-census`` cross-check.
+
     XLA's ``cost_analysis()`` visits while bodies once; layer scans would
     undercount by ~num_layers.  This census multiplies each computation by
     its execution count from the call graph.
@@ -266,11 +275,6 @@ def _wire_factor(kind: str, g: int) -> float:
             "all-reduce": 2 * (g - 1) / g,
             "reduce-scatter": float(g - 1),
             "all-to-all": (g - 1) / g}[kind]
-
-
-def collective_bytes(hlo_text: str) -> dict:
-    """Per-device wire bytes per collective kind (see hlo_census)."""
-    return hlo_census(hlo_text)["collectives"]
 
 
 @dataclasses.dataclass

@@ -72,8 +72,8 @@ def ring_attention_local(ql, kl, vl, axis_name: str, *,
         acc_new = acc * alpha[..., None] + jnp.einsum(
             "bkgqt,btkh->bkgqh", p, v_c.astype(jnp.float32))
         # rotate: device i sends its current chunk to i+1 (receives i−1's)
-        k_nxt = C.ppermute(k_c, axis_name, perm=perm)
-        v_nxt = C.ppermute(v_c, axis_name, perm=perm)
+        k_nxt = C.ppermute(k_c, axis_name, perm=perm, mirror=True)
+        v_nxt = C.ppermute(v_c, axis_name, perm=perm, mirror=True)
         return (k_nxt, v_nxt, m_new, l_new, acc_new), None
 
     init = (kl, vl,

@@ -105,28 +105,33 @@ def layout_cast(x: jax.Array, spec: P,
     if mesh is None:
         return x
     if src_spec is not None:
-        note_transition(x, src_spec, spec, mirror=mirror)
+        # anchored: both endpoints get with_sharding_constraint eqns
+        # below — the jaxpr audit checks this record against them
+        note_transition(x, src_spec, spec, mirror=mirror, anchored=True)
         x = jax.lax.with_sharding_constraint(
             x, NamedSharding(mesh, src_spec))
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
 def note_transition(x, src_spec: P, dst_spec: P, *,
-                    mirror: bool = True) -> None:
+                    mirror: bool = True, anchored: bool = False) -> None:
     """Record the implied collective of a ``src_spec → dst_spec``
     transition of global array ``x`` without emitting any constraint —
     for transition points spelled as raw ``constrain`` pairs (e.g. the
     DP halo exchange's transpose-and-reconstrain, whose all-to-all the
     partitioner materializes from an axis *moving dims* across an
-    existing pair of anchors).  No-op outside an active constraint
-    engine or when no ledger is collecting.
+    existing pair of anchors).  ``anchored=True`` is set by
+    ``layout_cast``, which emits both-side constraint anchors the jaxpr
+    audit then verifies; raw ``constrain``-pair sites leave the default
+    False.  No-op outside an active constraint engine or when no ledger
+    is collecting.
     """
     mesh = current_mesh()
     if mesh is None or not T.active_ledgers():
         return
     T.record_transition(jax.numpy.shape(x), jax.numpy.result_type(x),
                         src_spec, dst_spec, dict(mesh.shape),
-                        mirror=mirror)
+                        mirror=mirror, anchored=anchored)
 
 
 def _is_spec_leaf(x) -> bool:

@@ -76,9 +76,9 @@ from contextvars import ContextVar
 from typing import Iterator, Mapping
 
 __all__ = [
-    "CommEntry", "CommLedger", "TelemetryError", "active_ledgers",
-    "collect_comm", "loop_multiplier", "loop_scope", "record",
-    "record_transition", "ring_wire_factor",
+    "CommEntry", "CommLedger", "TelemetryError", "TransitionRecord",
+    "active_ledgers", "collect_comm", "loop_multiplier", "loop_scope",
+    "normalize_spec", "record", "record_transition", "ring_wire_factor",
 ]
 
 
@@ -136,6 +136,46 @@ class CommEntry:
         self.mirrored_wire_bytes += other.mirrored_wire_bytes
 
 
+def normalize_spec(spec) -> tuple:
+    """Canonical hashable form of a PartitionSpec-like: tuple entries
+    stay tuples of ``str`` names, scalars become ``str``, and trailing
+    ``None`` dims (replicated) are dropped — so ``P("model", None)``,
+    ``P("model")`` and ``("model",)`` all compare equal.  Used to match
+    ledger :class:`TransitionRecord` endpoints against the
+    ``sharding_constraint`` equations of a traced constraint-backend
+    program (repro.analysis.jaxpr_audit)."""
+    entries = []
+    for e in tuple(spec):
+        if e is None:
+            entries.append(None)
+        elif isinstance(e, (tuple, list)):
+            entries.append(tuple(str(a) for a in e))
+        else:
+            entries.append(str(e))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return tuple(entries)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransitionRecord:
+    """One constraint-backend layout transition as declared at trace
+    time (``layout_cast``/``note_transition``) — the endpoints the jaxpr
+    audit checks for anchoring ``sharding_constraint`` equations.
+    Trace-local evidence: not serialized by ``as_dict`` and not merged
+    by ``merge_from`` (per-process ledgers compare *counters*; the
+    transitions of an SPMD program are identical per process anyway)."""
+
+    shape: tuple        # global array shape
+    dtype: str
+    src_spec: tuple     # normalize_spec() form
+    dst_spec: tuple
+    calls: float        # loop_scope-multiplied executions
+    mirror: bool
+    anchored: bool      # True iff layout_cast emitted both-side
+    #                     with_sharding_constraint anchors for it
+
+
 def _axis_label(axes) -> str:
     axes = (axes,) if isinstance(axes, str) else tuple(axes)
     return "+".join(axes)
@@ -150,6 +190,7 @@ class CommLedger:
 
     def __init__(self) -> None:
         self._entries: dict[tuple[str, str, str], CommEntry] = {}
+        self._transitions: list[TransitionRecord] = []
 
     # ---- accumulation --------------------------------------------------
 
@@ -163,6 +204,14 @@ class CommLedger:
         if mirror:
             entry.mirrored_calls += calls
             entry.mirrored_wire_bytes += wire * calls
+
+    def add_transition(self, rec: TransitionRecord) -> None:
+        self._transitions.append(rec)
+
+    def transitions(self) -> tuple[TransitionRecord, ...]:
+        """Layout transitions recorded this trace (constraint backend
+        only; empty for explicit-backend programs)."""
+        return tuple(self._transitions)
 
     # ---- queries -------------------------------------------------------
 
@@ -408,10 +457,14 @@ def implied_collectives(shape, itemsize: int, src_spec, dst_spec,
 
 def record_transition(shape, dtype, src_spec, dst_spec,
                       axis_sizes: Mapping[str, int], *,
-                      mirror: bool = True) -> None:
+                      mirror: bool = True, anchored: bool = False) -> None:
     """Report the implied collectives of a constraint-backend layout
-    transition (see :func:`implied_collectives`).  No-op when no ledger
-    is collecting."""
+    transition (see :func:`implied_collectives`), plus the transition
+    itself as a :class:`TransitionRecord` for the jaxpr audit.
+    ``anchored=True`` (set by ``layout_cast``) declares that the caller
+    also emitted ``with_sharding_constraint`` anchors for both
+    endpoints, which the audit verifies structurally.  No-op when no
+    ledger is collecting."""
     ledgers = active_ledgers()
     if not ledgers:
         return
@@ -424,3 +477,9 @@ def record_transition(shape, dtype, src_spec, dst_spec,
         for ledger in ledgers:
             ledger.add(op, axis, np.dtype(dtype).name, payload=payload,
                        wire=wire, calls=mult, mirror=mirror)
+    rec = TransitionRecord(
+        shape=tuple(shape), dtype=np.dtype(dtype).name,
+        src_spec=normalize_spec(src_spec), dst_spec=normalize_spec(dst_spec),
+        calls=mult, mirror=mirror, anchored=anchored)
+    for ledger in ledgers:
+        ledger.add_transition(rec)

@@ -68,10 +68,12 @@ if MODE == "unreachable":
     print("OK check_multihost")
     raise SystemExit(0)
 
-REF_PATH = os.environ["CHECK_MULTIHOST_REF"]
-DISTRIBUTED = bool(os.environ.get("NUM_PROCESSES"))
-
 from repro.runtime import distributed as dist  # noqa: E402
+
+REF_PATH = os.environ["CHECK_MULTIHOST_REF"]
+# env_topology owns the multihost env contract (RT005) — {} means
+# single-process
+DISTRIBUTED = "num_processes" in dist.env_topology()
 
 if DISTRIBUTED:
     ctx = dist.initialize()          # env contract: COORDINATOR_ADDRESS...

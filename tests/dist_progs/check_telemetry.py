@@ -20,6 +20,13 @@ the model-axis all-gather accounting (the O(V) score share).  Also
 covered: the identity (zero-entry) ledger of data_axes=() replica ops
 and the replica_slice no-silent-truncation guard.
 
+Every traced program additionally passes the tier-2 structural audit
+(repro.analysis.jaxpr_audit): collective primitives counted in the
+closed jaxpr (scan trip multipliers included) must equal what the
+ledger implies, per (op, axis, dtype) — all four modes × both backends
+× the hybrid mesh — and a deliberately unledgered collective plus a
+forged phantom entry are both caught (the negative tests at the end).
+
 Run as a child process with --xla_force_host_platform_device_count=8.
 """
 import math
@@ -39,6 +46,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from benchmarks.bench_comm_volume import expected_ledger  # noqa: E402
+from repro.analysis import jaxpr_audit as A  # noqa: E402
 from repro.core import decouple as D  # noqa: E402
 from repro.gnn import dp_baseline as DP  # noqa: E402
 from repro.gnn import models as M  # noqa: E402
@@ -57,13 +65,19 @@ def close(a, b):
     return math.isclose(a, b, rel_tol=1e-9, abs_tol=1e-6)
 
 
-def trace_train(loss_fn, params, mask):
-    """(ledger, census) of the full fwd+bwd train program."""
+def trace_train(loss_fn, params, mask, *, backend="explicit", tag=""):
+    """(ledger, census) of the full fwd+bwd train program, after the
+    tier-2 structural audit: jaxpr collective counts == ledger counts
+    (exact, incl. scan trip multipliers).  The jaxpr is re-traced
+    *outside* collect_comm — the telemetry wrappers no-op without an
+    active ledger, so the audit trace records nothing."""
     f = jax.jit(jax.value_and_grad(loss_fn))
     with collect_comm() as ledger:
         lowered = f.lower(params, mask)
     assert len(ledger), "empty ledger: collection did not see the trace"
     census = hlo_census(lowered.compile().as_text())["collectives"]
+    jxp = jax.make_jaxpr(jax.value_and_grad(loss_fn))(params, mask)
+    A.assert_clean(jxp, ledger, backend=backend, tag=tag)
     return ledger, census
 
 
@@ -110,7 +124,9 @@ for mode in ("decoupled", "naive"):
     for backend in ("explicit", "constraint"):
         loss_fn = D.make_tp_loss_fn(cfg, bundle, mesh8, mode=mode,
                                     backend=backend)
-        ledger, census = trace_train(loss_fn, params, bundle.train_mask)
+        ledger, census = trace_train(loss_fn, params, bundle.train_mask,
+                                     backend=backend,
+                                     tag=f"{mode}/{backend}")
         check_three_way(f"{mode}/{backend}", ledger, census, exp)
 
 # decoupled counters are the paper's frequency claim verbatim
@@ -120,7 +136,8 @@ assert expected_ledger("decoupled", n=bundle.n_padded, feat=cfg.in_dim,
 
 # --- pipelined: loop multipliers vs the census's while-loop trips -------
 loss_fn = D.make_tp_loss_fn(cfg, bundle, mesh8, mode="decoupled_pipelined")
-ledger, census = trace_train(loss_fn, params, bundle.train_mask)
+ledger, census = trace_train(loss_fn, params, bundle.train_mask,
+                             tag="decoupled_pipelined")
 led_a2a = ledger.wire_bytes("all_to_all", "model", train=True)
 assert close(led_a2a, census["all-to-all"]), \
     ("pipelined ledger vs census", led_a2a, census["all-to-all"])
@@ -138,7 +155,8 @@ exp = expected_ledger("dp", n=N, feat=FEAT, hidden=HIDDEN,
                       halo_slots=8 * 8 * dp_bundle.graph.m)
 for backend in ("explicit", "constraint"):
     loss_fn = DP.make_dp_loss_fn(dp_cfg, dp_bundle, mesh8, backend=backend)
-    ledger, census = trace_train(loss_fn, dp_params, dp_bundle.train_mask)
+    ledger, census = trace_train(loss_fn, dp_params, dp_bundle.train_mask,
+                                 backend=backend, tag=f"dp/{backend}")
     check_three_way(f"dp/{backend}", ledger, census, exp)
 
 # --- hybrid (data=2, model=4): model-axis a2a + data-axis gathers -------
@@ -156,7 +174,8 @@ for mode in ("decoupled", "naive"):
         loss_fn = D.make_tp_loss_fn(cfgh, bundleh, meshh, mode=mode,
                                     backend=backend)
         ledger, census = trace_train(loss_fn, paramsh,
-                                     bundleh.train_mask)
+                                     bundleh.train_mask, backend=backend,
+                                     tag=f"{mode}/{backend}/d2x4")
         check_three_way(f"{mode}/{backend}/d2x4", ledger, census, exp,
                         data_axes=meshh.data_axes)
 
@@ -168,7 +187,8 @@ gat_cfg = D.padded_gnn_config(gat_data, gat_bundle, model="gat",
                               hidden_dim=32, num_layers=L)
 gat_params = M.init_params(jax.random.PRNGKey(0), gat_cfg)
 loss_fn = D.make_tp_loss_fn(gat_cfg, gat_bundle, mesh8, mode="decoupled")
-ledger, census = trace_train(loss_fn, gat_params, gat_bundle.train_mask)
+ledger, census = trace_train(loss_fn, gat_params, gat_bundle.train_mask,
+                             tag="gat/decoupled")
 led_a2a = ledger.wire_bytes("all_to_all", "model", train=True)
 assert close(led_a2a, census["all-to-all"]), \
     ("gat ledger vs census a2a", led_a2a, census["all-to-all"])
@@ -200,5 +220,50 @@ except ValueError as e:
 else:
     raise AssertionError("replica_slice silently truncated 7 rows over "
                          "2 replicas")
+
+# --- tier-2 negative tests ----------------------------------------------
+# (1) unledgered collective: a rogue engine body that bypasses the
+# runtime choke point — trace-time telemetry sees nothing; the
+# structural audit must.
+perm = [(i, (i + 1) % 8) for i in range(8)]
+
+
+def rogue_body(x):
+    return jax.lax.ppermute(  # lint-ok: RT001 deliberate violation
+        x, "model", perm=perm)
+
+
+rogue = engine(rogue_body, in_specs=P("model"), out_specs=P("model"),
+               mesh=mesh8)
+with collect_comm() as rogue_ledger:
+    rogue_jxp = jax.make_jaxpr(rogue)(jnp.ones((64, 8), jnp.float32))
+findings = A.audit(rogue_jxp, rogue_ledger)
+assert [f.kind for f in findings] == ["unledgered_collective"], findings
+assert findings[0].op == "ppermute" and findings[0].actual == 1.0
+try:
+    A.assert_clean(rogue_jxp, rogue_ledger, tag="rogue")
+except AssertionError as e:
+    assert "unledgered_collective" in str(e), e
+else:
+    raise AssertionError("audit missed the unledgered ppermute")
+
+# (2) phantom ledger entry: a forged counter with no jaxpr counterpart
+# (the shape a wrong mirror= declaration or a bad merge would take).
+
+
+def routed_body(x):
+    return C.ppermute(x, "model", perm=perm, mirror=False)
+
+
+routed = engine(routed_body, in_specs=P("model"), out_specs=P("model"),
+                mesh=mesh8)
+with collect_comm() as led_ok:
+    jxp_ok = jax.make_jaxpr(routed)(jnp.ones((64, 8), jnp.float32))
+A.assert_clean(jxp_ok, led_ok, tag="routed")          # sanity: clean
+led_ok.add("all_to_all", "model", "float32", payload=1.0, wire=1.0)
+findings = A.audit(jxp_ok, led_ok)
+assert [f.kind for f in findings] == ["phantom_ledger_entry"], findings
+assert findings[0].op == "all_to_all"
+print("ok audit negative tests")
 
 print("OK check_telemetry")

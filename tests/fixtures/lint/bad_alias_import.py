@@ -1,0 +1,10 @@
+"""RT001 fixture: the aliased-import spelling the old line regex missed.
+
+``_l.psum(`` does not match a regex anchored on the literal module name
+``lax.``.
+"""
+import jax.lax as _l
+
+
+def leak(x, axis):
+    return _l.psum(x, axis)

@@ -1,0 +1,7 @@
+"""RT001 fixture: the plain attribute spelling (sanity — the one
+spelling the old regex *did* catch; RT001 must too)."""
+import jax
+
+
+def leak(x, axis):
+    return jax.lax.psum(x, axis)

@@ -1,0 +1,10 @@
+"""RT001 fixture: the `from`-import spelling the old line regex missed.
+
+The retired check matched calls prefixed with the literal module name;
+a bare call after a from-import never matches it.
+"""
+from jax.lax import all_to_all
+
+
+def leak(x, axis):
+    return all_to_all(x, axis, split_axis=0, concat_axis=0)

@@ -1,0 +1,12 @@
+"""RT005 fixture: multihost bootstrap outside runtime/distributed.py —
+both the env-contract read and the direct initialize call."""
+import os
+
+import jax
+
+
+def leak():
+    n = os.environ.get("NUM_PROCESSES")
+    if n:
+        jax.distributed.initialize()
+    return n

@@ -1,0 +1,7 @@
+"""RT002 fixture: shard_map entered outside runtime/ — engine code must
+stay backend-agnostic (runtime/smap.py owns the per-shard entry)."""
+from jax.experimental.shard_map import shard_map
+
+
+def leak(fn, mesh, specs):
+    return shard_map(fn, mesh=mesh, in_specs=specs, out_specs=specs)

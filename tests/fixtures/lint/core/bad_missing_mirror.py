@@ -1,0 +1,8 @@
+"""RT003 fixture: an engine-code collective call site (this file sits
+under a ``core`` path segment) without an explicit ``mirror=`` — the
+ledger cannot account the backward bytes of an undeclared site."""
+from repro.runtime import collectives as C
+
+
+def leak(h, axis):
+    return C.all_gather(h, axis)

@@ -1,0 +1,15 @@
+"""RT004 fixture: a scan whose body communicates, without a
+``telemetry.loop_scope`` wrapper — the body traces once but executes
+trip×, so the ledger undercounts by the trip factor."""
+import jax
+
+from repro.runtime import collectives as C
+
+
+def leak(k, perm, axis, n):
+    def step(carry, _):
+        nxt = C.ppermute(carry, axis, perm=perm, mirror=True)
+        return nxt, None
+
+    out, _ = jax.lax.scan(step, k, None, length=n)
+    return out

@@ -4,9 +4,13 @@ Every collective the engine (either backend) executes must route through
 :mod:`repro.runtime.collectives` — that is what makes per-axis byte/op
 counters (the trace-time telemetry now measuring bench_comm_volume's
 Fig. 8 rows — see tests/test_telemetry.py) and backend/mesh changes
-local to one module.  These tests pin the invariant at the source level
-(no stray ``jax.lax`` collective calls anywhere else in ``src/repro``)
-and pin the data-axis terms of the analytic comm-volume accounting.
+local to one module.  The invariant was originally pinned by a line
+regex over ``src/repro``; that check was blind to ``from jax.lax import
+psum`` and ``import jax.lax as _l`` spellings (proven below against the
+seeded fixtures), so it now rides the AST linter
+(:mod:`repro.analysis.lint`, rule RT001 — with RT002 for shard_map).
+These tests drive the linter over the real tree and pin the analytic
+data-axis terms of the comm-volume accounting.
 """
 import os
 import re
@@ -16,57 +20,108 @@ import pytest
 
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 SRC = os.path.join(REPO, "src", "repro")
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "lint")
 
-#: The ops that put bytes on the wire (plus the axis introspection the
-#: engine bodies rely on).  ``with_sharding_constraint`` is exempt: it is
-#: the constraint backend's transition op and lives in runtime/constraint.
-_COLLECTIVE_RE = re.compile(
-    r"\blax\.(psum|pmean|pmax|pmin|all_gather|all_to_all|ppermute|"
-    r"psum_scatter|axis_index|axis_size)\s*\(")
-
-#: Modules allowed to touch jax.lax collectives directly.
-_ALLOWED = {
-    os.path.join("runtime", "collectives.py"),
-}
+from repro.analysis import lint  # noqa: E402
 
 
-def _py_files():
-    for root, _, files in os.walk(SRC):
-        for f in files:
-            if f.endswith(".py"):
-                yield os.path.join(root, f)
+def _findings(paths, rule):
+    return [f for f in lint.lint_paths(paths) if f.rule == rule]
 
 
 def test_no_direct_lax_collectives_outside_runtime():
-    offenders = []
-    for path in _py_files():
-        rel = os.path.relpath(path, SRC)
-        if rel in _ALLOWED:
-            continue
-        with open(path, encoding="utf-8") as fh:
-            for lineno, line in enumerate(fh, 1):
-                if _COLLECTIVE_RE.search(line):
-                    offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    offenders = _findings([SRC], "RT001")
     assert not offenders, (
         "jax.lax collectives must route through runtime.collectives "
-        "(the telemetry/backends choke point):\n" + "\n".join(offenders))
+        "(the telemetry/backends choke point):\n"
+        + "\n".join(f.format() for f in offenders))
 
 
 def test_no_direct_shard_map_outside_runtime():
     """Companion invariant (runtime/__init__ docstring): only the runtime
-    layer may call shard_map, any spelling."""
-    pat = re.compile(r"^\s*(from|import)\s+[\w.]*shard_map"
-                     r"|^\s*from\s+[\w.]+\s+import\s+.*\bshard_map\b")
-    offenders = []
-    for path in _py_files():
-        rel = os.path.relpath(path, SRC)
-        if rel.startswith("runtime" + os.sep):
-            continue
-        with open(path, encoding="utf-8") as fh:
-            for lineno, line in enumerate(fh, 1):
-                if pat.search(line):
-                    offenders.append(f"{rel}:{lineno}: {line.strip()}")
-    assert not offenders, "\n".join(offenders)
+    layer may import/call shard_map, any spelling."""
+    offenders = _findings([SRC], "RT002")
+    assert not offenders, "\n".join(f.format() for f in offenders)
+
+
+def test_no_lint_errors_anywhere():
+    """The full registry over the linted tree: src/repro and the dist
+    programs carry zero error-severity findings (warn rules like W100
+    may report — they never gate)."""
+    paths = [SRC, os.path.join(REPO, "tests", "dist_progs")]
+    errors = [f for f in lint.lint_paths(paths) if f.severity == "error"]
+    assert not errors, "\n".join(f.format() for f in errors)
+
+
+# ---------------------------------------------------------------------------
+# regression: the spellings the retired line regex was blind to
+# ---------------------------------------------------------------------------
+
+#: The retired check, verbatim — kept only to prove what it misses.
+_OLD_COLLECTIVE_RE = re.compile(
+    r"\blax\.(psum|pmean|pmax|pmin|all_gather|all_to_all|ppermute|"
+    r"psum_scatter|axis_index|axis_size)\s*\(")
+
+
+@pytest.mark.parametrize("fixture", [
+    "bad_from_import.py",   # from jax.lax import all_to_all
+    "bad_alias_import.py",  # import jax.lax as _l; _l.psum(...)
+])
+def test_rt001_catches_spellings_the_old_regex_missed(fixture):
+    path = os.path.join(FIXTURES, fixture)
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    assert not any(_OLD_COLLECTIVE_RE.search(line)
+                   for line in text.splitlines()), \
+        "fixture no longer demonstrates the regex blind spot"
+    assert _findings([path], "RT001"), \
+        f"RT001 must flag {fixture} (the linter's reason to exist)"
+
+
+def test_rt001_still_catches_the_attribute_spelling():
+    """Sanity: the one spelling the old regex did catch is not lost."""
+    path = os.path.join(FIXTURES, "bad_attr_call.py")
+    with open(path, encoding="utf-8") as fh:
+        assert any(_OLD_COLLECTIVE_RE.search(line) for line in fh)
+    assert _findings([path], "RT001")
+
+
+def test_every_fixture_trips_its_rule():
+    """scripts/lint_dist.py must exit nonzero on the seeded-bad tree —
+    each fixture file produces at least one error finding, and the per-
+    file rules match the README table."""
+    expected = {
+        "bad_from_import.py": "RT001",
+        "bad_alias_import.py": "RT001",
+        "bad_attr_call.py": "RT001",
+        "bad_shard_map.py": "RT002",
+        "bad_multihost.py": "RT005",
+        os.path.join("core", "bad_missing_mirror.py"): "RT003",
+        os.path.join("core", "bad_scan_no_loop_scope.py"): "RT004",
+    }
+    findings = [f for f in lint.lint_paths([FIXTURES])
+                if f.severity == "error"]
+    by_file = {}
+    for f in findings:
+        by_file.setdefault(os.path.relpath(f.path, FIXTURES), set()).add(
+            f.rule)
+    for rel, rule in expected.items():
+        assert rule in by_file.get(rel, set()), \
+            f"{rel}: expected {rule}, got {sorted(by_file.get(rel, []))}"
+
+
+def test_lint_cli_exit_codes():
+    """The CLI contract the ci.sh lint stage relies on: nonzero on the
+    fixtures, zero on the real tree."""
+    import subprocess
+
+    cli = os.path.join(REPO, "scripts", "lint_dist.py")
+    bad = subprocess.run([sys.executable, cli, FIXTURES],
+                         capture_output=True, text=True)
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    good = subprocess.run([sys.executable, cli],
+                          capture_output=True, text=True)
+    assert good.returncode == 0, good.stdout + good.stderr
 
 
 def test_engine_collectives_are_module_routed():

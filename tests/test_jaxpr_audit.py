@@ -1,0 +1,272 @@
+"""Unit tests for the trace-time jaxpr collective audit
+(:mod:`repro.analysis.jaxpr_audit`) on small synthetic programs — the
+walk (sub-jaxprs, scan multipliers, while detection), the ledger diff
+in both directions, and the constraint-backend checks.  Full four-mode
+× two-backend engine coverage runs on 8 forced devices in
+tests/dist_progs/check_telemetry.py (slow lane + ci.sh).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import jaxpr_audit as A
+from repro.runtime import collectives as C
+from repro.runtime import telemetry as T
+from repro.runtime.smap import smap
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="audit unit tests want >=4 forced host devices")
+
+N = len(jax.devices())
+AXIS = "model"
+
+
+def _mesh():
+    return jax.make_mesh((N,), (AXIS,))
+
+
+def _traced(body, in_specs, out_specs, grad=False):
+    """(jaxpr, ledger) of body smapped over the test mesh."""
+    f = smap(body, _mesh(), in_specs, out_specs)
+    if grad:
+        g = jax.value_and_grad(lambda x: f(x))
+    else:
+        g = f
+    x = jnp.ones((8 * N, 4), jnp.float32)
+    with T.collect_comm() as ledger:
+        jxp = jax.make_jaxpr(g)(x)
+    return jxp, ledger
+
+
+# ---------------------------------------------------------------------------
+# the walk
+# ---------------------------------------------------------------------------
+
+def test_counts_forward_collective():
+    jxp, _ = _traced(lambda x: C.all_gather(x, AXIS, mirror=False),
+                     P(AXIS), P())
+    counts = A.collective_counts(jxp)
+    assert counts == {("all_gather", AXIS, "float32"): 1.0}
+
+
+def test_counts_autodiff_mirror_as_transposed_primitive():
+    jxp, _ = _traced(
+        lambda x: C.all_gather(x, AXIS, mirror=True).sum(),
+        P(AXIS), P(), grad=True)
+    counts = A.collective_counts(jxp)
+    # forward all_gather + its transpose (reduce_scatter → psum_scatter)
+    assert counts[("all_gather", AXIS, "float32")] == 1.0
+    assert counts[("psum_scatter", AXIS, "float32")] == 1.0
+
+
+def test_scan_trip_multiplier():
+    perm = [(i, (i + 1) % N) for i in range(N)]
+
+    def body(x):
+        def step(c, _):
+            return C.ppermute(c, AXIS, perm=perm, mirror=False), None
+        with T.loop_scope(3):
+            out, _ = jax.lax.scan(step, x, None, length=3)
+        return out
+
+    jxp, ledger = _traced(body, P(AXIS), P(AXIS))
+    assert A.collective_counts(jxp) == {("ppermute", AXIS, "float32"): 3.0}
+    assert not A.audit(jxp, ledger)
+
+
+def test_nested_scan_multipliers_compose():
+    perm = [(i, (i + 1) % N) for i in range(N)]
+
+    def body(x):
+        def inner(c, _):
+            return C.ppermute(c, AXIS, perm=perm, mirror=False), None
+
+        def outer(c, _):
+            with T.loop_scope(2):
+                out, _ = jax.lax.scan(inner, c, None, length=2)
+            return out, None
+
+        with T.loop_scope(3):
+            out, _ = jax.lax.scan(outer, x, None, length=3)
+        return out
+
+    jxp, ledger = _traced(body, P(AXIS), P(AXIS))
+    assert A.collective_counts(jxp) == {("ppermute", AXIS, "float32"): 6.0}
+    assert not A.audit(jxp, ledger)
+
+
+def test_while_body_collective_is_unbounded_finding():
+    perm = [(i, (i + 1) % N) for i in range(N)]
+
+    def body(x):
+        def cond(c):
+            return c[0].sum() < 100.0
+
+        def step(c):
+            return (jax.lax.ppermute(  # lint-ok: RT001 negative test
+                c[0], AXIS, perm=perm),)
+        return jax.lax.while_loop(cond, step, (x,))[0]
+
+    jxp, ledger = _traced(body, P(AXIS), P(AXIS))
+    findings = A.audit(jxp, ledger)
+    assert [f.kind for f in findings] == ["unbounded_loop"]
+    # and the unbounded collective is NOT double-reported as unledgered
+    assert A.collective_counts(jxp) == {}
+
+
+def test_empty_axes_psum_skipped():
+    # value_and_grad of a plain jit fn emits psum{axes=()} equations;
+    # they move no bytes and must not show up
+    jxp = jax.make_jaxpr(jax.value_and_grad(
+        lambda x: (x * x).sum()))(jnp.ones((4,)))
+    assert A.collective_counts(jxp) == {}
+
+
+# ---------------------------------------------------------------------------
+# the diff
+# ---------------------------------------------------------------------------
+
+def test_clean_program_audits_clean():
+    jxp, ledger = _traced(
+        lambda x: C.all_to_all(x, AXIS, split_axis=0, concat_axis=1,
+                               mirror=True).sum(),
+        P(AXIS), P(), grad=True)
+    assert A.audit(jxp, ledger) == []
+    A.assert_clean(jxp, ledger, tag="unit")    # and the raising form
+
+
+def test_unledgered_collective_detected():
+    perm = [(i, (i + 1) % N) for i in range(N)]
+    jxp, ledger = _traced(
+        lambda x: jax.lax.ppermute(  # lint-ok: RT001 negative test
+            x, AXIS, perm=perm),
+        P(AXIS), P(AXIS))
+    findings = A.audit(jxp, ledger)
+    assert [f.kind for f in findings] == ["unledgered_collective"]
+    assert findings[0].op == "ppermute" and findings[0].actual == 1.0
+    with pytest.raises(AssertionError, match="unledgered_collective"):
+        A.assert_clean(jxp, ledger, tag="unit")
+
+
+def test_missing_loop_scope_shows_as_undercount():
+    perm = [(i, (i + 1) % N) for i in range(N)]
+
+    def body(x):
+        def step(c, _):
+            return C.ppermute(c, AXIS, perm=perm, mirror=False), None
+        out, _ = jax.lax.scan(  # lint-ok: RT004 negative test
+            step, x, None, length=3)
+        return out
+
+    jxp, ledger = _traced(body, P(AXIS), P(AXIS))
+    findings = A.audit(jxp, ledger)
+    assert [f.kind for f in findings] == ["unledgered_collective"]
+    assert findings[0].expected == 1.0 and findings[0].actual == 3.0
+
+
+def test_phantom_ledger_entry_detected():
+    jxp, ledger = _traced(lambda x: C.all_gather(x, AXIS, mirror=False),
+                          P(AXIS), P())
+    fake = T.CommLedger.from_dict(ledger.as_dict())
+    fake.add("ppermute", AXIS, "float32", payload=1.0, wire=1.0)
+    findings = A.audit(jxp, fake)
+    assert [f.kind for f in findings] == ["phantom_ledger_entry"]
+    assert findings[0].op == "ppermute"
+
+
+def test_wrong_mirror_declaration_is_phantom():
+    # mirror=True on a non-differentiated path: ledger promises a
+    # backward psum_scatter the program never contains
+    jxp, ledger = _traced(lambda x: C.all_gather(x, AXIS, mirror=True),
+                          P(AXIS), P())   # no grad
+    findings = A.audit(jxp, ledger)
+    assert [f.kind for f in findings] == ["phantom_ledger_entry"]
+    assert findings[0].op == "psum_scatter"
+
+
+def test_backward_param_psums_tolerated():
+    # psum is one-directional: jaxpr-side surplus (grad all-reduces with
+    # no forward counterpart) is fine...
+    def body(x):
+        return C.psum(x.sum(), AXIS)
+
+    jxp, ledger = _traced(body, P(AXIS), P(), grad=True)
+    assert A.audit(jxp, ledger) == []
+    # ...but ledger-side surplus is still a phantom
+    fake = T.CommLedger.from_dict(ledger.as_dict())
+    fake.add("psum", AXIS, "float32", payload=4.0, wire=8.0, calls=5.0)
+    assert [f.kind for f in A.audit(jxp, fake)] == ["phantom_ledger_entry"]
+
+
+# ---------------------------------------------------------------------------
+# constraint backend
+# ---------------------------------------------------------------------------
+
+def test_constraint_program_with_collective_flagged():
+    jxp, ledger = _traced(lambda x: C.all_gather(x, AXIS, mirror=False),
+                          P(AXIS), P())
+    findings = A.audit(jxp, ledger, backend="constraint")
+    assert any(f.kind == "collective_in_constraint_program"
+               for f in findings)
+
+
+def test_constraint_anchored_transitions_verified():
+    from repro.runtime import constraint as K
+
+    mesh = _mesh()
+    dst, src = P(None, AXIS), P(AXIS)
+
+    def body(x):
+        return K.layout_cast(x, dst, src, mirror=False)
+
+    x = jnp.ones((8 * N, 4), jnp.float32)
+    with K.mesh_context(mesh):
+        with T.collect_comm() as ledger:
+            jxp = jax.make_jaxpr(body)(x)
+    recs = ledger.transitions()
+    assert len(recs) == 1 and recs[0].anchored
+    assert recs[0].src_spec == (AXIS,)
+    assert recs[0].dst_spec == (None, AXIS)
+    A.assert_clean(jxp, ledger, backend="constraint", tag="unit")
+
+    # drop the program's constraints → missing_constraint findings
+    jxp_bare = jax.make_jaxpr(lambda v: v * 1.0)(x)
+    findings = A.audit(jxp_bare, ledger, backend="constraint")
+    assert {f.kind for f in findings} == {"missing_constraint"}
+    assert len(findings) == 2      # src and dst side
+
+
+def test_unanchored_note_transition_not_required():
+    # raw constrain-pair sites record anchored=False — audit must not
+    # demand constraint equations for them
+    from repro.runtime import constraint as K
+
+    mesh = _mesh()
+    x = jnp.ones((8 * N, 4), jnp.float32)
+    with K.mesh_context(mesh):
+        with T.collect_comm() as ledger:
+            K.note_transition(x, P(AXIS), P(None, AXIS), mirror=False)
+    jxp = jax.make_jaxpr(lambda v: v * 1.0)(x)
+    assert A.audit(jxp, ledger, backend="constraint") == []
+
+
+# ---------------------------------------------------------------------------
+# plumbing
+# ---------------------------------------------------------------------------
+
+def test_finding_format_mentions_counts():
+    f = A.AuditFinding("unledgered_collective", "ppermute", AXIS,
+                       2.0, 3.0, "extra")
+    s = f.format()
+    assert "ledger=2" in s and "jaxpr=3" in s and "extra" in s
+
+
+def test_expected_from_ledger_mirror_mapping():
+    led = T.CommLedger()
+    led.add("all_gather", AXIS, "float32", payload=1.0, wire=1.0,
+            mirror=True)
+    exp = A.expected_from_ledger(led)
+    assert exp[("all_gather", AXIS, "float32")] == 1.0
+    assert exp[("psum_scatter", AXIS, "float32")] == 1.0

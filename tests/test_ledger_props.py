@@ -1,0 +1,198 @@
+"""Round-trip and algebraic properties of the CommLedger serialization
+(``as_dict``/``from_dict``) and the coordinator-side ``merge_from`` —
+the path multihost telemetry travels (each process serializes its
+trace-time ledger; the coordinator rebuilds and merges, PR 5).
+
+Deterministic cases always run; the randomized sweeps additionally run
+when the optional hypothesis dep is installed (same convention as
+tests/test_properties.py, but without skipping the whole module — the
+deterministic half is the tier-1 coverage).
+"""
+import dataclasses
+
+import pytest
+
+from repro.runtime import telemetry as T
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="randomized sweep needs optional "
+    "hypothesis dep (deterministic cases cover the invariants)")
+
+OPS = ("psum", "all_gather", "all_to_all", "ppermute", "psum_scatter")
+
+
+def _ledger(entries):
+    """entries: [(op, axes, dtype, payload, wire, calls, mirror)]"""
+    led = T.CommLedger()
+    for op, axes, dtype, payload, wire, calls, mirror in entries:
+        led.add(op, axes, dtype, payload=payload, wire=wire,
+                calls=calls, mirror=mirror)
+    return led
+
+
+# Integer-valued counters so merge-associativity asserts exactly (float
+# addition of integers this small is exact in binary64).
+_SAMPLE_A = [
+    ("all_to_all", "model", "float32", 1024.0, 896.0, 4.0, True),
+    ("all_gather", ("model", "data"), "float32", 64.0, 448.0, 2.0, False),
+    ("psum", "data", "float32", 4.0, 6.0, 1.0, False),
+]
+_SAMPLE_B = [
+    ("all_to_all", "model", "float32", 512.0, 448.0, 2.0, False),
+    ("ppermute", "model", "bfloat16", 256.0, 256.0, 8.0, True),
+]
+_SAMPLE_C = [
+    ("psum_scatter", "data", "float32", 128.0, 896.0, 1.0, False),
+    ("psum", "data", "float32", 4.0, 6.0, 3.0, False),
+]
+
+
+def _totals(led):
+    """The scalar totals merge must be linear over."""
+    return (led.wire_bytes(), led.wire_bytes(train=True),
+            led.payload_bytes(), led.call_count(),
+            led.call_count(train=True), len(led))
+
+
+# ---------------------------------------------------------------------------
+# round-trip identity
+# ---------------------------------------------------------------------------
+
+def test_round_trip_identity_deterministic():
+    led = _ledger(_SAMPLE_A + _SAMPLE_B)
+    back = T.CommLedger.from_dict(led.as_dict())
+    assert back.as_dict() == led.as_dict()
+    assert back.entries() == led.entries()
+
+
+def test_round_trip_preserves_every_counter_field():
+    led = _ledger(_SAMPLE_A)
+    back = T.CommLedger.from_dict(led.as_dict())
+    for key, entry in led.entries().items():
+        assert dataclasses.asdict(back.entries()[key]) == \
+            dataclasses.asdict(entry)
+
+
+def test_round_trip_multi_axis_keys():
+    # '+'-joined labels survive the '|' key encoding
+    led = _ledger([("psum", ("model", "data"), "float32",
+                    8.0, 12.0, 1.0, False)])
+    back = T.CommLedger.from_dict(led.as_dict())
+    assert back.call_count("psum", "model") == 1.0
+    assert back.call_count("psum", "data") == 1.0
+
+
+def test_from_dict_rejects_malformed_keys():
+    with pytest.raises(T.TelemetryError, match="malformed"):
+        T.CommLedger.from_dict({"no-pipes-here": {}})
+
+
+# ---------------------------------------------------------------------------
+# merge algebra over the totals
+# ---------------------------------------------------------------------------
+
+def test_merge_totals_are_sums():
+    a, b = _ledger(_SAMPLE_A), _ledger(_SAMPLE_B)
+    merged = T.CommLedger().merge_from(a).merge_from(b)
+    for i, (ta, tb, tm) in enumerate(zip(_totals(a), _totals(b),
+                                         _totals(merged))):
+        if i == len(_totals(a)) - 1:      # len: union of keys, not sum
+            continue
+        assert tm == ta + tb, i
+
+
+def test_merge_commutative():
+    ab = T.CommLedger().merge_from(_ledger(_SAMPLE_A)) \
+                       .merge_from(_ledger(_SAMPLE_B))
+    ba = T.CommLedger().merge_from(_ledger(_SAMPLE_B)) \
+                       .merge_from(_ledger(_SAMPLE_A))
+    assert ab.as_dict() == ba.as_dict()
+
+
+def test_merge_associative():
+    a, b, c = _SAMPLE_A, _SAMPLE_B, _SAMPLE_C
+    left = T.CommLedger().merge_from(
+        T.CommLedger().merge_from(_ledger(a)).merge_from(_ledger(b))
+    ).merge_from(_ledger(c))
+    right = T.CommLedger().merge_from(_ledger(a)).merge_from(
+        T.CommLedger().merge_from(_ledger(b)).merge_from(_ledger(c)))
+    assert left.as_dict() == right.as_dict()
+
+
+def test_merge_identity_element():
+    a = _ledger(_SAMPLE_A)
+    merged = T.CommLedger().merge_from(a).merge_from(T.CommLedger())
+    assert merged.as_dict() == a.as_dict()
+
+
+def test_merge_does_not_mutate_source():
+    a, b = _ledger(_SAMPLE_A), _ledger(_SAMPLE_B)
+    before = b.as_dict()
+    a.merge_from(b)
+    assert b.as_dict() == before
+
+
+def test_transitions_are_trace_local():
+    # TransitionRecords are evidence for the jaxpr audit of THIS trace —
+    # they do not serialize and do not merge
+    led = T.CommLedger()
+    led.add_transition(T.TransitionRecord(
+        (64, 8), "float32", ("model",), (None, "model"),
+        calls=1.0, mirror=True, anchored=True))
+    assert "transitions" not in str(led.as_dict())
+    back = T.CommLedger.from_dict(led.as_dict())
+    assert back.transitions() == ()
+    other = T.CommLedger().merge_from(led)
+    assert other.transitions() == ()
+    assert led.transitions()[0].anchored
+
+
+# ---------------------------------------------------------------------------
+# randomized sweeps (optional hypothesis)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _entry = st.tuples(
+        st.sampled_from(OPS),
+        st.sampled_from(["model", "data", ("model", "data")]),
+        st.sampled_from(["float32", "bfloat16"]),
+        st.integers(0, 2**20).map(float),      # payload
+        st.integers(0, 2**20).map(float),      # wire
+        st.integers(1, 64).map(float),         # calls
+        st.booleans())
+    _entries = st.lists(_entry, max_size=8)
+
+    @needs_hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(_entries)
+    def test_round_trip_identity_random(entries):
+        led = _ledger(entries)
+        assert T.CommLedger.from_dict(led.as_dict()).as_dict() == \
+            led.as_dict()
+
+    @needs_hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(_entries, _entries)
+    def test_merge_commutative_random(ea, eb):
+        ab = T.CommLedger().merge_from(_ledger(ea)).merge_from(_ledger(eb))
+        ba = T.CommLedger().merge_from(_ledger(eb)).merge_from(_ledger(ea))
+        assert ab.as_dict() == ba.as_dict()
+
+    @needs_hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(_entries, _entries, _entries)
+    def test_merge_associative_random(ea, eb, ec):
+        def L(e):
+            return _ledger(e)
+        left = T.CommLedger().merge_from(
+            T.CommLedger().merge_from(L(ea)).merge_from(L(eb))
+        ).merge_from(L(ec))
+        right = T.CommLedger().merge_from(L(ea)).merge_from(
+            T.CommLedger().merge_from(L(eb)).merge_from(L(ec)))
+        assert left.as_dict() == right.as_dict()

@@ -1,0 +1,376 @@
+"""Unit tests for the distributed-discipline AST linter
+(:mod:`repro.analysis.lint`) — rule-by-rule on in-memory sources, plus
+the resolution machinery (aliases, relative imports, suppression) the
+rules share.  The fixture-driven CLI/exit-code contract lives in
+tests/test_collectives_chokepoint.py.
+"""
+import os
+import textwrap
+
+from repro.analysis import lint
+
+
+def _rules(text, path="src/repro/gnn/x.py", module=None):
+    src = textwrap.dedent(text)
+    return sorted({f.rule for f in lint.lint_text(src, path, module)})
+
+
+def _lint(text, path="src/repro/gnn/x.py", module=None):
+    return lint.lint_text(textwrap.dedent(text), path, module)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_complete_and_unique():
+    ids = [r.id for r in lint.all_rules()]
+    assert ids == sorted(ids) and len(ids) == len(set(ids))
+    assert {"RT001", "RT002", "RT003", "RT004", "RT005",
+            "W100"} <= set(ids)
+    for r in lint.all_rules():
+        assert r.severity in ("error", "warn")
+        assert r.invariant
+
+
+# ---------------------------------------------------------------------------
+# RT001 — every spelling resolves
+# ---------------------------------------------------------------------------
+
+def test_rt001_from_import():
+    assert _rules("""
+        from jax.lax import all_to_all
+        def f(x, a):
+            return all_to_all(x, a, split_axis=0, concat_axis=0)
+    """) == ["RT001"]
+
+
+def test_rt001_alias_import():
+    assert _rules("""
+        import jax.lax as _l
+        def f(x, a):
+            return _l.psum(x, a)
+    """) == ["RT001"]
+
+
+def test_rt001_attribute_chain():
+    assert _rules("""
+        import jax
+        def f(x, a):
+            return jax.lax.psum(x, a)
+    """) == ["RT001"]
+
+
+def test_rt001_from_jax_import_lax():
+    assert _rules("""
+        from jax import lax
+        def f(x, a):
+            return lax.ppermute(x, a, perm=[(0, 1)])
+    """) == ["RT001"]
+
+
+def test_rt001_allowed_in_chokepoint_module():
+    assert _rules("""
+        import jax
+        def f(x, a):
+            return jax.lax.psum(x, a)
+    """, path="src/repro/runtime/collectives.py") == []
+
+
+def test_rt001_ignores_non_collective_lax():
+    assert _rules("""
+        import jax
+        def f(x):
+            return jax.lax.scan(lambda c, _: (c, None), x, None, length=2)
+    """) == []
+
+
+def test_rt001_ignores_unimported_names():
+    # a local helper named psum is not jax.lax.psum
+    assert _rules("""
+        def psum(x, a):
+            return x
+        def f(x, a):
+            return psum(x, a)
+    """) == []
+
+
+def test_rt001_runtime_collectives_relative_import_ok():
+    # engine code importing the *wrapper* is the sanctioned spelling
+    assert _rules("""
+        from repro.runtime import collectives as C
+        def f(x, a):
+            return C.psum(x, a)
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# RT002
+# ---------------------------------------------------------------------------
+
+def test_rt002_from_import():
+    assert _rules("""
+        from jax.experimental.shard_map import shard_map
+    """) == ["RT002"]
+
+
+def test_rt002_attribute_use():
+    assert _rules("""
+        import jax
+        def f(g, mesh, s):
+            return jax.shard_map(g, mesh=mesh, in_specs=s, out_specs=s)
+    """) == ["RT002"]
+
+
+def test_rt002_allowed_under_runtime():
+    assert _rules("""
+        from jax.experimental.shard_map import shard_map
+    """, path="src/repro/runtime/smap.py") == []
+
+
+# ---------------------------------------------------------------------------
+# RT003 — explicit mirror= in engine code
+# ---------------------------------------------------------------------------
+
+_RT003_SRC = """
+    from repro.runtime import collectives as C
+    def f(h, a):
+        return C.all_gather(h, a{suffix})
+"""
+
+
+def test_rt003_missing_mirror_flagged():
+    assert "RT003" in _rules(_RT003_SRC.format(suffix=""),
+                             path="src/repro/core/x.py")
+
+
+def test_rt003_explicit_mirror_ok():
+    for suffix in (", mirror=True", ", mirror=False"):
+        assert _rules(_RT003_SRC.format(suffix=suffix),
+                      path="src/repro/core/x.py") == []
+
+
+def test_rt003_psum_exempt():
+    # psum's documented convention is mirror=False; no declaration needed
+    assert _rules("""
+        from repro.runtime import collectives as C
+        def f(h, a):
+            return C.psum(h, a)
+    """, path="src/repro/core/x.py") == []
+
+
+def test_rt003_only_engine_segments():
+    # the runtime layer owns the defaults; scripts aren't engine code
+    for path in ("src/repro/runtime/collectives.py",
+                 "src/repro/launch/dryrun.py"):
+        assert _rules(_RT003_SRC.format(suffix=""), path=path) == []
+
+
+def test_rt003_relative_import_resolves():
+    # `from ..runtime import collectives as C` inside repro.core
+    assert "RT003" in _rules("""
+        from ..runtime import collectives as C
+        def f(h, a):
+            return C.replica_gather(h, a)
+    """, path="src/repro/core/x.py")
+
+
+def test_rt003_layout_cast_requires_mirror():
+    assert "RT003" in _rules("""
+        from repro.runtime.constraint import layout_cast
+        def f(h, spec, src):
+            return layout_cast(h, spec, src)
+    """, path="src/repro/core/x.py")
+
+
+# ---------------------------------------------------------------------------
+# RT004 — loop_scope around communicating loops
+# ---------------------------------------------------------------------------
+
+_SCAN_SRC = """
+    import jax
+    from repro.runtime import collectives as C
+    from repro.runtime import telemetry as T
+    def f(k, perm, a, n):
+        def step(c, _):
+            return C.ppermute(c, a, perm=perm, mirror=True), None
+        {body}
+        return out
+"""
+
+
+def test_rt004_unscoped_scan_flagged():
+    src = _SCAN_SRC.format(
+        body="out, _ = jax.lax.scan(step, k, None, length=n)")
+    assert _rules(src) == ["RT004"]
+
+
+def test_rt004_scoped_scan_ok():
+    src = _SCAN_SRC.format(body=(
+        "with T.loop_scope(n):\n"
+        "            out, _ = jax.lax.scan(step, k, None, length=n)"))
+    assert _rules(src) == []
+
+
+def test_rt004_checkpoint_wrapper_unwrapped():
+    src = _SCAN_SRC.format(body=(
+        "out, _ = jax.lax.scan(jax.checkpoint(step), k, None, length=n)"))
+    assert _rules(src) == ["RT004"]
+
+
+def test_rt004_non_communicating_scan_ok():
+    assert _rules("""
+        import jax
+        def f(k, n):
+            def step(c, _):
+                return c + 1, None
+            out, _ = jax.lax.scan(step, k, None, length=n)
+            return out
+    """) == []
+
+
+def test_rt004_fori_and_while():
+    base = """
+        import jax
+        from repro.runtime import collectives as C
+        def f(k, a):
+            def body({args}):
+                return C.psum({ret}, a)
+            return jax.lax.{fn}
+    """
+    fori = base.format(args="i, c", ret="c", fn="fori_loop(0, 4, body, k)")
+    assert _rules(fori) == ["RT004"]
+    wl = base.format(args="c", ret="c",
+                     fn="while_loop(lambda c: c.sum() > 0, body, k)")
+    assert _rules(wl) == ["RT004"]
+
+
+def test_rt004_indirect_helper_call():
+    # the loop body calls a local fn that communicates — still flagged
+    assert _rules("""
+        import jax
+        from repro.runtime import collectives as C
+        def hop(c, a, perm):
+            return C.ppermute(c, a, perm=perm, mirror=True)
+        def f(k, perm, a, n):
+            def step(c, _):
+                return hop(c, a, perm), None
+            out, _ = jax.lax.scan(step, k, None, length=n)
+            return out
+    """) == ["RT004"]
+
+
+# ---------------------------------------------------------------------------
+# RT005
+# ---------------------------------------------------------------------------
+
+def test_rt005_env_read_spellings():
+    for read in ('os.environ["NUM_PROCESSES"]',
+                 'os.environ.get("NUM_PROCESSES")',
+                 'os.getenv("COORDINATOR_ADDRESS")'):
+        assert _rules(f"""
+            import os
+            def f():
+                return {read}
+        """) == ["RT005"], read
+
+
+def test_rt005_initialize_call():
+    assert _rules("""
+        import jax
+        def f():
+            jax.distributed.initialize()
+    """) == ["RT005"]
+
+
+def test_rt005_non_contract_key_ok():
+    assert _rules("""
+        import os
+        def f():
+            return os.environ.get("XLA_FLAGS")
+    """) == []
+
+
+def test_rt005_writes_are_not_reads():
+    # launchers *set* the contract for children; only reads are owned
+    assert _rules("""
+        import os
+        def f():
+            os.environ["NUM_PROCESSES"] = "2"
+    """) == []
+
+
+def test_rt005_allowed_in_distributed_module():
+    assert _rules("""
+        import os
+        def f():
+            return os.environ.get("NUM_PROCESSES")
+    """, path="src/repro/runtime/distributed.py") == []
+
+
+# ---------------------------------------------------------------------------
+# suppression + drivers
+# ---------------------------------------------------------------------------
+
+def test_suppression_matching_rule():
+    assert _rules("""
+        import jax
+        def f(x, a):
+            return jax.lax.psum(x, a)  # lint-ok: RT001 negative test
+    """) == []
+
+
+def test_suppression_other_rule_does_not_hide():
+    assert _rules("""
+        import jax
+        def f(x, a):
+            return jax.lax.psum(x, a)  # lint-ok: RT005
+    """) == ["RT001"]
+
+
+def test_suppression_bare_comment():
+    assert _rules("""
+        import jax
+        def f(x, a):
+            return jax.lax.psum(x, a)  # lint-ok
+    """) == []
+
+
+def test_module_name_for():
+    f = lint.module_name_for
+    assert f("src/repro/core/tp.py") == "repro.core.tp"
+    assert f("src/repro/core/__init__.py") == "repro.core"
+    assert f("scripts/lint_dist.py") is None
+
+
+def test_lint_paths_syntax_error_is_a_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    ok = tmp_path / "ok.py"
+    ok.write_text("import jax\n\n\ndef f(x, a):\n"
+                  "    return jax.lax.psum(x, a)\n")
+    findings = lint.lint_paths([str(tmp_path)])
+    rules = {f.rule for f in findings}
+    assert "E999" in rules          # reported, not raised
+    assert "RT001" in rules         # and the rest still linted
+
+
+def test_w100_reports_unreferenced_stub(tmp_path):
+    src = tmp_path / "src" / "repro"
+    cfg = src / "configs"
+    os.makedirs(cfg)
+    for d in (src, cfg):
+        (d / "__init__.py").write_text("")
+    (cfg / "dead_model.py").write_text("CONFIG = {}\n")
+    (cfg / "live_model.py").write_text("CONFIG = {}\n")
+    (src / "user.py").write_text(
+        "from repro.configs import live_model  # noqa: F401\n")
+    findings = [f for f in lint.lint_paths([str(src)]) if f.rule == "W100"]
+    assert [os.path.basename(f.path) for f in findings] == ["dead_model.py"]
+    assert all(f.severity == "warn" for f in findings)
+
+
+def test_finding_format_and_dict():
+    f = lint.LintFinding("RT001", "a.py", 3, 7, "msg")
+    assert f.format() == "a.py:3:7: RT001 [error] msg"
+    assert f.as_dict()["severity"] == "error"
