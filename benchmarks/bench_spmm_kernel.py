@@ -1,20 +1,27 @@
-"""Kernel microbenchmark: Pallas block-sparse SpMM (interpret mode) vs the
-segment-sum path — correctness-at-scale plus arithmetic-intensity report.
+"""Pallas block-sparse SpMM: kernel microbenchmark + end-to-end epoch A/B.
+
+Two tiers, one JSON (``BENCH_spmm_kernel.json``):
+
+* kernel micro — interpret-mode Pallas vs the segment-sum path on one
+  full-graph aggregation (correctness + arithmetic-intensity report);
+* epoch A/B — full decoupled-GCN training epochs through
+  ``make_tp_train_fns`` with each pluggable aggregation backend
+  (``repro.core.agg``: segment / blocksparse / dense) at two power-law
+  sparsity levels, with the structural columns that matter on TPU:
+  nnzb, block density, tile FLOPs (2·nnzb·bs²·D) vs the segment path's
+  O(E·D) gather/scatter FLOPs (2·E·D).
+
 (On CPU the interpret-mode timing is NOT indicative of TPU perf; the
-derived column reports the structural quantities that matter on TPU.)
+derived columns report the structural quantities that matter there.)
 """
 from __future__ import annotations
 
 import time
 
-from .common import emit, write_json
+from .common import emit, time_epochs, write_json
 
 
-def main():
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
-
+def _micro(jax, jnp, np):
     from repro.gnn import layers as L
     from repro.graph import block_sparse, sbm_power_law
     from repro.kernels.spmm import aggregate_pallas, block_sparse_dev
@@ -51,6 +58,68 @@ def main():
          f"nnzb={bsg.nnzb};density={bsg.density():.3f};"
          f"tile_flops={flops:.3e};vmem_per_step_kb={vmem_tile_kb:.0f}")
 
+
+def _epoch_ab(jax, jnp, np):
+    """Epoch-level A/B of the pluggable aggregation backends."""
+    from repro import optim
+    from repro.core import decouple as D
+    from repro.core.agg import AGG_BACKENDS
+    from repro.gnn import models as M
+    from repro.graph import sbm_power_law
+    from repro.runtime import tp_mesh
+
+    # bs=32 keeps the tile grid fine enough that the two power-law
+    # degrees land at visibly different block densities
+    n, feat, hidden, chunks, bs = 2048, 64, 32, 4, 32
+    mesh = tp_mesh(1)
+    opt = optim.adamw(1e-2)
+    for avg_degree in (4, 16):
+        data = sbm_power_law(n=n, num_classes=8, feat_dim=feat,
+                             avg_degree=avg_degree, seed=7)
+        e = data.graph.e
+        seg_flops = 2.0 * e * hidden
+        losses = {}
+        for agg in AGG_BACKENDS:
+            bundle = D.prepare_bundle(data, n_workers=1, n_chunks=chunks,
+                                      agg=agg, agg_block_size=bs)
+            cfg = D.padded_gnn_config(data, bundle, model="gcn",
+                                      hidden_dim=hidden, num_layers=2)
+            params = M.init_params(jax.random.PRNGKey(0), cfg)
+            step, _ = D.make_tp_train_fns(cfg, bundle, mesh, opt,
+                                          mode="decoupled")
+            state = [params, opt.init(params)]
+
+            def one_epoch():
+                state[0], state[1], loss = step(state[0], state[1])
+                return loss
+
+            # 1+2 epochs: interpret-mode tile scans are slow on CPU and
+            # the structural columns, not the timing, are the signal here
+            t = time_epochs(one_epoch, warmup=1, iters=2)
+            losses[agg] = float(one_epoch())
+            if agg == "blocksparse":
+                plan = bundle.graph.bsp
+                nnzb = int(np.prod(plan.blocks.shape[:2]))
+                density = (nnzb * plan.bs * plan.bs
+                           / (chunks * plan.rows_padded * plan.cols_padded))
+                tile_flops = 2.0 * nnzb * plan.bs * plan.bs * hidden
+                derived = (f"nnzb={nnzb};density={density:.3f};"
+                           f"tile_flops={tile_flops:.3e};"
+                           f"segment_flops={seg_flops:.3e}")
+            else:
+                derived = f"edges={e};segment_flops={seg_flops:.3e}"
+            emit(f"epoch_gcn_{agg}_deg{avg_degree}", t * 1e6, derived)
+        spread = max(losses.values()) - min(losses.values())
+        assert spread < 1e-4, f"backend losses diverged: {losses}"
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    _micro(jax, jnp, np)
+    _epoch_ab(jax, jnp, np)
     write_json("spmm_kernel")
 
 

@@ -81,6 +81,14 @@ python -m pytest -q -m "not slow"
 
 python -m benchmarks.bench_comm_volume --telemetry-smoke
 
+# Aggregation-backend smoke (8 forced devices): decoupled GCN losses AND
+# grads must be identical (atol 1e-5) between the segment baseline and
+# the Pallas block-sparse backend, with the trace-time CommLedger
+# byte-identical and the blocksparse programs passing the tier-2 jaxpr
+# collective audit — the backend choice is pure local compute.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python tests/dist_progs/check_agg_backends.py --ci-smoke
+
 multihost_smoke
 
 if [[ "${1:-}" != "--fast" ]]; then

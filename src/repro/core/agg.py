@@ -1,0 +1,123 @@
+"""Pluggable aggregation backends for the TP and DP engines.
+
+The per-worker compute hot spot is full-graph aggregation ``Â @ Z`` on the
+feature slice (§3.1, §4.2).  NeutronTP's tensor layer does *all* its
+communication in the split/gather all-to-alls around that multiply, so the
+backend choice is pure local compute: the CommLedger, the §3.2 analytic
+formulas and the jaxpr collective audit are byte-identical across backends
+(asserted by ``tests/dist_progs/check_agg_backends.py``).
+
+Backends (selected in ``prepare_bundle``/``prepare_dp_bundle`` and
+overridable per loss/train factory):
+
+* ``"segment"``     — gather/scatter ``jax.ops.segment_sum`` (baseline).
+                      The only backend valid for GAT: its edge weights α
+                      are computed at runtime from the layer's features and
+                      cannot be baked into precomputed tiles, so the
+                      engines silently keep GAT on this path.
+* ``"blocksparse"`` — blocked-CSR Pallas SpMM (``repro.kernels.spmm``) on
+                      precomputed (bs × bs) tiles, with an exact custom VJP
+                      that multiplies the cotangent through the Âᵀ tiles.
+* ``"dense"``       — per-chunk dense (chunk_size × n) adjacency matmul.
+                      O(V²) memory: small graphs only, the upper anchor
+                      for the kernel benches.
+
+Static edge weights (GCN's normalized Â, scaled by γ in the decoupled
+propagation) are baked into the tiles / dense rows at prepare time; the γ
+scaling is applied as a scalar post-multiplier since γ·(Â@z) = (γÂ)@z.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph import format as gf
+from ..kernels import spmm as SP
+
+AGG_BACKENDS = ("segment", "blocksparse", "dense")
+
+
+def validate_backend(agg: str) -> str:
+    if agg not in AGG_BACKENDS:
+        raise ValueError(
+            f"unknown aggregation backend {agg!r}; expected one of "
+            f"{AGG_BACKENDS}")
+    return agg
+
+
+def resolve_choice(graph, agg: str | None) -> str:
+    """Factory-level backend choice against a prepared bundle's graph.
+
+    ``None`` → the backend the bundle was prepared with.  An explicit
+    choice must be satisfiable: ``"segment"`` always is (the chunked view
+    is always built); ``"blocksparse"``/``"dense"`` need the plans that
+    only ``prepare_*bundle(agg=...)`` builds."""
+    if agg is None:
+        return graph.agg
+    validate_backend(agg)
+    if agg == "blocksparse" and graph.bsp is None:
+        raise ValueError(
+            'agg="blocksparse" requested but the bundle carries no tile '
+            'plans — re-run prepare_bundle/prepare_dp_bundle with '
+            'agg="blocksparse"')
+    if agg == "dense" and graph.dense_adj is None:
+        raise ValueError(
+            'agg="dense" requested but the bundle carries no dense '
+            'adjacency — re-run prepare_bundle/prepare_dp_bundle with '
+            'agg="dense"')
+    return agg
+
+
+def build_chunk_plans(gp: gf.Graph, n_chunks: int, agg: str,
+                      bs: int):
+    """Host-side backend data for the TP chunk scan: per-chunk tile plans
+    (``"blocksparse"``) or per-chunk dense adjacency rows (``"dense"``).
+    Returns ``(bsp, dense_adj)`` with the unused slot ``None``."""
+    validate_backend(agg)
+    bsp = dense = None
+    if agg == "blocksparse":
+        bsp = SP.block_sparse_plan_dev(
+            gf.chunk_block_sparse(gp, n_chunks, bs=bs))
+    elif agg == "dense":
+        cs = -(-gp.n // n_chunks)
+        a = gp.dense_adjacency()
+        rows = np.zeros((n_chunks, cs, gp.n), np.float32)
+        for c in range(n_chunks):
+            lo, hi = min(gp.n, c * cs), min(gp.n, (c + 1) * cs)
+            rows[c, : hi - lo] = a[lo:hi]
+        dense = jnp.asarray(rows)
+    return bsp, dense
+
+
+def chunk_xs(graph, agg: str, w_chunk):
+    """The per-chunk ``lax.scan`` inputs for the chosen backend.
+
+    Segment threads the (src, dst_local, w) edge arrays; blocksparse
+    threads the stacked tile plan (the scan unstacks one plan instance
+    per chunk); dense threads the (C, chunk_size, n) adjacency rows."""
+    if agg == "blocksparse":
+        return graph.bsp
+    if agg == "dense":
+        return graph.dense_adj
+    cg = graph.chunked
+    return (cg.src, cg.dst_local,
+            cg.weight if w_chunk is None else w_chunk)
+
+
+def chunk_agg(agg: str, z, xs, chunk_size: int, scale: float = 1.0):
+    """One chunk's aggregation rows ``(chunk_size, d)`` for backend ``agg``.
+
+    ``scale`` is a static scalar post-multiplier (γ for the decoupled GCN
+    propagation: γ·(Â@z) = (γÂ)@z).  The segment backend ignores it —
+    its per-edge weights already carry any scaling."""
+    if agg == "blocksparse":
+        out = SP.aggregate_plan(xs, z)[:chunk_size]
+    elif agg == "dense":
+        out = xs @ z
+    else:
+        src, dst_local, w = xs
+        msg = jnp.take(z, src, axis=0) * w[:, None]
+        return jax.ops.segment_sum(msg, dst_local,
+                                   num_segments=chunk_size + 1)[:chunk_size]
+    return out if scale == 1.0 else scale * out

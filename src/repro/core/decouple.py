@@ -60,6 +60,7 @@ from ..runtime import collectives as C
 from ..runtime import constraint as K
 from ..runtime import engine
 from ..runtime import telemetry as T
+from . import agg as AGG
 from . import chunks as CH
 from . import tp
 
@@ -69,9 +70,9 @@ from . import tp
 # ---------------------------------------------------------------------------
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("edges", "chunked", "comm_plan"),
+         data_fields=("edges", "chunked", "comm_plan", "bsp", "dense_adj"),
          meta_fields=("n", "n_padded", "n_workers", "num_classes",
-                      "c_padded", "in_dim_padded"))
+                      "c_padded", "in_dim_padded", "agg"))
 @dataclasses.dataclass(frozen=True)
 class TPGraph:
     """Replicated graph structure + comm plans (one shard_map argument)."""
@@ -85,6 +86,12 @@ class TPGraph:
     num_classes: int
     c_padded: int                 # class dim padded to multiple of workers
     in_dim_padded: int
+    # pluggable aggregation backend (repro.core.agg): "segment" needs no
+    # extra data; "blocksparse" carries the per-chunk tile plans;
+    # "dense" the per-chunk dense adjacency rows
+    agg: str = "segment"
+    bsp: Any = None               # SP.BlockSparsePlanDev | None
+    dense_adj: Any = None         # (C, chunk_size, n_padded) f32 | None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,10 +169,18 @@ def place_bundle(bundle: TPBundle, mesh) -> TPBundle:
 
 def prepare_bundle(data: GraphData, n_workers: int | None = None,
                    n_chunks: int = 4, n_replicas: int | None = None,
-                   mesh=None) -> TPBundle:
+                   mesh=None, agg: str = "segment",
+                   agg_block_size: int = 128) -> TPBundle:
     """Host-side prep.  ``n_workers`` is the model (TP) degree; under a
     hybrid mesh ``n_replicas`` is the replica-group count (``data_size``)
     so the vertex dim pads to a multiple of every device.
+
+    ``agg`` selects the default aggregation backend
+    (:data:`repro.core.agg.AGG_BACKENDS`) and builds its per-chunk data:
+    tile plans of block size ``agg_block_size`` for ``"blocksparse"``,
+    dense adjacency rows (O(V²) memory — small graphs) for ``"dense"``.
+    The chunked segment view is always built, so loss/train factories may
+    select ``agg="segment"`` on any bundle; the reverse needs re-prep.
 
     ``mesh=`` derives both degrees from the mesh and commits the bundle
     to it as global arrays (:func:`place_bundle`) — required under a
@@ -187,6 +202,8 @@ def prepare_bundle(data: GraphData, n_workers: int | None = None,
     cg = gf.chunk_graph(gp, n_chunks)
     assert cg.n_chunks * cg.chunk_size == n_padded
     plan = CH.build_chunk_comm_plan(cg, n_workers, n_padded)
+    bsp, dense_adj = AGG.build_chunk_plans(gp, n_chunks, agg,
+                                           bs=agg_block_size)
 
     in_dim = data.features.shape[1]
     in_dim_padded = tp.padded_size(in_dim, n_workers)
@@ -212,7 +229,8 @@ def prepare_bundle(data: GraphData, n_workers: int | None = None,
         comm_plan=plan,
         n=g.n, n_padded=n_padded, n_workers=n_workers,
         num_classes=data.num_classes, c_padded=c_padded,
-        in_dim_padded=in_dim_padded)
+        in_dim_padded=in_dim_padded,
+        agg=agg, bsp=bsp, dense_adj=dense_adj)
     bundle = TPBundle(
         graph=graph,
         features=to_dev(feats), labels=to_dev(labels),
@@ -237,29 +255,45 @@ def padded_gnn_config(data: GraphData, bundle: TPBundle,
 # ---------------------------------------------------------------------------
 # Dim-sharded propagation rounds (run on feature slices)
 # ---------------------------------------------------------------------------
+#
+# Every round is pure per-worker compute on the feature slice — zero
+# collectives — so the aggregation backend (repro.core.agg: segment /
+# blocksparse / dense) dispatches *inside* the chunk scans without touching
+# the split/gather schedule, the telemetry ledger, or the jaxpr audit.
 
-def _chunk_agg(z, src, dst_local, w, cs):
-    msg = jnp.take(z, src, axis=0) * w[:, None]
-    return jax.ops.segment_sum(msg, dst_local, num_segments=cs + 1)[:cs]
+def _aggregate_once(graph: TPGraph, z, agg: str, w_chunk, scale: float):
+    """One full aggregation round: chunk-scan the selected backend."""
+    if agg == "segment":
+        return L.aggregate_chunked(graph.chunked, z, edge_weight=w_chunk)
+    cs = graph.chunked.chunk_size
+
+    def body(_, ax):
+        return None, AGG.chunk_agg(agg, z, ax, cs, scale)
+
+    _, outs = jax.lax.scan(body, None, AGG.chunk_xs(graph, agg, w_chunk))
+    return outs.reshape(-1, z.shape[1])[: z.shape[0]]
 
 
-def _propagate_plain(cg: L.ChunkedDev, z, w_chunk, rounds: int):
+def _propagate_plain(graph: TPGraph, z, w_chunk, rounds: int,
+                     agg: str = "segment", scale: float = 1.0):
     for _ in range(rounds):
-        z = L.aggregate_chunked(cg, z, edge_weight=w_chunk)
+        z = _aggregate_once(graph, z, agg, w_chunk, scale)
     return z
 
 
-def _round_split_pipelined(h_local, cg: L.ChunkedDev, plan: CH.ChunkCommPlan,
-                           w_chunk, axis: str):
+def _round_split_pipelined(h_local, graph: TPGraph, w_chunk, axis: str,
+                           agg: str = "segment", scale: float = 1.0):
     """First propagation round with per-chunk split interleaved (§4.2.2)."""
+    cg, plan = graph.chunked, graph.comm_plan
     n = C.axis_size(axis)
     ds = h_local.shape[1] // n
     zbuf0 = jnp.zeros((plan.n_padded, ds), h_local.dtype)
+    agg_xs = AGG.chunk_xs(graph, agg, w_chunk)
 
     def body(zbuf, xs):
-        rows_c, src, dst_local, w = xs
+        rows_c, ax = xs
         zbuf = CH.chunk_split_step(h_local, rows_c, zbuf, axis)
-        out = _chunk_agg(zbuf, src, dst_local, w, cg.chunk_size)
+        out = AGG.chunk_agg(agg, zbuf, ax, cg.chunk_size, scale)
         return zbuf, out
 
     # the scan body traces once but runs n_chunks×; the loop_scope makes
@@ -267,56 +301,58 @@ def _round_split_pipelined(h_local, cg: L.ChunkedDev, plan: CH.ChunkCommPlan,
     # ledger (the undercount the HLO census re-derives from while-loop
     # trip constants)
     with T.loop_scope(plan.split_rows.shape[0]):
-        _, outs = jax.lax.scan(
-            body, zbuf0, (plan.split_rows, cg.src, cg.dst_local, w_chunk))
+        _, outs = jax.lax.scan(body, zbuf0, (plan.split_rows, agg_xs))
     return outs.reshape(-1, ds)[: plan.n_padded]
 
 
-def _round_gather_pipelined(z, cg: L.ChunkedDev, plan: CH.ChunkCommPlan,
-                            w_chunk, d_full: int, axis: str):
+def _round_gather_pipelined(z, graph: TPGraph, w_chunk, d_full: int,
+                            axis: str, agg: str = "segment",
+                            scale: float = 1.0):
     """Last propagation round with per-chunk gather interleaved."""
+    cg, plan = graph.chunked, graph.comm_plan
     n = C.axis_size(axis)
     h_out0 = jnp.zeros((plan.n_padded // n, d_full), z.dtype)
     starts = jnp.arange(plan.gather_rows.shape[0], dtype=jnp.int32) \
         * cg.chunk_size
+    agg_xs = AGG.chunk_xs(graph, agg, w_chunk)
 
     def body(h_out, xs):
-        rows_c, src, dst_local, w, start = xs
-        out_c = _chunk_agg(z, src, dst_local, w, cg.chunk_size)
+        rows_c, ax, start = xs
+        out_c = AGG.chunk_agg(agg, z, ax, cg.chunk_size, scale)
         h_out = CH.chunk_gather_step(out_c, rows_c, start, h_out, axis)
         return h_out, None
 
     with T.loop_scope(plan.gather_rows.shape[0]):
         h_out, _ = jax.lax.scan(
-            body, h_out0,
-            (plan.gather_rows, cg.src, cg.dst_local, w_chunk, starts))
+            body, h_out0, (plan.gather_rows, agg_xs, starts))
     return h_out
 
 
-def _round_split_gather_pipelined(h_local, cg: L.ChunkedDev,
-                                  plan: CH.ChunkCommPlan, w_chunk,
-                                  d_full: int, axis: str):
+def _round_split_gather_pipelined(h_local, graph: TPGraph, w_chunk,
+                                  d_full: int, axis: str,
+                                  agg: str = "segment", scale: float = 1.0):
     """Single-round case: split, aggregate, gather all chunk-interleaved."""
+    cg, plan = graph.chunked, graph.comm_plan
     n = C.axis_size(axis)
     ds = h_local.shape[1] // n
     zbuf0 = jnp.zeros((plan.n_padded, ds), h_local.dtype)
     h_out0 = jnp.zeros((plan.n_padded // n, d_full), h_local.dtype)
     starts = jnp.arange(plan.gather_rows.shape[0], dtype=jnp.int32) \
         * cg.chunk_size
+    agg_xs = AGG.chunk_xs(graph, agg, w_chunk)
 
     def body(carry, xs):
         zbuf, h_out = carry
-        srows, grows, src, dst_local, w, start = xs
+        srows, grows, ax, start = xs
         zbuf = CH.chunk_split_step(h_local, srows, zbuf, axis)
-        out_c = _chunk_agg(zbuf, src, dst_local, w, cg.chunk_size)
+        out_c = AGG.chunk_agg(agg, zbuf, ax, cg.chunk_size, scale)
         h_out = CH.chunk_gather_step(out_c, grows, start, h_out, axis)
         return (zbuf, h_out), None
 
     with T.loop_scope(plan.split_rows.shape[0]):
         (zbuf, h_out), _ = jax.lax.scan(
             body, (zbuf0, h_out0),
-            (plan.split_rows, plan.gather_rows, cg.src, cg.dst_local,
-             w_chunk, starts))
+            (plan.split_rows, plan.gather_rows, agg_xs, starts))
     return h_out
 
 
@@ -345,10 +381,25 @@ def _edge_weights_tp(params, cfg: M.GNNConfig, edges: L.EdgeListDev,
 # Forward passes (inside shard_map)
 # ---------------------------------------------------------------------------
 
+def _effective_agg(cfg: M.GNNConfig, agg: str) -> tuple[str, float]:
+    """(backend, scale) actually used by a forward.
+
+    GAT always aggregates via segment-sum: its edge weights α are computed
+    at runtime from the layer's features (data-dependent), so they cannot
+    be baked into the precomputed blocksparse tiles / dense rows.  For the
+    tile-based backends the static γ factor of the propagation weights
+    (γ·Â in ``_edge_weights_tp``) becomes a scalar post-multiplier, since
+    γ·(Â@z) = (γÂ)@z."""
+    if cfg.model == "gat":
+        return "segment", 1.0
+    return agg, cfg.gamma
+
+
 def tp_decoupled_forward(params, cfg: M.GNNConfig, graph: TPGraph,
                          x_local, axis: str = "model",
                          pipelined: bool = True,
-                         data_axes: tuple[str, ...] = ()):
+                         data_axes: tuple[str, ...] = (),
+                         agg: str = "segment"):
     """Decoupled TP forward: returns vertex-sharded logits.
 
     Pure TP (``data_axes=()``): ``x_local`` is this model worker's
@@ -359,8 +410,12 @@ def tp_decoupled_forward(params, cfg: M.GNNConfig, graph: TPGraph,
     block (exact: the MLP is row-wise, so it commutes with the gather),
     and the result is sliced back to this replica's (V/(N·R), C_pad)
     rows, whose autodiff transpose psum-scatters the data-axis grads.
+
+    ``agg`` selects the aggregation backend for the propagation rounds
+    (``repro.core.agg``; GAT is pinned to segment — ``_effective_agg``).
     """
-    cg, plan = graph.chunked, graph.comm_plan
+    cg = graph.chunked
+    agg, scale = _effective_agg(cfg, agg)
     h = M.mlp_phase(params, cfg, x_local)              # NN phase, local rows
     h = C.replica_gather(h, data_axes, mirror=True)    # (V/N, C)
     w_flat = _edge_weights_tp(params, cfg, graph.edges, h, axis)
@@ -370,22 +425,24 @@ def tp_decoupled_forward(params, cfg: M.GNNConfig, graph: TPGraph,
 
     if not pipelined:
         z = tp.split(h, axis, mirror=True)             # (V, C/N)
-        z = _propagate_plain(cg, z, w_chunk, n_rounds)
+        z = _propagate_plain(graph, z, w_chunk, n_rounds, agg, scale)
         out = tp.gather(z, axis, mirror=True)          # (V/N, C)
     elif n_rounds == 1:
         out = _round_split_gather_pipelined(
-            h, cg, plan, w_chunk, d_full, axis)
+            h, graph, w_chunk, d_full, axis, agg, scale)
     else:
-        z = _round_split_pipelined(h, cg, plan, w_chunk, axis)
-        z = _propagate_plain(cg, z, w_chunk, n_rounds - 2) \
+        z = _round_split_pipelined(h, graph, w_chunk, axis, agg, scale)
+        z = _propagate_plain(graph, z, w_chunk, n_rounds - 2, agg, scale) \
             if n_rounds > 2 else z
-        out = _round_gather_pipelined(z, cg, plan, w_chunk, d_full, axis)
+        out = _round_gather_pipelined(z, graph, w_chunk, d_full, axis,
+                                      agg, scale)
     return C.replica_slice(out, data_axes)
 
 
 def tp_naive_forward(params, cfg: M.GNNConfig, graph: TPGraph,
                      x_local, axis: str = "model",
-                     data_axes: tuple[str, ...] = ()):
+                     data_axes: tuple[str, ...] = (),
+                     agg: str = "segment"):
     """Coupled ("naive") TP: gather/split per layer — 2L+ collectives/epoch
     (Fig. 8's baseline).  GCN and GAT supported.
 
@@ -394,8 +451,13 @@ def tp_naive_forward(params, cfg: M.GNNConfig, graph: TPGraph,
     for the graph-aggregation phase (which needs the model worker's full
     block) and slicing back before the dense update so the matmuls
     divide over every device.
+
+    ``agg`` selects the aggregation backend for the per-layer aggregation
+    (GAT layers are pinned to segment — see :func:`_effective_agg`; the
+    naive mode applies no γ scaling, so ``scale=1``).
     """
     cg = graph.chunked
+    agg, _ = _effective_agg(cfg, agg)
     h = x_local                                        # local rows, D feats
     n_layers = cfg.num_layers
     for i in range(n_layers):
@@ -424,7 +486,7 @@ def tp_naive_forward(params, cfg: M.GNNConfig, graph: TPGraph,
             hf = C.replica_gather(h, data_axes,
                                   mirror=mirror)       # (V/N, D) block
             z = tp.split(hf, axis, mirror=mirror)      # dim-sharded
-            z = L.aggregate_chunked(cg, z)
+            z = _aggregate_once(graph, z, agg, None, 1.0)
             a = tp.gather(z, axis, mirror=mirror)      # vertex-sharded
             a = C.replica_slice(a, data_axes)          # this replica's rows
             p = params["layers"][i]
@@ -438,7 +500,9 @@ def tp_naive_forward(params, cfg: M.GNNConfig, graph: TPGraph,
 # Global-view forwards for the constraint backend
 # ---------------------------------------------------------------------------
 
-def _aggregate_chunked_constraint(cg: L.ChunkedDev, z, w_chunk, axis: str):
+def _aggregate_chunked_constraint(graph: TPGraph, z, w_chunk, axis: str,
+                                  agg: str = "segment",
+                                  scale: float = 1.0):
     """Chunk-scanned aggregation with the dim-sharded layout anchored
     inside the scan body.
 
@@ -448,18 +512,35 @@ def _aggregate_chunked_constraint(cg: L.ChunkedDev, z, w_chunk, axis: str):
     "involuntary full rematerialization") that break the wire-byte parity
     with the explicit backend.  Constraints are free when already
     satisfied, so this is the same program when the partitioner behaves.
+
+    Non-segment backends (``repro.core.agg``) run the same scan over
+    their own per-chunk inputs, anchoring only the chunk output: under
+    this backend the partitioner owns how the tile multiply itself is
+    partitioned (the interpreter-lowered pallas_call is ordinary HLO to
+    it), and the dim-sharded out anchor states the layout the engine's
+    gather expects.  ``K.constrain`` records nothing, so the telemetry
+    ledger stays byte-identical across backends.
     """
+    cg = graph.chunked
     cs = cg.chunk_size
 
-    def body(_, chunk):
-        src, dst_local, w = chunk
-        msg = z[src] * w[:, None]
-        msg = K.constrain(msg, P(None, axis))
-        out = jax.ops.segment_sum(msg, dst_local, num_segments=cs + 1)
-        out = K.constrain(out, P(None, axis))
-        return None, out[:cs]
+    if agg == "segment":
+        def body(_, chunk):
+            src, dst_local, w = chunk
+            msg = z[src] * w[:, None]
+            msg = K.constrain(msg, P(None, axis))
+            out = jax.ops.segment_sum(msg, dst_local, num_segments=cs + 1)
+            out = K.constrain(out, P(None, axis))
+            return None, out[:cs]
 
-    _, outs = jax.lax.scan(body, None, (cg.src, cg.dst_local, w_chunk))
+        _, outs = jax.lax.scan(body, None, (cg.src, cg.dst_local, w_chunk))
+    else:
+        def body(_, ax):
+            out = AGG.chunk_agg(agg, z, ax, cs, scale)
+            return None, K.constrain(out, P(None, axis))
+
+        _, outs = jax.lax.scan(body, None, AGG.chunk_xs(graph, agg,
+                                                        w_chunk))
     outs = K.constrain(outs, P(None, None, axis))
     out = outs.reshape(-1, z.shape[1])[: z.shape[0]]
     return K.constrain(out, P(None, axis))
@@ -483,14 +564,17 @@ def _edge_weights_constraint(params, cfg: M.GNNConfig, edges: L.EdgeListDev,
 
 def tp_decoupled_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
                                     x, axis: str = "model",
-                                    data_axes: tuple[str, ...] = ()):
+                                    data_axes: tuple[str, ...] = (),
+                                    agg: str = "segment"):
     """Decoupled TP forward in global-view semantics for
     ``engine(..., backend="constraint")``: same math as
     :func:`tp_decoupled_forward`, with the split/gather all-to-alls
     expressed as layout constraints.  Returns (V, C_pad) logits laid out
     vertex-sharded ``P(vertex_axes(axis, data_axes), None)`` — under a
-    hybrid mesh the NN phase shards over the data axes too."""
+    hybrid mesh the NN phase shards over the data axes too.  ``agg``
+    dispatches inside the chunk scan (GAT pinned to segment)."""
     cg = graph.chunked
+    agg, scale = _effective_agg(cfg, agg)
     vspec = tp.vertex_spec(axis, data_axes)
     h = M.mlp_phase(params, cfg, x)                    # NN phase (V, C)
     h = K.constrain(h, vspec)                          # anchor: vertex-sharded
@@ -498,18 +582,22 @@ def tp_decoupled_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
     w_chunk = L.rechunk_edge_values(cg, w_flat)
     z = tp.split_constraint(h, axis, data_axes, mirror=True)
     for _ in range(cfg.num_layers):
-        z = _aggregate_chunked_constraint(cg, z, w_chunk, axis)
+        z = _aggregate_chunked_constraint(graph, z, w_chunk, axis,
+                                          agg, scale)
     return tp.gather_constraint(z, axis, data_axes, mirror=True)
 
 
 def tp_naive_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
                                 x, axis: str = "model",
-                                data_axes: tuple[str, ...] = ()):
+                                data_axes: tuple[str, ...] = (),
+                                agg: str = "segment"):
     """Coupled ("naive") TP in global-view semantics: gather/split
     constraints per layer — the same 2L all-to-alls per forward as
     :func:`tp_naive_forward`, scheduled by XLA (hybrid: per-layer dense
-    compute shards over the data axes too)."""
+    compute shards over the data axes too).  ``agg`` dispatches inside
+    the chunk scan (GAT layers pinned to segment, no γ scaling here)."""
     cg = graph.chunked
+    agg, _ = _effective_agg(cfg, agg)
     vspec = tp.vertex_spec(axis, data_axes)
     h = K.constrain(x, vspec)                          # (V, D) vertex-sharded
     n_layers = cfg.num_layers
@@ -524,7 +612,7 @@ def tp_naive_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
             alpha = L.segment_softmax(e, graph.edges.dst, sl.shape[0])
             w_chunk = L.rechunk_edge_values(cg, alpha)
             z = tp.split_constraint(hw, axis, data_axes, mirror=True)
-            z = _aggregate_chunked_constraint(cg, z, w_chunk, axis)
+            z = _aggregate_chunked_constraint(graph, z, w_chunk, axis)
             h = tp.gather_constraint(z, axis, data_axes, mirror=True)
             if i < n_layers - 1:
                 h = jax.nn.elu(h)
@@ -534,7 +622,8 @@ def tp_naive_forward_constraint(params, cfg: M.GNNConfig, graph: TPGraph,
             mirror = i > 0
             z = tp.split_constraint(h, axis, data_axes,
                                     mirror=mirror)       # dim-sharded
-            z = _aggregate_chunked_constraint(cg, z, cg.weight, axis)
+            z = _aggregate_chunked_constraint(graph, z, cg.weight, axis,
+                                              agg, 1.0)
             a = tp.gather_constraint(z, axis, data_axes,
                                      mirror=mirror)      # vertex-sharded
             p = params["layers"][i]
@@ -566,7 +655,8 @@ def _resolve_data_axes(mesh, axis: str, data_axes):
 
 
 def _make_tp_loss_and_acc(cfg: M.GNNConfig, mesh, axis: str, mode: str,
-                          backend: str, data_axes: tuple[str, ...] = ()):
+                          backend: str, data_axes: tuple[str, ...] = (),
+                          agg: str = "segment"):
     """Engine-mapped (params, graph, x, labels, mask) → (loss, acc).
 
     The one place both backends are built: per-shard body + psums under
@@ -574,7 +664,9 @@ def _make_tp_loss_and_acc(cfg: M.GNNConfig, mesh, axis: str, mode: str,
     ``"constraint"`` (identical numerics, see test_constraint_backend).
     ``data_axes`` non-empty turns either backend hybrid DP×TP: vertices
     (and labels/masks) shard over ``(axis,) + data_axes``, the NN phase
-    runs on every device, and reductions span all axes."""
+    runs on every device, and reductions span all axes.  ``agg`` is the
+    aggregation backend threaded into the forwards (pure local compute —
+    identical collective schedule across choices)."""
     if backend == "constraint":
         fwd_c = {
             "decoupled": tp_decoupled_forward_constraint,
@@ -586,7 +678,7 @@ def _make_tp_loss_and_acc(cfg: M.GNNConfig, mesh, axis: str, mode: str,
 
         def global_loss(params, graph, x, labels, mask):
             logits = fwd_c(params, cfg, graph, x, axis=axis,
-                           data_axes=data_axes)
+                           data_axes=data_axes, agg=agg)
             loss_sum, correct, cnt = M.masked_loss_and_acc(
                 logits, labels, mask, graph.num_classes)
             return (loss_sum / jnp.maximum(cnt, 1.0),
@@ -608,7 +700,7 @@ def _make_tp_loss_and_acc(cfg: M.GNNConfig, mesh, axis: str, mode: str,
             # every vertex is scored once across the full psum and the
             # replica ops' transposes carry the data-axis grad psum.
             logits = fwd(params, cfg, graph, x_local, axis=axis,
-                         data_axes=data_axes)
+                         data_axes=data_axes, agg=agg)
             loss_sum, correct, cnt = M.masked_loss_and_acc(
                 logits, labels_local, mask_local, graph.num_classes)
             loss_sum = C.psum_replicas(C.psum(loss_sum, axis), data_axes)
@@ -656,16 +748,20 @@ def _check_bundle_fits(bundle: TPBundle, mesh, axis: str,
 
 def make_tp_loss_fn(cfg: M.GNNConfig, bundle: TPBundle, mesh,
                     axis: str = "model", mode: str = "decoupled_pipelined",
-                    backend: str = "explicit", data_axes=None):
+                    backend: str = "explicit", data_axes=None, agg=None):
     """Differentiable (params, mask) → scalar loss for a given backend.
 
     The handle backend-equivalence tests take grads through.
     ``data_axes=None`` derives the replica axes from ``mesh`` (hybrid
-    DP×TP on multi-axis meshes); pass ``()`` to force pure TP."""
+    DP×TP on multi-axis meshes); pass ``()`` to force pure TP.
+    ``agg=None`` uses the backend the bundle was prepared with; an
+    explicit choice must be available on the bundle
+    (:func:`repro.core.agg.resolve_choice`)."""
     data_axes = _resolve_data_axes(mesh, axis, data_axes)
     _check_bundle_fits(bundle, mesh, axis, data_axes)
     smapped = _make_tp_loss_and_acc(cfg, mesh, axis, mode, backend,
-                                    data_axes)
+                                    data_axes,
+                                    AGG.resolve_choice(bundle.graph, agg))
 
     def loss_fn(params, mask):
         loss, _ = smapped(params, bundle.graph, bundle.features,
@@ -755,15 +851,18 @@ def _bundle_masks(bundle) -> dict:
 def make_tp_value_and_grad(cfg: M.GNNConfig, bundle: TPBundle, mesh,
                            axis: str = "model",
                            mode: str = "decoupled_pipelined",
-                           backend: str = "explicit", data_axes=None):
+                           backend: str = "explicit", data_axes=None,
+                           agg=None):
     """Jitted (params, mask) → (loss, grads) — the multihost-safe
     spelling of ``jax.value_and_grad(make_tp_loss_fn(...))`` (one
     executable per call; see :func:`bundled_value_and_grad` for why
-    eager autodiff is not safe on a multi-process mesh)."""
+    eager autodiff is not safe on a multi-process mesh).  ``agg=None``
+    uses the bundle's prepared aggregation backend."""
     data_axes = _resolve_data_axes(mesh, axis, data_axes)
     _check_bundle_fits(bundle, mesh, axis, data_axes)
     smapped = _make_tp_loss_and_acc(cfg, mesh, axis, mode, backend,
-                                    data_axes)
+                                    data_axes,
+                                    AGG.resolve_choice(bundle.graph, agg))
     return bundled_value_and_grad(smapped, bundle.graph, bundle.features,
                                   bundle.labels)
 
@@ -771,7 +870,7 @@ def make_tp_value_and_grad(cfg: M.GNNConfig, bundle: TPBundle, mesh,
 def make_tp_train_fns(cfg: M.GNNConfig, bundle: TPBundle, mesh,
                       optimizer, axis: str = "model",
                       mode: str = "decoupled_pipelined",
-                      backend: str = "explicit", data_axes=None):
+                      backend: str = "explicit", data_axes=None, agg=None):
     """Build jitted (train_step, eval_fn) for TP training.
 
     ``mode`` ∈ {decoupled, decoupled_pipelined, naive};
@@ -780,12 +879,14 @@ def make_tp_train_fns(cfg: M.GNNConfig, bundle: TPBundle, mesh,
     ``axis`` — or over ``(axis,) + data_axes`` under a hybrid mesh
     (``data_axes=None`` derives them from ``mesh``), in which case the
     gradient all-reduce over the data axes is the autodiff transpose of
-    the replica psums/gathers in the loss body.
+    the replica psums/gathers in the loss body.  ``agg=None`` uses the
+    bundle's prepared aggregation backend (``repro.core.agg``).
     """
     data_axes = _resolve_data_axes(mesh, axis, data_axes)
     _check_bundle_fits(bundle, mesh, axis, data_axes)
     smapped = _make_tp_loss_and_acc(cfg, mesh, axis, mode, backend,
-                                    data_axes)
+                                    data_axes,
+                                    AGG.resolve_choice(bundle.graph, agg))
     return bundled_train_fns(smapped, optimizer, bundle.graph,
                              bundle.features, bundle.labels,
                              _bundle_masks(bundle))

@@ -30,19 +30,24 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from typing import Any
+
+from ..core import agg as AGG
+from ..graph import format as gf
 from ..graph import partition as gp
 from ..graph.format import Graph
 from ..graph.synthetic import GraphData
 from ..runtime import collectives as C
 from ..runtime import constraint as K
 from ..runtime import engine
+from ..kernels import spmm as SP
 from . import models as M
 
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=("send_idx_local", "recv_pos", "src", "dst", "weight",
-                      "valid_rows"),
-         meta_fields=("k", "m", "halo_size", "n_local_max", "e_max"))
+                      "valid_rows", "bsp", "dense_adj"),
+         meta_fields=("k", "m", "halo_size", "n_local_max", "e_max", "agg"))
 @dataclasses.dataclass(frozen=True)
 class DPGraph:
     """Per-worker partitioned graph, stacked+padded on the worker axis."""
@@ -58,6 +63,12 @@ class DPGraph:
     halo_size: int
     n_local_max: int
     e_max: int
+    # pluggable aggregation backend (repro.core.agg): per-worker tile plans
+    # ("blocksparse", stacked on the worker axis) or per-worker dense rows
+    # ("dense", (k, n_local_max, n_local_max + halo_size))
+    agg: str = "segment"
+    bsp: Any = None
+    dense_adj: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,14 +110,22 @@ def place_dp_bundle(bundle: DPBundle, mesh) -> DPBundle:
 def prepare_dp_bundle(data: GraphData, k: int | None = None,
                       balance: str = "vertex",
                       n_replicas: int | None = None,
-                      mesh=None) -> DPBundle:
+                      mesh=None, agg: str = "segment",
+                      agg_block_size: int = 128) -> DPBundle:
     """``k`` graph partitions (the model axis); under a hybrid mesh
     ``n_replicas`` pads each partition's row count so the local rows also
     shard over the data axes.
 
+    ``agg`` selects the default aggregation backend
+    (:data:`repro.core.agg.AGG_BACKENDS`): ``"blocksparse"`` builds one
+    rectangular tile plan per worker (local dst rows × extended
+    local+halo source rows, block size ``agg_block_size``), ``"dense"``
+    the per-worker dense rows.  The segment edge lists are always built.
+
     ``mesh=`` derives both counts from the mesh and commits the bundle
     to it (:func:`place_dp_bundle`) — required under a multi-process
     ``jax.distributed`` job; without it the bundle stays host-local."""
+    AGG.validate_backend(agg)
     if mesh is not None:
         from ..runtime import resolve_bundle_degrees
         k, n_replicas = resolve_bundle_degrees(
@@ -129,10 +148,14 @@ def prepare_dp_bundle(data: GraphData, k: int | None = None,
         sel = plan.send_idx[i] >= 0
         send_local[i][sel] = plan.send_idx[i][sel] - lo
 
+    ext = n_local_max + plan.halo_size
     src = np.zeros((k, e_max), np.int32)
     dst = np.full((k, e_max), n_local_max, np.int32)
     wgt = np.zeros((k, e_max), np.float32)
     valid = np.zeros((k, n_local_max), np.float32)
+    worker_plans = [] if agg == "blocksparse" else None
+    dense_rows = (np.zeros((k, n_local_max, ext), np.float32)
+                  if agg == "dense" else None)
     feats = np.zeros((k, n_local_max, data.features.shape[1]), np.float32)
     labels = np.zeros((k, n_local_max), np.int32)
     masks = {name: np.zeros((k, n_local_max), np.float32)
@@ -148,6 +171,16 @@ def prepare_dp_bundle(data: GraphData, k: int | None = None,
         dst[i, :e_i] = plan.local_dst[i]
         wgt[i, :e_i] = plan.local_w[i]
         valid[i, :n_i] = 1.0
+        # per-worker aggregation plans use the same clamped coordinates
+        # the segment path indexes with: dst over the padded local rows,
+        # src over the extended [local | halo] rows
+        if worker_plans is not None:
+            worker_plans.append(gf.rect_block_sparse(
+                dst[i, :e_i], src[i, :e_i], wgt[i, :e_i],
+                n_rows=n_local_max, n_cols=ext, bs=agg_block_size))
+        if dense_rows is not None:
+            np.add.at(dense_rows[i], (dst[i, :e_i], src[i, :e_i]),
+                      wgt[i, :e_i])
         lo, hi = part.bounds[i], part.bounds[i + 1]
         feats[i, :n_i] = data.features[lo:hi]
         labels[i, :n_i] = data.labels[lo:hi]
@@ -162,7 +195,12 @@ def prepare_dp_bundle(data: GraphData, k: int | None = None,
         src=jnp.asarray(src), dst=jnp.asarray(dst), weight=jnp.asarray(wgt),
         valid_rows=jnp.asarray(valid),
         k=k, m=plan.m, halo_size=plan.halo_size,
-        n_local_max=n_local_max, e_max=e_max)
+        n_local_max=n_local_max, e_max=e_max,
+        agg=agg,
+        bsp=(SP.block_sparse_plan_dev(gf.stack_plans(worker_plans))
+             if worker_plans is not None else None),
+        dense_adj=(jnp.asarray(dense_rows)
+                   if dense_rows is not None else None))
     # node arrays go straight from numpy to their global placement when
     # a mesh is given (no local-device round trip — see prepare_bundle)
     to_dev = (lambda a: a) if mesh is not None else jnp.asarray
@@ -203,11 +241,22 @@ def halo_exchange(h_local: jax.Array, g: DPGraph, axis: str, *,
 
 def dp_aggregate(h_local: jax.Array, g: DPGraph, axis: str,
                  edge_weight: jax.Array | None = None, *,
-                 mirror: bool = True) -> jax.Array:
-    """One full aggregation round: halo exchange + local weighted SpMM."""
+                 mirror: bool = True, agg: str = "segment") -> jax.Array:
+    """One full aggregation round: halo exchange + local weighted SpMM.
+
+    The local multiply dispatches on ``agg`` (``repro.core.agg``): the
+    tile/dense backends index this worker's precomputed plan and only
+    apply when no runtime ``edge_weight`` overrides the baked-in static
+    weights.  The halo exchange — the only communication — is identical
+    across backends."""
     i = C.axis_index(axis)
     halo = halo_exchange(h_local, g, axis, mirror=mirror)[:-1]  # drop pad
     h_ext = jnp.concatenate([h_local, halo], axis=0)
+    if edge_weight is None and agg == "blocksparse":
+        tiles = jax.tree.map(lambda a: a[i], g.bsp)   # this worker's plan
+        return SP.aggregate_plan(tiles, h_ext)[: g.n_local_max]
+    if edge_weight is None and agg == "dense":
+        return g.dense_adj[i] @ h_ext
     w = g.weight[i] if edge_weight is None else edge_weight
     msg = jnp.take(h_ext, g.src[i], axis=0) * w[:, None]
     out = jax.ops.segment_sum(msg, g.dst[i],
@@ -217,7 +266,8 @@ def dp_aggregate(h_local: jax.Array, g: DPGraph, axis: str,
 
 def dp_coupled_forward(params, cfg: M.GNNConfig, g: DPGraph, x_local,
                        axis: str = "model",
-                       data_axes: tuple[str, ...] = ()):
+                       data_axes: tuple[str, ...] = (),
+                       agg: str = "segment"):
     """Classic coupled data-parallel GNN (per-layer halo exchange).
 
     Hybrid DP×TP: ``x_local`` carries only this replica's block of the
@@ -232,7 +282,7 @@ def dp_coupled_forward(params, cfg: M.GNNConfig, g: DPGraph, x_local,
         # collectives in the backward (telemetry mirror convention)
         mirror = i > 0
         h_full = C.replica_gather(h, data_axes, mirror=mirror)
-        a = dp_aggregate(h_full, g, axis, mirror=mirror)
+        a = dp_aggregate(h_full, g, axis, mirror=mirror, agg=agg)
         a = C.replica_slice(a, data_axes)
         p = params["layers"][i]
         h = a @ p["w"] + p["b"]
@@ -277,12 +327,19 @@ def _halo_exchange_constraint(h: jax.Array, g: DPGraph, axis: str, *,
 
 def dp_coupled_forward_constraint(params, cfg: M.GNNConfig, g: DPGraph, x,
                                   axis: str = "model",
-                                  data_axes: tuple[str, ...] = ()):
+                                  data_axes: tuple[str, ...] = (),
+                                  agg: str = "segment"):
     """Coupled DP-GNN in global-view semantics for
     ``engine(..., backend="constraint")``: same math as
     :func:`dp_coupled_forward` on the stacked (k, n_local_max, ·) layout
     (hybrid: the per-partition row dim is additionally anchored on the
-    data axes, so the dense updates shard across replicas)."""
+    data axes, so the dense updates shard across replicas).
+
+    ``agg`` dispatches the per-worker multiply: blocksparse runs the tile
+    plans in a ``lax.scan`` over the worker axis (scan, not vmap — the
+    Pallas call stays rank-2 and the partitioner still owns the layout),
+    dense is one batched einsum; both are re-anchored by the shared
+    ``K.constrain`` below, so the collective profile is unchanged."""
     row_spec = _dp_row_spec(axis, data_axes)
 
     def agg_one(h_ext_i, src_i, dst_i, w_i):
@@ -290,12 +347,23 @@ def dp_coupled_forward_constraint(params, cfg: M.GNNConfig, g: DPGraph, x,
         return jax.ops.segment_sum(
             msg, dst_i, num_segments=g.n_local_max + 1)[: g.n_local_max]
 
+    def aggregate(h_ext):
+        if agg == "blocksparse":
+            def body(_, xs):
+                tiles, h_i = xs
+                return None, SP.aggregate_plan(tiles, h_i)[: g.n_local_max]
+            _, out = jax.lax.scan(body, None, (g.bsp, h_ext))
+            return out
+        if agg == "dense":
+            return jnp.einsum("knm,kmd->knd", g.dense_adj, h_ext)
+        return jax.vmap(agg_one)(h_ext, g.src, g.dst, g.weight)
+
     h = x
     for i in range(cfg.num_layers):
         h = K.constrain(h, row_spec)
         halo = _halo_exchange_constraint(h, g, axis, mirror=i > 0)
         h_ext = jnp.concatenate([h, halo], axis=1)
-        a = jax.vmap(agg_one)(h_ext, g.src, g.dst, g.weight)
+        a = aggregate(h_ext)
         a = K.constrain(a, row_spec)
         p = params["layers"][i]
         h = a @ p["w"] + p["b"]
@@ -314,14 +382,16 @@ def _dp_row_spec(axis: str, data_axes: tuple[str, ...],
 
 def _make_dp_loss_and_acc(cfg: M.GNNConfig, num_classes: int, mesh,
                           axis: str, backend: str,
-                          data_axes: tuple[str, ...] = ()):
+                          data_axes: tuple[str, ...] = (),
+                          agg: str = "segment"):
     """Engine-mapped (params, g, x, labels, mask) → (loss, acc)."""
     if backend == "constraint":
 
         def global_loss(params, g, x, labels, mask):
             logits = dp_coupled_forward_constraint(params, cfg, g, x,
                                                    axis=axis,
-                                                   data_axes=data_axes)
+                                                   data_axes=data_axes,
+                                                   agg=agg)
             mask = mask * g.valid_rows
             loss_sum, correct, cnt = M.masked_loss_and_acc(
                 logits, labels, mask, num_classes)
@@ -338,7 +408,7 @@ def _make_dp_loss_and_acc(cfg: M.GNNConfig, num_classes: int, mesh,
             labels_local = labels_local[0]
             mask_local = mask_local[0]
             logits = dp_coupled_forward(params, cfg, g, x_local, axis=axis,
-                                        data_axes=data_axes)
+                                        data_axes=data_axes, agg=agg)
             valid = C.replica_slice(g.valid_rows[C.axis_index(axis)],
                                     data_axes)
             mask = mask_local * valid
@@ -382,14 +452,16 @@ def _resolve_dp_axes(bundle: DPBundle, mesh, axis: str, data_axes):
 
 def make_dp_loss_fn(cfg: M.GNNConfig, bundle: DPBundle, mesh,
                     axis: str = "model", backend: str = "explicit",
-                    data_axes=None):
+                    data_axes=None, agg: str | None = None):
     """Differentiable (params, mask) → scalar loss for a given backend.
 
     ``data_axes=None`` derives the replica axes from ``mesh`` (hybrid
-    DP×TP); pass ``()`` to force the pure partition-parallel baseline."""
+    DP×TP); pass ``()`` to force the pure partition-parallel baseline.
+    ``agg=None`` keeps the bundle's prepared aggregation backend."""
     data_axes = _resolve_dp_axes(bundle, mesh, axis, data_axes)
+    agg = AGG.resolve_choice(bundle.graph, agg)
     smapped = _make_dp_loss_and_acc(cfg, bundle.num_classes, mesh, axis,
-                                    backend, data_axes)
+                                    backend, data_axes, agg=agg)
 
     def loss_fn(params, mask):
         loss, _ = smapped(params, bundle.graph, bundle.features,
@@ -401,32 +473,36 @@ def make_dp_loss_fn(cfg: M.GNNConfig, bundle: DPBundle, mesh,
 
 def make_dp_value_and_grad(cfg: M.GNNConfig, bundle: DPBundle, mesh,
                            axis: str = "model", backend: str = "explicit",
-                           data_axes=None):
+                           data_axes=None, agg: str | None = None):
     """Jitted (params, mask) → (loss, grads): the multihost-safe
     value-and-grad handle (one executable per call; see
     :func:`repro.core.decouple.bundled_value_and_grad` for why eager
     autodiff is not safe on a multi-process mesh)."""
     from ..core.decouple import bundled_value_and_grad
     data_axes = _resolve_dp_axes(bundle, mesh, axis, data_axes)
+    agg = AGG.resolve_choice(bundle.graph, agg)
     smapped = _make_dp_loss_and_acc(cfg, bundle.num_classes, mesh, axis,
-                                    backend, data_axes)
+                                    backend, data_axes, agg=agg)
     return bundled_value_and_grad(smapped, bundle.graph, bundle.features,
                                   bundle.labels)
 
 
 def make_dp_train_fns(cfg: M.GNNConfig, bundle: DPBundle, mesh,
                       optimizer, axis: str = "model",
-                      backend: str = "explicit", data_axes=None):
+                      backend: str = "explicit", data_axes=None,
+                      agg: str | None = None):
     """Jitted (train_step, evaluate) for the DP baseline (GCN).
 
     ``backend`` ∈ {explicit, constraint} selects the engine path;
     ``data_axes=None`` derives replica axes from ``mesh`` (hybrid DP×TP:
     partition rows shard over the data axes and the gradient psum spans
-    them via the replica ops' transposes)."""
+    them via the replica ops' transposes).  ``agg=None`` keeps the
+    bundle's prepared aggregation backend."""
     from ..core.decouple import _bundle_masks, bundled_train_fns
     data_axes = _resolve_dp_axes(bundle, mesh, axis, data_axes)
+    agg = AGG.resolve_choice(bundle.graph, agg)
     smapped = _make_dp_loss_and_acc(cfg, bundle.num_classes, mesh, axis,
-                                    backend, data_axes)
+                                    backend, data_axes, agg=agg)
     # bundle arrays are fed as jit ARGUMENTS, never closure constants —
     # the multihost jit discipline lives in one place (bundled_train_fns)
     return bundled_train_fns(smapped, optimizer, bundle.graph,

@@ -12,6 +12,12 @@ single-worker full-graph aggregation:
 * ``BlockSparseGraph`` — (dst_block × src_block) dense tiles for the Pallas
                        SpMM kernel: TPUs want MXU tiles, not gather/scatter,
                        so aggregation becomes a block-sparse matmul.
+* ``BlockSparsePlan``  — rectangular tile plan (forward + transposed tiles)
+                       for one slice of Â; built per §4.2 chunk
+                       (``chunk_block_sparse``) or per DP worker partition
+                       (``rect_block_sparse`` + ``stack_plans``) so the
+                       engines' chunk scans can stream MXU tiles with an
+                       exact custom VJP through the Âᵀ plan.
 
 Everything is constructed in numpy (host, once) and consumed as jnp arrays.
 """
@@ -44,9 +50,13 @@ class Graph:
         return np.bincount(self.src, minlength=self.n).astype(np.int64)
 
     def dense_adjacency(self) -> np.ndarray:
-        """Dense normalized adjacency (test oracle only)."""
+        """Dense normalized adjacency (test oracle only).
+
+        ``np.add.at``, not fancy-index ``+=``: the buffered form drops
+        duplicate (dst, src) contributions, and graphs built outside
+        :func:`build_graph`'s dedupe may carry parallel edges."""
         a = np.zeros((self.n, self.n), dtype=np.float32)
-        a[self.dst, self.src] += self.weight
+        np.add.at(a, (self.dst, self.src), self.weight)
         return a
 
 
@@ -202,41 +212,192 @@ class BlockSparseGraph:
         return self.nnzb / float(self.n_blocks * self.n_blocks)
 
 
-def block_sparse(g: Graph, bs: int = 128) -> BlockSparseGraph:
-    n_padded = -(-g.n // bs) * bs
-    n_blocks = n_padded // bs
-    bi = g.dst.astype(np.int64) // bs
-    bj = g.src.astype(np.int64) // bs
-    pair = bi * n_blocks + bj
-    order = np.argsort(pair, kind="stable")
-    pair_sorted = pair[order]
-    uniq, start = np.unique(pair_sorted, return_index=True)
-    block_rows = (uniq // n_blocks).astype(np.int32)
-    block_cols = (uniq % n_blocks).astype(np.int32)
+def _coo_tiles(dst: np.ndarray, src: np.ndarray, weight: np.ndarray,
+               n_row_blocks: int, n_col_blocks: int, bs: int):
+    """Dense (bs, bs) tiles of the non-empty (dst//bs, src//bs) pairs.
+
+    Uses ``np.add.at`` so duplicate (dst, src) entries *accumulate* — the
+    buffered fancy-index ``+=`` silently keeps only one contribution per
+    tile cell, which corrupts any Graph not deduped by ``build_graph``.
+    """
+    bi = dst.astype(np.int64) // bs
+    bj = src.astype(np.int64) // bs
+    pair = bi * n_col_blocks + bj
+    uniq = np.unique(pair)
+    block_rows = (uniq // n_col_blocks).astype(np.int32)
+    block_cols = (uniq % n_col_blocks).astype(np.int32)
     blocks = np.zeros((len(uniq), bs, bs), dtype=np.float32)
-    # scatter edges into their tiles
     tile_of_edge = np.searchsorted(uniq, pair)
-    blocks[tile_of_edge, g.dst % bs, g.src % bs] += g.weight
-    # ensure every destination block row has >= 1 tile: the Pallas kernel
-    # writes each out block only when visited, so empty rows get an explicit
-    # zero diagonal tile (keeps output fully initialized).
-    present = np.zeros(n_blocks, dtype=bool)
+    np.add.at(blocks, (tile_of_edge, dst % bs, src % bs), weight)
+    return block_rows, block_cols, blocks
+
+
+def _finalize_tiles(block_rows: np.ndarray, block_cols: np.ndarray,
+                    blocks: np.ndarray, n_row_blocks: int, bs: int):
+    """Sort tiles by destination block and mark each row's first tile.
+
+    Every destination block row gets >= 1 tile: the Pallas kernel writes
+    each out block only when visited, so absent rows receive an explicit
+    all-zero tile (keeps the output fully initialized)."""
+    present = np.zeros(n_row_blocks, dtype=bool)
     present[block_rows] = True
     missing = np.where(~present)[0].astype(np.int32)
     if len(missing):
         block_rows = np.concatenate([block_rows, missing])
-        block_cols = np.concatenate([block_cols, missing])
+        block_cols = np.concatenate(
+            [block_cols, np.zeros(len(missing), np.int32)])
         blocks = np.concatenate(
             [blocks, np.zeros((len(missing), bs, bs), np.float32)])
-        order = np.argsort(block_rows, kind="stable")
-        block_rows, block_cols = block_rows[order], block_cols[order]
-        blocks = blocks[order]
+    order = np.lexsort((block_cols, block_rows))
+    block_rows, block_cols = block_rows[order], block_cols[order]
+    blocks = blocks[order]
     row_first = np.ones(len(block_rows), dtype=np.int32)
     row_first[1:] = (block_rows[1:] != block_rows[:-1]).astype(np.int32)
+    return block_rows, block_cols, row_first, blocks
+
+
+def block_sparse(g: Graph, bs: int = 128) -> BlockSparseGraph:
+    n_padded = -(-g.n // bs) * bs
+    n_blocks = n_padded // bs
+    rows, cols, blocks = _coo_tiles(g.dst, g.src, g.weight,
+                                    n_blocks, n_blocks, bs)
+    rows, cols, first, blocks = _finalize_tiles(rows, cols, blocks,
+                                                n_blocks, bs)
     return BlockSparseGraph(
         n=g.n, n_padded=n_padded, bs=bs, n_blocks=n_blocks,
-        block_rows=block_rows, block_cols=block_cols,
-        row_first=row_first, blocks=blocks)
+        block_rows=rows, block_cols=cols,
+        row_first=first, blocks=blocks)
+
+
+def block_sparse_transpose(bsg: BlockSparseGraph) -> BlockSparseGraph:
+    """Tiles of Âᵀ, re-sorted by *source* block — the backward-pass plan.
+
+    ``grad_h`` of ``out = Â @ h`` is ``Âᵀ @ grad_out``; swapping each
+    tile's (row, col) pair and transposing the tile yields exactly the
+    block-sparse form of Âᵀ, ready for the same kernel."""
+    rows, cols, first, blocks = _finalize_tiles(
+        bsg.block_cols.copy(), bsg.block_rows.copy(),
+        np.ascontiguousarray(np.swapaxes(bsg.blocks, 1, 2)),
+        bsg.n_blocks, bsg.bs)
+    return BlockSparseGraph(
+        n=bsg.n, n_padded=bsg.n_padded, bs=bsg.bs, n_blocks=bsg.n_blocks,
+        block_rows=rows, block_cols=cols, row_first=first, blocks=blocks)
+
+
+# ---------------------------------------------------------------------------
+# Rectangular / per-chunk block-sparse plans (forward + transpose tiles)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockSparsePlan:
+    """Rectangular block-sparse aggregation plan with its backward tiles.
+
+    Forward tiles cover a (n_rows × n_cols) slice of Â; the ``*_t`` arrays
+    are the transposed tiles (Âᵀ slice, sorted by source block) that the
+    custom VJP multiplies the cotangent through.  Data arrays may carry one
+    leading stack axis — chunks of the §4.2 scan, or workers of the DP
+    partition — which ``lax.scan`` unstacks an instance at a time.
+    """
+
+    n_rows: int          # real destination rows per instance
+    n_cols: int          # real source rows per instance
+    rows_padded: int     # n_rows padded to a multiple of bs (kernel out)
+    cols_padded: int     # n_cols padded to a multiple of bs (kernel in)
+    bs: int
+    block_rows: np.ndarray    # ([C,] nnzb) int32 non-decreasing
+    block_cols: np.ndarray    # ([C,] nnzb) int32
+    row_first: np.ndarray     # ([C,] nnzb) int32 {0,1}
+    blocks: np.ndarray        # ([C,] nnzb, bs, bs) float32
+    block_rows_t: np.ndarray  # transpose plan, same layout
+    block_cols_t: np.ndarray
+    row_first_t: np.ndarray
+    blocks_t: np.ndarray
+
+    @property
+    def nnzb(self) -> int:
+        return int(self.block_rows.shape[-1])
+
+    @property
+    def nnzb_t(self) -> int:
+        return int(self.block_rows_t.shape[-1])
+
+
+def rect_block_sparse(dst: np.ndarray, src: np.ndarray, weight: np.ndarray,
+                      n_rows: int, n_cols: int, bs: int) -> BlockSparsePlan:
+    """Plan for one rectangular slice ``out[dst] += w · h[src]`` with
+    ``dst ∈ [0, n_rows)`` and ``src ∈ [0, n_cols)``, plus its transpose."""
+    rows_padded = -(-n_rows // bs) * bs
+    cols_padded = -(-n_cols // bs) * bs
+    r_blocks, c_blocks = rows_padded // bs, cols_padded // bs
+    fr, fc, fb = _coo_tiles(dst, src, weight, r_blocks, c_blocks, bs)
+    fr, fc, ff, fb = _finalize_tiles(fr, fc, fb, r_blocks, bs)
+    tr, tc, tb = _coo_tiles(src, dst, weight, c_blocks, r_blocks, bs)
+    tr, tc, tf, tb = _finalize_tiles(tr, tc, tb, c_blocks, bs)
+    return BlockSparsePlan(
+        n_rows=n_rows, n_cols=n_cols,
+        rows_padded=rows_padded, cols_padded=cols_padded, bs=bs,
+        block_rows=fr, block_cols=fc, row_first=ff, blocks=fb,
+        block_rows_t=tr, block_cols_t=tc, row_first_t=tf, blocks_t=tb)
+
+
+def stack_plans(plans: list[BlockSparsePlan]) -> BlockSparsePlan:
+    """Stack same-shape plans along a new leading axis for ``lax.scan``.
+
+    Instances are padded to the max tile count with all-zero tiles at
+    (row = last row block, col = 0, row_first = 0): rows stay
+    non-decreasing and the kernel accumulates nothing for them."""
+    meta = {(p.n_rows, p.n_cols, p.bs) for p in plans}
+    if len(meta) != 1:
+        raise ValueError(f"stack_plans needs uniform plan shapes, got {meta}")
+    p0 = plans[0]
+
+    def pad_set(rows, cols, first, blocks, m, n_row_blocks):
+        k = m - len(rows)
+        if k:
+            rows = np.concatenate(
+                [rows, np.full(k, n_row_blocks - 1, np.int32)])
+            cols = np.concatenate([cols, np.zeros(k, np.int32)])
+            first = np.concatenate([first, np.zeros(k, np.int32)])
+            blocks = np.concatenate(
+                [blocks, np.zeros((k, p0.bs, p0.bs), np.float32)])
+        return rows, cols, first, blocks
+
+    m_f = max(p.nnzb for p in plans)
+    m_t = max(p.nnzb_t for p in plans)
+    fwd = [pad_set(p.block_rows, p.block_cols, p.row_first, p.blocks,
+                   m_f, p0.rows_padded // p0.bs) for p in plans]
+    bwd = [pad_set(p.block_rows_t, p.block_cols_t, p.row_first_t, p.blocks_t,
+                   m_t, p0.cols_padded // p0.bs) for p in plans]
+    return dataclasses.replace(
+        p0,
+        block_rows=np.stack([s[0] for s in fwd]),
+        block_cols=np.stack([s[1] for s in fwd]),
+        row_first=np.stack([s[2] for s in fwd]),
+        blocks=np.stack([s[3] for s in fwd]),
+        block_rows_t=np.stack([s[0] for s in bwd]),
+        block_cols_t=np.stack([s[1] for s in bwd]),
+        row_first_t=np.stack([s[2] for s in bwd]),
+        blocks_t=np.stack([s[3] for s in bwd]))
+
+
+def chunk_block_sparse(g: Graph, n_chunks: int,
+                       bs: int = 128) -> BlockSparsePlan:
+    """Per-chunk plans for the §4.2 chunk scan, stacked for ``lax.scan``.
+
+    Chunk ``c`` owns destination rows ``[c·cs, (c+1)·cs)`` with all their
+    in-edges; sources span the full vertex set.  Chunk bounds clamp
+    identically to :func:`chunk_graph` when ``n_chunks ∤ n`` (trailing
+    chunks go empty and carry only zero-fill tiles)."""
+    cs = -(-g.n // n_chunks)
+    plans = []
+    for c in range(n_chunks):
+        lo = min(g.n, c * cs)
+        hi = min(g.n, (c + 1) * cs)
+        e_lo, e_hi = g.indptr[lo], g.indptr[hi]
+        plans.append(rect_block_sparse(
+            g.dst[e_lo:e_hi] - lo, g.src[e_lo:e_hi], g.weight[e_lo:e_hi],
+            n_rows=cs, n_cols=g.n, bs=bs))
+    return stack_plans(plans)
 
 
 def pad_features(x: np.ndarray, n_padded: int) -> np.ndarray:

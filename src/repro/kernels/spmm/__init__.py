@@ -1,3 +1,5 @@
-from .ops import BlockSparseDev, block_sparse_dev, aggregate_pallas  # noqa: F401
+from .ops import (BlockSparseDev, BlockSparsePlanDev, block_sparse_dev,
+                  block_sparse_plan_dev, square_plan_dev, aggregate_pallas,
+                  aggregate_plan)  # noqa: F401
 from .ref import spmm_ref, spmm_dense_ref  # noqa: F401
-from .spmm import spmm_block_sparse  # noqa: F401
+from .spmm import spmm_block_sparse, resolve_interpret  # noqa: F401

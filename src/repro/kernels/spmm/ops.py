@@ -1,4 +1,24 @@
-"""Jitted public wrapper around the block-sparse SpMM Pallas kernel."""
+"""Jitted public wrappers around the block-sparse SpMM Pallas kernel.
+
+Two device-side containers:
+
+* :class:`BlockSparseDev`     — forward tiles only (kernel benchmarking,
+  one-shot aggregation; autodiff differentiates *through* the pallas_call).
+* :class:`BlockSparsePlanDev` — forward + transposed tiles.  Aggregations
+  through a plan carry a ``jax.custom_vjp`` whose backward multiplies the
+  cotangent by the precomputed Âᵀ tiles through the same kernel, so the
+  gradient is exact (Â is constant data) and never depends on Pallas
+  autodiff support.
+
+GAT exclusion: the engines route only *static-weight* aggregation (GCN /
+SAGE / GIN, where Â is fixed per graph) through these kernels.  GAT's edge
+weights α are computed at runtime from the layer's features — they cannot
+be baked into precomputed tiles — so GAT always aggregates via the
+segment-sum backend (see ``repro.core.agg``).
+
+``interpret=None`` everywhere means auto: run the Pallas interpreter unless
+the program is lowering for a real TPU (``spmm.resolve_interpret``).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -6,8 +26,10 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ...graph.format import BlockSparseGraph
+from ...graph.format import (BlockSparseGraph, BlockSparsePlan,
+                             block_sparse_transpose)
 from .spmm import spmm_block_sparse
 from .ref import spmm_ref
 
@@ -36,16 +58,153 @@ def block_sparse_dev(bsg: BlockSparseGraph,
         n=bsg.n, n_padded=bsg.n_padded, bs=bsg.bs)
 
 
-def aggregate_pallas(bsg: BlockSparseDev, h: jax.Array, *,
-                     d_tile: int = 128, interpret: bool = True,
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("blocks", "block_rows", "block_cols", "row_first",
+                      "blocks_t", "block_rows_t", "block_cols_t",
+                      "row_first_t"),
+         meta_fields=("n_rows", "n_cols", "rows_padded", "cols_padded",
+                      "bs"))
+@dataclasses.dataclass(frozen=True)
+class BlockSparsePlanDev:
+    """Device mirror of :class:`repro.graph.format.BlockSparsePlan`.
+
+    Data arrays may carry one leading stack axis (chunks / DP workers)
+    which ``lax.scan`` unstacks; the static meta is shared across the
+    stack, so a scanned-out slice is again a valid plan instance."""
+
+    blocks: jax.Array
+    block_rows: jax.Array
+    block_cols: jax.Array
+    row_first: jax.Array
+    blocks_t: jax.Array
+    block_rows_t: jax.Array
+    block_cols_t: jax.Array
+    row_first_t: jax.Array
+    n_rows: int
+    n_cols: int
+    rows_padded: int
+    cols_padded: int
+    bs: int
+
+
+def block_sparse_plan_dev(plan: BlockSparsePlan,
+                          dtype=jnp.float32) -> BlockSparsePlanDev:
+    return BlockSparsePlanDev(
+        blocks=jnp.asarray(plan.blocks, dtype),
+        block_rows=jnp.asarray(plan.block_rows),
+        block_cols=jnp.asarray(plan.block_cols),
+        row_first=jnp.asarray(plan.row_first),
+        blocks_t=jnp.asarray(plan.blocks_t, dtype),
+        block_rows_t=jnp.asarray(plan.block_rows_t),
+        block_cols_t=jnp.asarray(plan.block_cols_t),
+        row_first_t=jnp.asarray(plan.row_first_t),
+        n_rows=plan.n_rows, n_cols=plan.n_cols,
+        rows_padded=plan.rows_padded, cols_padded=plan.cols_padded,
+        bs=plan.bs)
+
+
+def square_plan_dev(bsg: BlockSparseGraph,
+                    dtype=jnp.float32) -> BlockSparsePlanDev:
+    """Full-graph (square Â) plan: forward tiles + Âᵀ tiles for the VJP."""
+    t = block_sparse_transpose(bsg)
+    return BlockSparsePlanDev(
+        blocks=jnp.asarray(bsg.blocks, dtype),
+        block_rows=jnp.asarray(bsg.block_rows),
+        block_cols=jnp.asarray(bsg.block_cols),
+        row_first=jnp.asarray(bsg.row_first),
+        blocks_t=jnp.asarray(t.blocks, dtype),
+        block_rows_t=jnp.asarray(t.block_rows),
+        block_cols_t=jnp.asarray(t.block_cols),
+        row_first_t=jnp.asarray(t.row_first),
+        n_rows=bsg.n, n_cols=bsg.n,
+        rows_padded=bsg.n_padded, cols_padded=bsg.n_padded, bs=bsg.bs)
+
+
+def _run_tiles(blocks, rows, cols, first, h, n_in_padded: int, n_out: int,
+               d_tile: int, interpret, use_ref: bool):
+    """Pad h (rows → n_in_padded, d → d_tile multiple), run, unpad d."""
+    n, d = h.shape
+    dt = min(d_tile, _round_up(d, 8))
+    d_pad = _round_up(d, dt) - d
+    hp = jnp.pad(h, ((0, n_in_padded - n), (0, d_pad)))
+    if use_ref:
+        out = spmm_ref(blocks, rows, cols, hp, n_out=n_out)
+    else:
+        out = spmm_block_sparse(blocks, rows, cols, first, hp,
+                                d_tile=dt, interpret=interpret,
+                                n_out=n_out)
+    return out[:, :d]
+
+
+def _zero_cotangent(tree):
+    """Cotangent of a non-differentiable operand pytree: zeros for float
+    leaves, ``float0`` for integer leaves (jax's tangent dtype for them)."""
+    def zero(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jnp.zeros(x.shape, x.dtype)
+        return np.zeros(x.shape, jax.dtypes.float0)
+    return jax.tree.map(zero, tree)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _plan_spmm(n_in, d_tile, interpret, use_ref, plan, h):
+    return _run_tiles(plan.blocks, plan.block_rows, plan.block_cols,
+                      plan.row_first, h, plan.cols_padded,
+                      plan.rows_padded, d_tile, interpret, use_ref)
+
+
+def _plan_spmm_fwd(n_in, d_tile, interpret, use_ref, plan, h):
+    return _plan_spmm(n_in, d_tile, interpret, use_ref, plan, h), plan
+
+
+def _plan_spmm_bwd(n_in, d_tile, interpret, use_ref, plan, gy):
+    # grad_h = Âᵀ @ gy through the same kernel on the transposed tiles.
+    # The padded-row tail of the primal output was sliced away by the
+    # caller, so its cotangent rows arrive as exact zeros and contribute
+    # nothing — no masking needed.
+    gh = _run_tiles(plan.blocks_t, plan.block_rows_t, plan.block_cols_t,
+                    plan.row_first_t, gy, plan.rows_padded,
+                    plan.cols_padded, d_tile, interpret, use_ref)
+    return _zero_cotangent(plan), gh[:n_in]
+
+
+_plan_spmm.defvjp(_plan_spmm_fwd, _plan_spmm_bwd)
+
+
+def aggregate_plan(plan: BlockSparsePlanDev, h: jax.Array, *,
+                   d_tile: int = 128, interpret: bool | None = None,
+                   use_ref: bool = False) -> jax.Array:
+    """One plan instance: ``(rows_padded, d) = Â_plan @ h`` with the exact
+    custom VJP through the transposed tiles.  ``h`` is (n_in, d) with
+    n_in ≤ cols_padded (rows are zero-padded internally); the caller
+    slices the real output rows (``[:plan.n_rows]``)."""
+    return _plan_spmm(h.shape[0], d_tile, interpret, use_ref, plan, h)
+
+
+def aggregate_pallas(bsg: BlockSparseDev | BlockSparsePlanDev,
+                     h: jax.Array, *, d_tile: int = 128,
+                     interpret: bool | None = None,
                      use_ref: bool = False) -> jax.Array:
     """Â @ h via the Pallas kernel; pads rows/dims, unpads the result.
 
-    ``interpret=True`` executes the kernel body on CPU (validation mode);
-    on real TPU pass ``interpret=False``.  ``use_ref`` short-circuits to the
-    jnp oracle (useful to A/B inside larger models).
-    """
+    Given a :class:`BlockSparsePlanDev` (square), the multiply carries the
+    custom VJP: the backward multiplies the cotangent by the precomputed
+    Âᵀ tiles through the same kernel instead of differentiating through
+    the pallas_call.  A plain :class:`BlockSparseDev` runs forward-only
+    tiles (autodiff, if requested, goes through the kernel itself).
+
+    ``interpret=None`` → auto: interpret everywhere except a real TPU
+    backend (``spmm.resolve_interpret``); tests pass ``True`` to pin the
+    interpreter, a TPU caller may pass ``False`` explicitly.  ``use_ref``
+    short-circuits to the jnp oracle (useful to A/B inside larger models).
+
+    Note: only static-weight aggregation can use these tiles — GAT's
+    runtime attention weights keep it on the segment-sum path (module
+    docstring)."""
     n, d = h.shape
+    if isinstance(bsg, BlockSparsePlanDev):
+        return aggregate_plan(bsg, h, d_tile=d_tile, interpret=interpret,
+                              use_ref=use_ref)[:n]
     pad_rows = bsg.n_padded - n
     d_tile = min(d_tile, _round_up(d, 8))
     d_pad = _round_up(d, d_tile) - d

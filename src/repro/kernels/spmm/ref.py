@@ -6,21 +6,26 @@ import jax.numpy as jnp
 
 
 def spmm_ref(blocks: jax.Array, block_rows: jax.Array,
-             block_cols: jax.Array, h: jax.Array) -> jax.Array:
+             block_cols: jax.Array, h: jax.Array,
+             n_out: int | None = None) -> jax.Array:
     """out[r] = Σ_k [rows[k]==r] blocks[k] @ h_block[cols[k]]   (dense math).
 
     Independent of the kernel's scheduling: gathers source blocks, does one
-    batched matmul, and segment-sums per destination block.
+    batched matmul, and segment-sums per destination block.  ``n_out``
+    (multiple of bs) sets the output rows for rectangular A slices.
     """
     nnzb, bs, _ = blocks.shape
     n_padded, d = h.shape
-    n_blocks = n_padded // bs
-    h_blocked = h.reshape(n_blocks, bs, d)
+    n_out = n_padded if n_out is None else n_out
+    n_in_blocks = n_padded // bs
+    n_out_blocks = n_out // bs
+    h_blocked = h.reshape(n_in_blocks, bs, d)
     contribs = jnp.einsum("kab,kbd->kad", blocks,
                           h_blocked[block_cols],
                           preferred_element_type=jnp.float32)
-    out = jax.ops.segment_sum(contribs, block_rows, num_segments=n_blocks)
-    return out.reshape(n_padded, d).astype(h.dtype)
+    out = jax.ops.segment_sum(contribs, block_rows,
+                              num_segments=n_out_blocks)
+    return out.reshape(n_out, d).astype(h.dtype)
 
 
 def spmm_dense_ref(dense_a: jax.Array, h: jax.Array) -> jax.Array:

@@ -45,12 +45,27 @@ def _kernel(rows_ref, cols_ref, first_ref, blocks_ref, h_ref, out_ref):
                         + contrib).astype(out_ref.dtype)
 
 
+def resolve_interpret(interpret: bool | None) -> bool:
+    """The kernel's ``interpret`` auto-contract.
+
+    ``None`` (the default) resolves at trace time to *interpret unless the
+    program is actually lowering for TPU* — so CPU test rigs and the forced
+    host-device harness run the Pallas interpreter transparently, while a
+    real-TPU caller gets the compiled kernel without having to remember to
+    flip a flag.  An explicit ``True``/``False`` always wins (tests pin the
+    interpreter; a TPU debug session can force it on)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("d_tile", "interpret"))
+                   static_argnames=("d_tile", "interpret", "n_out"))
 def spmm_block_sparse(blocks: jax.Array, block_rows: jax.Array,
                       block_cols: jax.Array, row_first: jax.Array,
                       h: jax.Array, *, d_tile: int = 128,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None,
+                      n_out: int | None = None) -> jax.Array:
     """out = A @ h with A given as sorted block tiles.
 
     blocks     : (nnzb, bs, bs) float
@@ -58,11 +73,28 @@ def spmm_block_sparse(blocks: jax.Array, block_rows: jax.Array,
     block_cols : (nnzb,) int32 source block ids
     row_first  : (nnzb,) int32 — 1 iff first tile of its destination row
     h          : (n_padded, d) with n_padded % bs == 0 and d % d_tile == 0
+    n_out      : output rows (multiple of bs); defaults to n_padded.  A
+                 rectangular A slice (per-chunk forward, transposed
+                 backward) has out rows ≠ in rows.
+    interpret  : None → auto (:func:`resolve_interpret`): interpret
+                 everywhere except a real TPU backend.
     """
     nnzb, bs, _ = blocks.shape
     n_padded, d = h.shape
-    assert n_padded % bs == 0, (n_padded, bs)
-    assert d % d_tile == 0, (d, d_tile)
+    n_out = n_padded if n_out is None else n_out
+    if n_padded % bs:
+        raise ValueError(
+            f"spmm_block_sparse: h has {n_padded} rows, not a multiple of "
+            f"the block size bs={bs} — pad the source rows first")
+    if n_out % bs:
+        raise ValueError(
+            f"spmm_block_sparse: n_out={n_out} is not a multiple of the "
+            f"block size bs={bs}")
+    if d % d_tile:
+        raise ValueError(
+            f"spmm_block_sparse: feature dim d={d} is not a multiple of "
+            f"d_tile={d_tile} — pad the feature dim first")
+    interpret = resolve_interpret(interpret)
     d_tiles = d // d_tile
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -80,7 +112,7 @@ def spmm_block_sparse(blocks: jax.Array, block_rows: jax.Array,
     fn = pl.pallas_call(
         _kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_padded, d), h.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_out, d), h.dtype),
         interpret=interpret,
     )
     return fn(block_rows, block_cols, row_first, blocks, h)

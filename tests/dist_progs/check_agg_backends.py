@@ -1,0 +1,145 @@
+"""8-device aggregation-backend equivalence + comm-invariance check.
+
+For the GCN, every pluggable aggregation backend (``repro.core.agg``:
+segment / blocksparse / dense) must produce the same losses AND grads
+(atol 1e-5) as the segment baseline, for
+
+  * the TP engine: decoupled, decoupled_pipelined and naive modes,
+  * the DP baseline: coupled halo-exchange forward,
+
+each under both engine backends (explicit shard_map / constraint
+partitioner), on pure TP (model=8) and a (data=2, model=4) hybrid mesh.
+
+The backend choice is pure local compute — NeutronTP's communication all
+happens in the split/gather all-to-alls (TP) or the halo exchange (DP)
+*around* the multiply — so the trace-time CommLedger must be
+byte-identical (``as_dict`` equality) across backends for every program,
+and the blocksparse programs must additionally pass the tier-2 jaxpr
+collective audit (``repro.analysis.jaxpr_audit.assert_clean``).
+
+``--ci-smoke`` runs the fast subset wired into scripts/ci.sh: pure TP,
+decoupled GCN, both engine backends, blocksparse vs segment, plus the
+DP explicit path.  Run as a child with
+--xla_force_host_platform_device_count=8.
+"""
+import os
+import sys
+
+assert "--xla_force_host_platform_device_count=8" in \
+    os.environ.get("XLA_FLAGS", "")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.analysis import jaxpr_audit as A  # noqa: E402
+from repro.core import decouple as D  # noqa: E402
+from repro.gnn import dp_baseline as DP  # noqa: E402
+from repro.gnn import models as M  # noqa: E402
+from repro.graph import sbm_power_law  # noqa: E402
+from repro.runtime import collect_comm, hybrid_mesh, tp_mesh  # noqa: E402
+
+assert len(jax.devices()) == 8
+
+SMOKE = "--ci-smoke" in sys.argv[1:]
+AGGS = ("segment", "blocksparse") if SMOKE else \
+    ("segment", "blocksparse", "dense")
+MODES = ("decoupled",) if SMOKE else \
+    ("decoupled", "decoupled_pipelined", "naive")
+BACKENDS = ("explicit", "constraint")
+ATOL = 1e-5
+
+data = sbm_power_law(n=616, num_classes=5, feat_dim=24, avg_degree=8,
+                     seed=0)
+
+
+def tree_max_diff(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(np.abs(np.asarray(x) - np.asarray(y)).max()),
+        a, b)))
+
+
+def run_one(tag, make_vg, make_loss, params, mask, backend, audit):
+    """(loss, grads, ledger-dict) of one program; blocksparse programs
+    additionally pass the structural jaxpr audit."""
+    with collect_comm() as led:
+        jxp = jax.make_jaxpr(jax.value_and_grad(make_loss()))(params, mask)
+    if audit:
+        A.assert_clean(jxp, led, backend=backend, tag=tag)
+    loss, grads = make_vg()(params, mask)
+    return float(loss), grads, led.as_dict()
+
+
+def check_group(tag, programs, params, mask):
+    """programs: agg → (make_vg, make_loss, backend).  Asserts loss/grad
+    equality and ledger byte-identity against the segment entry."""
+    ref = None
+    for agg, (make_vg, make_loss, backend) in programs.items():
+        loss, grads, led = run_one(f"{tag}/{agg}", make_vg, make_loss,
+                                   params, mask, backend,
+                                   audit=agg == "blocksparse")
+        if ref is None:
+            ref = (loss, grads, led)
+            continue
+        dl = abs(loss - ref[0])
+        dg = tree_max_diff(grads, ref[1])
+        assert dl < ATOL and dg < ATOL, (tag, agg, dl, dg)
+        assert led == ref[2], (
+            f"{tag}/{agg}: CommLedger differs from segment baseline — "
+            f"aggregation backends must not change communication")
+        print(f"ok {tag}/{agg}: dloss={dl:.2e} dgrad={dg:.2e} "
+              f"ledger-identical")
+
+
+# --- TP engine: meshes × modes × engine backends × agg backends ---------
+tp_meshes = [("tp8", tp_mesh(8), dict(n_workers=8))]
+if not SMOKE:
+    tp_meshes.append(("d2x4", hybrid_mesh(data=2),
+                      dict(n_workers=4, n_replicas=2)))
+
+for mesh_tag, mesh, prep_kw in tp_meshes:
+    bundles = {agg: D.prepare_bundle(data, n_chunks=4, agg=agg,
+                                     agg_block_size=32, **prep_kw)
+               for agg in AGGS}
+    cfg = D.padded_gnn_config(data, bundles["segment"], model="gcn",
+                              hidden_dim=32, num_layers=2)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    for mode in MODES:
+        for backend in BACKENDS:
+            progs = {
+                agg: (
+                    lambda a=agg, b=backend, m=mode: D.make_tp_value_and_grad(
+                        cfg, bundles[a], mesh, mode=m, backend=b),
+                    lambda a=agg, b=backend, m=mode: D.make_tp_loss_fn(
+                        cfg, bundles[a], mesh, mode=m, backend=b),
+                    backend)
+                for agg in AGGS}
+            check_group(f"tp/{mesh_tag}/{mode}/{backend}", progs, params,
+                        bundles["segment"].train_mask)
+
+# --- DP baseline: meshes × engine backends × agg backends ---------------
+dp_meshes = [("tp8", tp_mesh(8), dict(k=8))]
+dp_backends = ("explicit",) if SMOKE else BACKENDS
+if not SMOKE:
+    dp_meshes.append(("d2x4", hybrid_mesh(data=2),
+                      dict(k=4, n_replicas=2)))
+
+dp_cfg = M.GNNConfig(model="gcn", in_dim=24, hidden_dim=32, num_classes=5,
+                     num_layers=2, decoupled=False)
+dp_params = M.init_params(jax.random.PRNGKey(1), dp_cfg)
+for mesh_tag, mesh, prep_kw in dp_meshes:
+    bundles = {agg: DP.prepare_dp_bundle(data, agg=agg, agg_block_size=32,
+                                         **prep_kw)
+               for agg in AGGS}
+    for backend in dp_backends:
+        progs = {
+            agg: (
+                lambda a=agg, b=backend: DP.make_dp_value_and_grad(
+                    dp_cfg, bundles[a], mesh, backend=b),
+                lambda a=agg, b=backend: DP.make_dp_loss_fn(
+                    dp_cfg, bundles[a], mesh, backend=b),
+                backend)
+            for agg in AGGS}
+        check_group(f"dp/{mesh_tag}/{backend}", progs, dp_params,
+                    bundles["segment"].train_mask)
+
+print("OK check_agg_backends")

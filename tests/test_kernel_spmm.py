@@ -102,3 +102,85 @@ def test_spmm_kernel_direct_call_accumulation_order():
     ref = spmm_ref(jnp.asarray(blocks), jnp.asarray(rows), jnp.asarray(cols),
                    jnp.asarray(h))
     np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Plan-based aggregation: custom VJP, shape validation, interpret contract
+# ---------------------------------------------------------------------------
+
+def test_plan_vjp_grad_matches_dense_oracle():
+    """Â through the plan kernel: forward AND grad vs the dense oracle,
+    with n not a multiple of bs and d < d_tile (padded tail rows/cols)."""
+    from repro.kernels.spmm import square_plan_dev
+
+    g = random_graph(197, 4, seed=11)        # 197 % 64 != 0
+    plan = square_plan_dev(block_sparse(g, bs=64))
+    rng = np.random.default_rng(2)
+    h = jnp.asarray(rng.normal(size=(g.n, 20)).astype(np.float32))
+    cot = jnp.asarray(rng.normal(size=(g.n, 20)).astype(np.float32))
+    a = jnp.asarray(g.dense_adjacency())
+
+    def f(hh):
+        return jnp.vdot(aggregate_pallas(plan, hh), cot)
+
+    def f_ref(hh):
+        return jnp.vdot(a @ hh, cot)
+
+    np.testing.assert_allclose(f(h), f_ref(h), rtol=1e-5)
+    gh = jax.jit(jax.grad(f))(h)
+    gh_ref = jax.grad(f_ref)(h)
+    np.testing.assert_allclose(gh, gh_ref, atol=1e-4)
+
+
+def test_chunked_plan_scan_vjp_matches_dense_oracle():
+    """Stacked per-chunk plans under lax.scan (the engines' §4.2 shape),
+    n_chunks ∤ n: value and grad vs the dense oracle."""
+    from repro.graph import chunk_block_sparse
+    from repro.kernels.spmm import aggregate_plan, block_sparse_plan_dev
+
+    g = random_graph(197, 4, seed=12)        # 3 ∤ 197
+    plan = block_sparse_plan_dev(chunk_block_sparse(g, 3, bs=64))
+    cs = plan.n_rows
+    rng = np.random.default_rng(3)
+    h = jnp.asarray(rng.normal(size=(g.n, 20)).astype(np.float32))
+    cot = jnp.asarray(rng.normal(size=(3 * cs, 20)).astype(np.float32))
+    a = jnp.asarray(g.dense_adjacency())
+
+    def f(hh):
+        def body(_, p):
+            return None, aggregate_plan(p, hh)[:cs]
+        _, out = jax.lax.scan(body, None, plan)
+        return jnp.vdot(out.reshape(-1, hh.shape[1]), cot)
+
+    def f_ref(hh):
+        out = a @ hh                          # (n, d); pad to chunk grid
+        out = jnp.pad(out, ((0, 3 * cs - g.n), (0, 0)))
+        return jnp.vdot(out, cot)
+
+    np.testing.assert_allclose(f(h), f_ref(h), rtol=1e-5)
+    np.testing.assert_allclose(jax.jit(jax.grad(f))(h), jax.grad(f_ref)(h),
+                               atol=1e-4)
+
+
+def test_spmm_shape_validation_errors():
+    """Mis-shaped operands raise ValueErrors naming the offending shape
+    (they used to be bare asserts)."""
+    bs = 64
+    blocks = jnp.zeros((1, bs, bs), jnp.float32)
+    z = jnp.zeros((1,), jnp.int32)
+    with pytest.raises(ValueError, match=r"100 rows, not a multiple"):
+        spmm_block_sparse(blocks, z, z, z, jnp.zeros((100, 64)))
+    with pytest.raises(ValueError, match=r"n_out=100 is not a multiple"):
+        spmm_block_sparse(blocks, z, z, z, jnp.zeros((128, 64)), n_out=100)
+    with pytest.raises(ValueError, match=r"d=100 is not a multiple"):
+        spmm_block_sparse(blocks, z, z, z, jnp.zeros((128, 100)), d_tile=64)
+
+
+def test_resolve_interpret_auto_contract():
+    """None → interpret everywhere except a real TPU; explicit overrides
+    pass through untouched."""
+    from repro.kernels.spmm import resolve_interpret
+
+    assert resolve_interpret(None) == (jax.default_backend() != "tpu")
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
