@@ -42,6 +42,7 @@ MODULES = [
     "bench_spmm_kernel",
     "bench_flash_kernel",
     "bench_ssd_kernel",
+    "bench_oocstream",
 ]
 
 

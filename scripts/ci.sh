@@ -6,6 +6,7 @@
 #                            # subprocess lane
 #   scripts/ci.sh --fast     # fast lane + bench smokes only (-m "not slow")
 #   scripts/ci.sh --multihost-smoke   # just the multihost smoke stage
+#   scripts/ci.sh --oocstream-smoke   # just the out-of-core streaming smoke
 #
 # Every lane (default and --fast) starts with the distributed-discipline
 # lint stage (scripts/lint_dist.py): AST rules RT001-RT005 over src/repro
@@ -66,8 +67,18 @@ multihost_smoke() {
             --tag-prefix mh_
 }
 
+oocstream_smoke() {
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        python tests/dist_progs/check_oocstream.py --ci-smoke
+}
+
 if [[ "${1:-}" == "--multihost-smoke" ]]; then
     multihost_smoke
+    exit 0
+fi
+
+if [[ "${1:-}" == "--oocstream-smoke" ]]; then
+    oocstream_smoke
     exit 0
 fi
 
@@ -88,6 +99,14 @@ python -m benchmarks.bench_comm_volume --telemetry-smoke
 # collective audit — the backend choice is pure local compute.
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python tests/dist_progs/check_agg_backends.py --ci-smoke
+
+# Out-of-core streaming smoke (8 forced devices): the streamed decoupled
+# epoch (host feature store + double-buffered H2D prefetch,
+# repro.core.stream) must match the in-memory epoch — losses AND grads
+# to atol 1e-5, collective CommLedger byte-identical, and the measured
+# h2d column equal to the analytic expected_h2d_bytes exactly — for
+# segment+blocksparse × both engine backends.
+oocstream_smoke
 
 multihost_smoke
 

@@ -187,7 +187,12 @@ def sharding_constraint_counts(jaxpr) -> dict[tuple, float]:
 def expected_from_ledger(ledger: T.CommLedger) -> dict[tuple, float]:
     """Jaxpr-side collective counts the ledger implies: forward ``calls``
     under the op itself, ``mirrored_calls`` under the primitive its
-    transpose emits (:data:`MIRROR_OP`)."""
+    transpose emits (:data:`MIRROR_OP`).
+
+    Non-collective ledger ops — today only the H2D staging column
+    (:data:`repro.runtime.telemetry.H2D_OP`) — never appear in a jaxpr
+    (a ``device_put`` from host numpy happens outside the traced
+    program), so they are skipped rather than reported as phantoms."""
     exp: dict[tuple, float] = {}
 
     def bump(key, n):
@@ -195,6 +200,8 @@ def expected_from_ledger(ledger: T.CommLedger) -> dict[tuple, float]:
             exp[key] = exp.get(key, 0.0) + n
 
     for (op, label, dtype), e in ledger.entries().items():
+        if op not in MIRROR_OP:
+            continue
         bump((op, label, dtype), e.calls)
         bump((MIRROR_OP[op], label, dtype), e.mirrored_calls)
     return exp

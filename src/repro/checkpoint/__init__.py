@@ -1,9 +1,30 @@
 """Checkpointing: flat .npz per pytree + JSON manifest (no orbax offline).
 
 Handles arbitrary registered-dataclass pytrees (TrainState, ParamLeaf
-trees, caches) by saving leaves keyed by their flattened index alongside a
-treedef fingerprint; restore validates structure against a template from
-the same code version.
+trees, caches) by saving leaves keyed by their flattened index alongside
+a treedef fingerprint.
+
+What :func:`restore` actually validates, in order:
+
+1. **leaf count** — manifest ``n_leaves`` vs the template's flattened
+   leaves;
+2. **tree structure** — the stored ``treedef`` fingerprint
+   (``str(treedef)``) must equal the template's: a same-arity pytree
+   with different structure (a dict key renamed, a list that became a
+   tuple) is rejected instead of silently restoring leaves into the
+   wrong slots;
+3. **per-leaf shape and dtype** — each saved array against the template
+   leaf, errors naming the leaf's tree path (``jax.tree_util.keystr``).
+
+Values are NOT checksummed, and optimizer hyper-state / code version are
+whatever the caller put in ``metadata`` — this module validates layout,
+not meaning.
+
+Single-host only: :func:`save` requires every leaf to be fully
+addressable from this process and raises an actionable error for
+multi-process global arrays (per-process *sharded* checkpointing is the
+ROADMAP "elastic multi-host" item; gather to host or save replicated
+state from the coordinator until then).
 """
 from __future__ import annotations
 
@@ -15,8 +36,34 @@ import jax
 import numpy as np
 
 
+def _leaf_paths(tree: Any):
+    """(keystr paths, leaves, treedef) of a pytree — paths name leaves in
+    errors so "leaf 17" becomes "['layers'][2]['w']"."""
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [jax.tree_util.keystr(p) or "<root>"
+             for p, _ in paths_and_leaves]
+    leaves = [l for _, l in paths_and_leaves]
+    return paths, leaves, treedef
+
+
 def save(path: str, tree: Any, metadata: dict | None = None) -> None:
-    leaves, treedef = jax.tree.flatten(tree)
+    paths, leaves, treedef = _leaf_paths(tree)
+    for p, leaf in zip(paths, leaves):
+        # fully-replicated global arrays are materializable from any
+        # process (np.asarray reads one local copy) — only genuinely
+        # sharded-across-hosts leaves are unsaveable from here
+        if (isinstance(leaf, jax.Array) and not leaf.is_fully_addressable
+                and not leaf.is_fully_replicated):
+            raise ValueError(
+                f"checkpoint.save: leaf {p} is a global jax.Array that is "
+                f"not fully addressable from this process (a multi-process "
+                f"mesh shards it across hosts, so np.asarray cannot "
+                f"materialize it here).  This module is single-host only; "
+                f"per-process sharded checkpointing is the ROADMAP "
+                f"'elastic multi-host' item.  Until then: save replicated "
+                f"state (params/opt_state placed with P()) from the "
+                f"coordinator only, or gather the array to every host "
+                f"before saving.")
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
     np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
@@ -30,21 +77,36 @@ def save(path: str, tree: Any, metadata: dict | None = None) -> None:
 
 
 def restore(path: str, template: Any) -> Any:
-    """Restore into the structure of ``template`` (shapes validated)."""
+    """Restore into the structure of ``template`` (leaf count, treedef
+    fingerprint, per-leaf shapes and dtypes validated — module
+    docstring)."""
     npz = np.load(path if path.endswith(".npz") else path + ".npz")
-    t_leaves, treedef = jax.tree.flatten(template)
+    t_paths, t_leaves, treedef = _leaf_paths(template)
     with open(_manifest_path(path)) as f:
         manifest = json.load(f)
     if manifest["n_leaves"] != len(t_leaves):
         raise ValueError(
             f"checkpoint has {manifest['n_leaves']} leaves, template has "
             f"{len(t_leaves)}")
+    if manifest["treedef"] != str(treedef):
+        raise ValueError(
+            f"checkpoint tree structure differs from template — same leaf "
+            f"count but different treedef, so leaves would restore into "
+            f"the wrong slots.\n  stored:   {manifest['treedef']}\n"
+            f"  template: {treedef}")
     leaves = []
-    for i, tl in enumerate(t_leaves):
+    for i, (p, tl) in enumerate(zip(t_paths, t_leaves)):
         arr = npz[f"leaf_{i}"]
         if hasattr(tl, "shape") and tuple(arr.shape) != tuple(tl.shape):
-            raise ValueError(f"leaf {i}: checkpoint shape {arr.shape} != "
-                             f"template {tl.shape}")
+            raise ValueError(
+                f"leaf {p} (index {i}): checkpoint shape {arr.shape} != "
+                f"template {tuple(tl.shape)}")
+        if hasattr(tl, "dtype") and arr.dtype != np.dtype(tl.dtype):
+            raise ValueError(
+                f"leaf {p} (index {i}): checkpoint dtype {arr.dtype} != "
+                f"template {np.dtype(tl.dtype)} — a silent cast here "
+                f"would corrupt training state (e.g. int step counters "
+                f"restored as floats)")
         leaves.append(jax.numpy.asarray(arr))
     return jax.tree.unflatten(treedef, leaves)
 

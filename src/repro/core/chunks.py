@@ -34,7 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..graph.format import ChunkedGraph
+from ..graph.format import BlockSparsePlan, ChunkedGraph
+from ..kernels import spmm as SP
 from ..runtime import collectives as C
 
 
@@ -147,3 +148,90 @@ def chunk_gather_step(z_chunk: jax.Array, rows_c: jax.Array,
     mine = rows_c[i]
     ids = jnp.where(mine >= 0, mine - i * shard, h_out.shape[0])
     return h_out.at[ids].set(full, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Host-side per-chunk inputs (out-of-core streaming, repro.core.stream)
+# ---------------------------------------------------------------------------
+#
+# The in-memory chunk scan threads *device-resident* per-chunk inputs
+# through ``lax.scan`` (core.agg.chunk_xs).  The out-of-core path instead
+# slices one chunk's inputs out of HOST numpy, stages them, consumes them,
+# and lets the buffer go — so these builders return host pytrees whose
+# leaves are numpy views/copies, never device arrays.  They are the single
+# place the "what does chunk c need on device" contract is written:
+#
+# * segment     — (src, dst_local, w) edge arrays of chunk c, with the
+#                 decoupled γ baked into w (exactly what
+#                 ``rechunk_edge_values`` hands the in-memory scan).
+# * blocksparse — a HALF plan: a BlockSparsePlanDev carrying chunk c's
+#                 forward tiles and zero-size ``*_t`` placeholders.  The
+#                 streaming engine never differentiates through the
+#                 kernel (it multiplies the cotangent through the
+#                 transposed half plan itself), so staging the unused
+#                 direction would double the H2D bytes for nothing.
+# * dense       — chunk c's (chunk_size, V) adjacency rows.
+#
+# The backward builders return the inputs of the hand-written transpose
+# of the same chunk: segment reuses the identical edge arrays (the
+# transpose scatters by src instead of dst), blocksparse views the ``*_t``
+# tiles as a forward plan of the transposed rectangle, dense reuses the
+# rows (the transpose is ``rowsᵀ @ ct``).  Zero-size placeholder shapes
+# are identical across chunks, so every staged pytree of a sweep has one
+# jit signature (one trace per program, no retrace per chunk).
+
+
+def _half_plan_dev(plan: BlockSparsePlan, c: int,
+                   transposed: bool) -> "SP.BlockSparsePlanDev":
+    """Chunk ``c`` of a stacked host plan as a single-direction device
+    plan (host numpy leaves; the caller stages them)."""
+    bs = plan.bs
+    zero_tiles = np.zeros((0, bs, bs), np.float32)
+    zero_idx = np.zeros((0,), np.int32)
+    if transposed:
+        # forward-run the Âᵀ tiles: out rows = the fwd plan's source side
+        return SP.BlockSparsePlanDev(
+            blocks=plan.blocks_t[c], block_rows=plan.block_rows_t[c],
+            block_cols=plan.block_cols_t[c], row_first=plan.row_first_t[c],
+            blocks_t=zero_tiles, block_rows_t=zero_idx,
+            block_cols_t=zero_idx, row_first_t=zero_idx,
+            n_rows=plan.n_cols, n_cols=plan.n_rows,
+            rows_padded=plan.cols_padded, cols_padded=plan.rows_padded,
+            bs=bs)
+    return SP.BlockSparsePlanDev(
+        blocks=plan.blocks[c], block_rows=plan.block_rows[c],
+        block_cols=plan.block_cols[c], row_first=plan.row_first[c],
+        blocks_t=zero_tiles, block_rows_t=zero_idx,
+        block_cols_t=zero_idx, row_first_t=zero_idx,
+        n_rows=plan.n_rows, n_cols=plan.n_cols,
+        rows_padded=plan.rows_padded, cols_padded=plan.cols_padded,
+        bs=bs)
+
+
+def host_chunk_inputs(agg: str, c: int, *,
+                      chunked: ChunkedGraph | None = None,
+                      plan: BlockSparsePlan | None = None,
+                      dense_rows: np.ndarray | None = None,
+                      gamma: float = 1.0):
+    """Host pytree of chunk ``c``'s FORWARD aggregation inputs."""
+    if agg == "blocksparse":
+        return _half_plan_dev(plan, c, transposed=False)
+    if agg == "dense":
+        return dense_rows[c]
+    w = chunked.weight[c]
+    return (chunked.src[c], chunked.dst_local[c],
+            w if gamma == 1.0 else np.float32(gamma) * w)
+
+
+def host_chunk_inputs_t(agg: str, c: int, *,
+                        chunked: ChunkedGraph | None = None,
+                        plan: BlockSparsePlan | None = None,
+                        dense_rows: np.ndarray | None = None,
+                        gamma: float = 1.0):
+    """Host pytree feeding the hand-written TRANSPOSE of chunk ``c``'s
+    aggregation (``ct_z += Â_cᵀ @ ct_out[c]``)."""
+    if agg == "blocksparse":
+        return _half_plan_dev(plan, c, transposed=True)
+    if agg == "dense":
+        return dense_rows[c]
+    return host_chunk_inputs("segment", c, chunked=chunked, gamma=gamma)

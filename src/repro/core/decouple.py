@@ -40,6 +40,16 @@ Under the constraint backend ``decoupled_pipelined`` is an alias of
 ``decoupled``: §4.2.2's manual chunk interleaving exists to overlap comm
 with compute, which is exactly the scheduling freedom the constraint
 lowering hands to XLA, so there is no separate program to write.
+
+Everything here assumes the bundle is *device-resident*: features,
+chunk edge lists / tile plans, and the scan carries live on the mesh
+for the whole epoch.  When the feature matrix does not fit,
+:mod:`repro.core.stream` re-expresses the decoupled epoch as an
+out-of-core schedule over the same math — host-resident
+:class:`repro.graph.format.HostFeatureStore` + per-chunk plans, staged
+through a double-buffered H2D prefetch, with byte-identical collective
+ledgers to the unpipelined decoupled mode here (its equivalence tests
+diff against this module's losses and grads at 1e-5).
 """
 from __future__ import annotations
 

@@ -1,0 +1,579 @@
+"""Out-of-core chunk streaming: host-resident features, two-buffer device.
+
+The §4.2 chunk scheduler in :mod:`repro.core.decouple` keeps every input
+device-resident and walks chunks with ``lax.scan`` — the graph must fit
+on the devices.  This module is the out-of-core spelling of the same
+epoch: the feature matrix and the per-chunk aggregation inputs live in
+HOST numpy (:class:`repro.graph.format.HostFeatureStore`, the host-side
+builders in :mod:`repro.core.chunks`), and the epoch walks them through
+a double-buffered host→device prefetch
+(:mod:`repro.runtime.streaming`): while the device consumes staged item
+``c``, item ``c+1``'s async ``device_put`` is in flight, and consumed
+buffers are donated back to XLA — so device residency of the streamed
+data is bounded by TWO staged items (plus the O(V·C/N)-per-device
+working buffers TP inherently needs) no matter how large V grows.
+
+One epoch dispatches a short pipeline of jitted programs instead of one
+monolithic executable:
+
+  stripe_fwd ×S   — NN phase on feature stripes → vertex-sharded H
+  split           — the paper's all-to-all (vertex- → dim-sharded)
+  chunk_fwd ×L·C  — per-chunk aggregation into a donated double buffer
+  loss            — gather all-to-all + masked loss (+ psums), grads
+                    w.r.t. the dim-sharded embeddings by autodiff
+  chunk_bwd ×L·C  — hand-written transpose of each aggregation chunk
+                    (the decoupled propagation is linear in z, so the
+                    backward streams Âᵀ chunks with no stored
+                    activations)
+  splitᵀ          — transpose of the split (operationally the gather
+                    all-to-all applied to the cotangent)
+  stripe_bwd ×S   — per-stripe VJP of the NN phase, accumulated into
+                    the parameter grads
+
+Telemetry: the collective schedule is byte-identical to the in-memory
+UNPIPELINED decoupled epoch — one split + one gather (each with its
+declared autodiff mirror) + the three loss psums.  The forward split
+declares ``mirror=True`` as usual; since this driver *materializes*
+that mirror itself (the splitᵀ program), the splitᵀ call is wrapped in
+:func:`repro.runtime.telemetry.mirror_scope` so the bytes are not
+counted twice.  Staged bytes land in the execution-time ``h2d`` ledger
+column, asserted against :func:`expected_h2d_bytes`.
+
+``decoupled_pipelined`` is accepted as an alias of ``decoupled``: the
+manual §4.2.2 chunk-task interleaving exists to overlap communication
+with compute, and under streaming that overlap is provided by the async
+H2D prefetch instead — there is no separate program to write (the same
+collapse the constraint backend documents for XLA scheduling).
+
+Scope gates (actionable errors, not silent fallbacks): GAT (its runtime
+attention needs the full embedding matrix before the split — stream the
+GCN-family models, or use the in-memory path), ``mode="naive"`` (the
+coupled baseline re-splits per layer; nothing to stream), and hybrid
+DP×TP meshes (the streamed stripe contract is pure-TP vertex-sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..gnn import models as M
+from ..graph import format as gf
+from ..graph.synthetic import GraphData
+from ..runtime import collectives as C
+from ..runtime import engine
+from ..runtime import streaming as RS
+from ..runtime import telemetry as T
+from ..runtime.mesh import as_mesh, mesh_axes, padded_size, tp_mesh
+from . import agg as AGG
+from . import chunks as CH
+from . import decouple as DC
+from . import tp
+
+STREAM_MODES = ("decoupled", "decoupled_pipelined")
+
+
+# ---------------------------------------------------------------------------
+# Host-side preparation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamBundle:
+    """Host-resident training bundle for the out-of-core path.
+
+    Unlike :class:`repro.core.decouple.TPBundle` this is NOT a pytree and
+    never enters a traced program whole: the big members (``store``,
+    ``chunked``, ``bsp``, ``dense_rows``) are host numpy that the epoch
+    driver slices and stages one item at a time.  Only the O(V) label and
+    mask vectors are committed to the mesh up front (vertex-sharded —
+    their device footprint is V/N int32/f32 per device, not V·D)."""
+
+    store: gf.HostFeatureStore     # (n_padded, in_dim_padded) host f32
+    chunked: gf.ChunkedGraph       # host numpy per-chunk edge arrays
+    bsp: gf.BlockSparsePlan | None  # host stacked tile plans | None
+    dense_rows: np.ndarray | None  # (C, chunk_size, n_padded) f32 | None
+    labels: jax.Array              # (n_padded,) int32, P(axis)
+    train_mask: jax.Array          # (n_padded,) f32, P(axis)
+    val_mask: jax.Array
+    test_mask: jax.Array
+    mesh: Any
+    axis: str
+    n: int
+    n_padded: int
+    n_workers: int
+    n_chunks: int
+    n_stripes: int
+    num_classes: int
+    c_padded: int
+    in_dim_padded: int
+    agg: str
+
+    @property
+    def chunk_size(self) -> int:
+        return self.chunked.chunk_size
+
+    @property
+    def stripe_rows(self) -> int:
+        return self.store.stripe_rows
+
+    def masks(self) -> dict:
+        return {"train": self.train_mask, "val": self.val_mask,
+                "test": self.test_mask}
+
+
+def prepare_stream_bundle(data: GraphData, mesh=None,
+                          n_workers: int | None = None,
+                          n_chunks: int = 4,
+                          n_stripes: int | None = None,
+                          agg: str = "segment",
+                          agg_block_size: int = 128) -> StreamBundle:
+    """Host-side prep for streaming: pad, chunk, build the host stores.
+
+    ``n_stripes`` (default ``n_chunks``) slices the NN phase; the vertex
+    dim pads to a multiple of ``n_workers · lcm(n_chunks, n_stripes)``
+    so both the chunk and the stripe grids are rectangular — with the
+    default it is exactly the in-memory ``prepare_bundle`` padding,
+    which is what makes streamed and in-memory epochs bit-comparable.
+    Graph structure and features stay in host numpy; only labels/masks
+    are committed to ``mesh`` (vertex-sharded).
+    """
+    mesh = tp_mesh() if mesh is None else mesh
+    axis, data_axes = mesh_axes(mesh)
+    if data_axes:
+        raise ValueError(
+            f"prepare_stream_bundle: hybrid DP×TP meshes (data axes "
+            f"{data_axes}) are not streamable — the stripe slicing "
+            f"contract is pure-TP vertex-sharded.  Use a 1-D model mesh "
+            f"(runtime.tp_mesh) or the in-memory prepare_bundle path.")
+    if n_workers is None:
+        n_workers = as_mesh(mesh).shape[axis]
+    elif n_workers != as_mesh(mesh).shape[axis]:
+        raise ValueError(
+            f"prepare_stream_bundle: n_workers={n_workers} but the mesh "
+            f"model degree is {as_mesh(mesh).shape[axis]}")
+    n_stripes = n_chunks if n_stripes is None else n_stripes
+    if n_stripes < 1 or n_chunks < 1:
+        raise ValueError("n_chunks and n_stripes must be >= 1")
+    AGG.validate_backend(agg)
+
+    g = data.graph
+    n_padded = padded_size(
+        g.n, n_workers * math.lcm(n_chunks, n_stripes))
+    gp = DC._pad_graph(g, n_padded)
+    cg = gf.chunk_graph(gp, n_chunks)
+    assert cg.n_chunks * cg.chunk_size == n_padded
+
+    bsp = dense_rows = None
+    if agg == "blocksparse":
+        bsp = gf.chunk_block_sparse(gp, n_chunks, bs=agg_block_size)
+    elif agg == "dense":
+        cs = cg.chunk_size
+        a = gp.dense_adjacency()
+        dense_rows = np.zeros((n_chunks, cs, n_padded), np.float32)
+        for c in range(n_chunks):
+            lo, hi = min(gp.n, c * cs), min(gp.n, (c + 1) * cs)
+            dense_rows[c, : hi - lo] = a[lo:hi]
+
+    in_dim = data.features.shape[1]
+    in_dim_padded = tp.padded_size(in_dim, n_workers)
+    c_padded = tp.padded_size(data.num_classes, n_workers)
+
+    feats = np.zeros((n_padded, in_dim_padded), np.float32)
+    feats[: g.n, :in_dim] = data.features
+    store = gf.HostFeatureStore(feats, n_workers, n_stripes)
+
+    labels = np.zeros((n_padded,), np.int32)
+    labels[: g.n] = data.labels
+
+    from ..runtime import distributed as dist
+
+    def pad_mask(m):
+        out = np.zeros((n_padded,), np.float32)
+        out[: g.n] = m.astype(np.float32)
+        return dist.put_global(out, mesh, P(axis))
+
+    return StreamBundle(
+        store=store, chunked=cg, bsp=bsp, dense_rows=dense_rows,
+        labels=dist.put_global(labels, mesh, P(axis)),
+        train_mask=pad_mask(data.train_mask),
+        val_mask=pad_mask(data.val_mask),
+        test_mask=pad_mask(data.test_mask),
+        mesh=mesh, axis=axis,
+        n=g.n, n_padded=n_padded, n_workers=n_workers,
+        n_chunks=n_chunks, n_stripes=n_stripes,
+        num_classes=data.num_classes, c_padded=c_padded,
+        in_dim_padded=in_dim_padded, agg=agg)
+
+
+# ---------------------------------------------------------------------------
+# H2D accounting (the analytic side of the telemetry h2d column)
+# ---------------------------------------------------------------------------
+
+def _tree_nbytes(tree) -> int:
+    return sum(int(l.nbytes) for l in jax.tree.leaves(tree))
+
+
+def chunk_input_nbytes(sb: StreamBundle, *, transposed: bool = False,
+                       gamma: float = 1.0) -> list[int]:
+    """Host bytes of each chunk's staged (forward or transposed) inputs."""
+    build = CH.host_chunk_inputs_t if transposed else CH.host_chunk_inputs
+    return [_tree_nbytes(build(sb.agg, c, chunked=sb.chunked, plan=sb.bsp,
+                               dense_rows=sb.dense_rows, gamma=gamma))
+            for c in range(sb.n_chunks)]
+
+
+def expected_h2d_bytes(sb: StreamBundle, cfg: M.GNNConfig) -> int:
+    """Analytic staged bytes of ONE epoch (forward + backward):
+
+    * every feature stripe twice — once for the NN phase, once
+      recomputed for the per-stripe VJP — = 2 · store bytes;
+    * every chunk's forward aggregation inputs, once per round (L);
+    * every chunk's transposed inputs, once per backward round (L).
+
+    Labels/masks are committed at prepare time, not per epoch; the z/H
+    buffers are allocated device-side (``global_zeros``) and never cross
+    the host link.  The telemetry ``h2d`` column of a post-warmup epoch
+    must equal this exactly (collectives are trace-time and already
+    cached; h2d records per execution)."""
+    gamma = 1.0 if cfg.model == "gat" else cfg.gamma
+    return (2 * sb.store.nbytes
+            + cfg.num_layers * sum(chunk_input_nbytes(sb, gamma=gamma))
+            + cfg.num_layers * sum(chunk_input_nbytes(sb, transposed=True,
+                                                      gamma=gamma)))
+
+
+def device_resident_bytes(sb: StreamBundle, cfg: M.GNNConfig,
+                          depth: int = 2) -> dict:
+    """The footprint contract, itemized (bytes, whole-mesh totals):
+
+    * ``staged_stripe`` / ``staged_chunk`` — the ≤``depth`` staged items
+      alive at once (the double buffer), INDEPENDENT of V per item count;
+    * ``working`` — the two (V, C_pad) embedding buffers (current +
+      donated next) plus labels/masks: the O(V·C/N)-per-device state TP
+      itself requires.  The bench shows staged bytes constant while V
+      scales; working bytes are reported honestly, not hidden."""
+    stripe = sb.store.stripe_nbytes
+    fwd = max(chunk_input_nbytes(sb), default=0)
+    bwd = max(chunk_input_nbytes(sb, transposed=True), default=0)
+    cp = sb.c_padded
+    return {
+        "staged_stripe_bytes": depth * stripe,
+        "staged_chunk_bytes": depth * max(fwd, bwd),
+        "working_bytes": 2 * sb.n_padded * cp * 4
+        + sb.n_padded * (4 + 3 * 4),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Program builders (both engine backends)
+# ---------------------------------------------------------------------------
+
+def _resolve_stream_agg(sb: StreamBundle, agg: str | None) -> str:
+    if agg is None:
+        return sb.agg
+    AGG.validate_backend(agg)
+    if agg == "blocksparse" and sb.bsp is None:
+        raise ValueError(
+            'agg="blocksparse" requested but the stream bundle carries '
+            'no tile plans — re-run prepare_stream_bundle with '
+            'agg="blocksparse"')
+    if agg == "dense" and sb.dense_rows is None:
+        raise ValueError(
+            'agg="dense" requested but the stream bundle carries no '
+            'dense rows — re-run prepare_stream_bundle with agg="dense"')
+    return agg
+
+
+def _check_streamable(cfg: M.GNNConfig, sb: StreamBundle,
+                      mode: str) -> None:
+    if cfg.model == "gat":
+        raise ValueError(
+            "streaming does not support GAT: its attention weights are "
+            "computed at runtime from the full embedding matrix before "
+            "the split (an O(V) all-gather the stripe loop cannot see), "
+            "so the per-stripe NN phase is not independent.  Use the "
+            "in-memory path (core.decouple) for GAT.")
+    if mode not in STREAM_MODES:
+        raise ValueError(
+            f"stream mode must be one of {STREAM_MODES} (got {mode!r}); "
+            f"the coupled 'naive' baseline re-splits every layer and has "
+            f"no host-resident phase to stream — use core.decouple for "
+            f"it.  'decoupled_pipelined' is an alias of 'decoupled' "
+            f"here: the async H2D prefetch provides the overlap §4.2.2's "
+            f"manual chunk interleaving exists for.")
+    if cfg.num_classes != sb.c_padded:
+        raise ValueError(
+            f"cfg.num_classes={cfg.num_classes} must equal the bundle's "
+            f"padded class dim {sb.c_padded} (build cfg via "
+            f"stream_gnn_config / decouple.padded_gnn_config)")
+    if cfg.in_dim != sb.in_dim_padded:
+        raise ValueError(
+            f"cfg.in_dim={cfg.in_dim} must equal the bundle's padded "
+            f"input dim {sb.in_dim_padded}")
+
+
+def stream_gnn_config(data: GraphData, sb: StreamBundle,
+                      model: str = "gcn", hidden_dim: int = 64,
+                      num_layers: int = 2,
+                      gamma: float = 1.0) -> M.GNNConfig:
+    """GNN config padded for the stream bundle's TP degree."""
+    return M.GNNConfig(
+        model=model, in_dim=sb.in_dim_padded,
+        hidden_dim=tp.padded_size(hidden_dim, sb.n_workers),
+        num_classes=sb.c_padded, num_layers=num_layers,
+        decoupled=True, gamma=gamma)
+
+
+def _maybe_donate(fn, donate: tuple, **jit_kwargs):
+    """jit with buffer donation where the backend honors it (CPU does
+    not — ``runtime.streaming.donation_supported``); the program is
+    identical either way, only the aliasing hint differs."""
+    if donate and RS.donation_supported():
+        return jax.jit(fn, donate_argnums=donate, **jit_kwargs)
+    return jax.jit(fn, **jit_kwargs)
+
+
+def _build_programs(cfg: M.GNNConfig, sb: StreamBundle, mesh, axis: str,
+                    backend: str, agg: str):
+    """The seven jitted programs of one streamed epoch (module docstring).
+
+    Only stripe_fwd/split/loss/splitT/stripe_bwd differ between engine
+    backends (per-shard bodies + explicit collectives vs global-view
+    bodies + layout constraints).  The per-chunk aggregation programs
+    contain no collectives at all, so both backends share one jit
+    spelling with the shardings carried by the operands."""
+    mesh = as_mesh(mesh)
+    V, N, S = sb.n_padded, sb.n_workers, sb.n_stripes
+    cs, rs, Cp = sb.chunk_size, sb.stripe_rows, cfg.num_classes
+    scale = 1.0 if agg == "segment" else cfg.gamma
+    vspec, zspec = P(axis, None), P(None, axis)
+
+    if backend == "explicit":
+        def stripe_fwd_body(params, x_s, H, s):
+            h = M.mlp_phase(params, cfg, x_s)        # (rs, Cp) this shard
+            return jax.lax.dynamic_update_slice(H, h, (s * rs, 0))
+
+        def loss_body(z, labels, mask):
+            out = tp.gather(z, axis, mirror=True)    # (V/N, Cp)
+            ls, cr, cnt = M.masked_loss_and_acc(out, labels, mask,
+                                                sb.num_classes)
+            ls, cr, cnt = (C.psum(t, axis) for t in (ls, cr, cnt))
+            return ls / jnp.maximum(cnt, 1.0), cr / jnp.maximum(cnt, 1.0)
+
+        def stripe_bwd_body(params, x_s, ct_h, s):
+            ct_s = jax.lax.dynamic_slice(
+                ct_h, (s * rs, 0), (rs, ct_h.shape[1]))
+            _, vjp = jax.vjp(lambda p: M.mlp_phase(p, cfg, x_s), params)
+            (gp,) = vjp(ct_s)
+            # leading length-1 axis; out_specs P(axis) stacks the N
+            # per-shard partials for the wrapper's cross-worker sum
+            return jax.tree.map(lambda g: g[None], gp)
+
+        split_fn = partial(tp.split, axis=axis, mirror=True)
+        # the forward split's mirror declaration already carries these
+        # bytes; the call site suppresses recording (mirror_scope)
+        splitT_fn = partial(tp.gather, axis=axis, mirror=False)
+        bwd_out = P(axis)
+    else:
+        if backend != "constraint":
+            raise ValueError(
+                f"stream backend must be 'explicit' or 'constraint', "
+                f"got {backend!r}")
+
+        from ..runtime import constraint as K
+
+        def stripe_fwd_body(params, x_s, H, s):
+            h = M.mlp_phase(params, cfg, x_s)        # (N·rs, Cp) global
+            h = K.constrain(h, vspec)
+            # stripe s is worker-major: worker i's rows sit at global
+            # offset i·(V/N) + s·rs — one strided update via the
+            # (N, S, rs, Cp) view, local under the vertex sharding
+            H4 = jax.lax.dynamic_update_slice(
+                H.reshape(N, S, rs, Cp), h.reshape(N, 1, rs, Cp),
+                (0, s, 0, 0))
+            return K.constrain(H4.reshape(V, Cp), vspec)
+
+        def loss_body(z, labels, mask):
+            out = tp.gather_constraint(z, axis, (), mirror=True)
+            ls, cr, cnt = M.masked_loss_and_acc(out, labels, mask,
+                                                sb.num_classes)
+            return ls / jnp.maximum(cnt, 1.0), cr / jnp.maximum(cnt, 1.0)
+
+        def stripe_bwd_body(params, x_s, ct_h, s):
+            ct_s = jax.lax.dynamic_slice(
+                ct_h.reshape(N, S, rs, Cp), (0, s, 0, 0),
+                (N, 1, rs, Cp)).reshape(N * rs, Cp)
+            _, vjp = jax.vjp(lambda p: M.mlp_phase(p, cfg, x_s), params)
+            (gp,) = vjp(ct_s)
+            return gp                                # partitioner reduces
+
+        split_fn = partial(tp.split_constraint, axis=axis, data_axes=(),
+                           mirror=True)
+        splitT_fn = partial(tp.gather_constraint, axis=axis,
+                            data_axes=(), mirror=False)
+        bwd_out = P()
+
+    stripe_fwd = engine(stripe_fwd_body,
+                        in_specs=(P(), vspec, vspec, P()),
+                        out_specs=vspec, mesh=mesh, backend=backend)
+    split_p = engine(split_fn, in_specs=(vspec,), out_specs=zspec,
+                     mesh=mesh, backend=backend)
+    splitT_p = engine(splitT_fn, in_specs=(zspec,), out_specs=vspec,
+                      mesh=mesh, backend=backend)
+    lossmap = engine(loss_body, in_specs=(zspec, P(axis), P(axis)),
+                     out_specs=(P(), P()), mesh=mesh, backend=backend)
+    stripe_bwd = engine(stripe_bwd_body,
+                        in_specs=(P(), vspec, vspec, P()),
+                        out_specs=bwd_out, mesh=mesh, backend=backend)
+
+    # --- per-chunk aggregation: collective-free, shared across backends
+    def chunk_fwd_fn(z, xs, z_next, c):
+        out = AGG.chunk_agg(agg, z, xs, cs, scale)   # (cs, width)
+        return jax.lax.dynamic_update_slice(z_next, out, (c * cs, 0))
+
+    def chunk_bwd_fn(ct, xs_t, g, c):
+        ct_c = jax.lax.dynamic_slice(ct, (c * cs, 0), (cs, ct.shape[1]))
+        if agg == "segment":
+            src, dst_local, w = xs_t
+            # pad edges carry dst_local == cs → the appended zero row,
+            # and w == 0: numerically inert, exactly as in the forward
+            ct_ext = jnp.concatenate(
+                [ct_c, jnp.zeros((1, ct_c.shape[1]), ct_c.dtype)])
+            msg = jnp.take(ct_ext, dst_local, axis=0) * w[:, None]
+            contrib = jax.ops.segment_sum(msg, src, num_segments=V)
+        elif agg == "blocksparse":
+            from ..kernels import spmm as SP
+            contrib = SP.aggregate_plan(xs_t, ct_c)[:V]
+            contrib = contrib if scale == 1.0 else scale * contrib
+        else:
+            contrib = xs_t.T @ ct_c
+            contrib = contrib if scale == 1.0 else scale * contrib
+        return g + contrib
+
+    zsh = NamedSharding(mesh, zspec)
+    rep = NamedSharding(mesh, P())
+
+    def scalar_loss(z, labels, mask):
+        return lossmap(z, labels, mask)
+
+    def sum_stripe_grads(params, x_s, ct_h, s, acc):
+        g = stripe_bwd(params, x_s, ct_h, s)
+        if backend == "explicit":
+            return jax.tree.map(lambda a, st: a + jnp.sum(st, 0), acc, g)
+        return jax.tree.map(lambda a, gg: a + gg, acc, g)
+
+    return {
+        "stripe_fwd": _maybe_donate(
+            lambda params, x_s, H, s: stripe_fwd(params, x_s, H, s),
+            donate=(2,)),
+        "split": jax.jit(lambda H: split_p(H), out_shardings=zsh),
+        "chunk_fwd": _maybe_donate(chunk_fwd_fn, donate=(2,)),
+        "loss_vg": jax.jit(
+            jax.value_and_grad(scalar_loss, has_aux=True)),
+        "chunk_bwd": _maybe_donate(chunk_bwd_fn, donate=(2,)),
+        "splitT": jax.jit(lambda ct: splitT_p(ct),
+                          out_shardings=NamedSharding(mesh, vspec)),
+        # grads come back replicated whichever backend produced the
+        # per-stripe partials (the cross-worker reduction this forces is
+        # the parameter-gradient all-reduce the ledger documents as out
+        # of scope, matching the in-memory shard_map transpose)
+        "stripe_bwd": _maybe_donate(sum_stripe_grads, donate=(4,),
+                                    out_shardings=rep),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Epoch driver + public factory
+# ---------------------------------------------------------------------------
+
+def make_stream_value_and_grad(cfg: M.GNNConfig, sb: StreamBundle,
+                               mesh=None, axis: str | None = None,
+                               mode: str = "decoupled",
+                               backend: str = "explicit",
+                               agg: str | None = None):
+    """Out-of-core (params, mask) → (loss, grads): the streaming analog
+    of :func:`repro.core.decouple.make_tp_value_and_grad`.
+
+    Numerics match the in-memory decoupled epoch to float tolerance and
+    the collective ledger matches the UNPIPELINED in-memory one exactly
+    (module docstring).  ``mask`` must be vertex-sharded on the bundle's
+    mesh (use ``sb.train_mask`` etc.); ``params`` replicated.  Device
+    residency: two staged stripes/chunks + the O(V·C_pad) embedding
+    double buffer (``device_resident_bytes``)."""
+    mesh = sb.mesh if mesh is None else mesh
+    axis = sb.axis if axis is None else axis
+    agg = _resolve_stream_agg(sb, agg)
+    _check_streamable(cfg, sb, mode)
+    progs = _build_programs(cfg, sb, mesh, axis, backend, agg)
+    m = as_mesh(mesh)
+    V, S, Cnk = sb.n_padded, sb.n_stripes, sb.n_chunks
+    Cp = cfg.num_classes
+    gamma = cfg.gamma
+    vspec, zspec = P(axis, None), P(None, axis)
+
+    def stage_stripe(s):
+        return (jnp.asarray(s, jnp.int32),
+                RS.stage(sb.store.stripe(s), m, vspec, label="stripe"))
+
+    def stage_chunk(c, transposed):
+        build = CH.host_chunk_inputs_t if transposed \
+            else CH.host_chunk_inputs
+        xs = build(agg, c, chunked=sb.chunked, plan=sb.bsp,
+                   dense_rows=sb.dense_rows, gamma=gamma)
+        return (jnp.asarray(c, jnp.int32),
+                RS.stage(xs, m, P(),
+                         label="chunk_t" if transposed else "chunk"))
+
+    def stripes():
+        return RS.prefetched(range(S), stage_stripe)
+
+    def chunks(transposed):
+        return RS.prefetched(
+            range(Cnk), partial(stage_chunk, transposed=transposed))
+
+    def value_and_grad_fn(params, mask):
+        # ---- forward: NN phase over stripes, then L streamed rounds
+        H = RS.global_zeros(m, vspec, (V, Cp))
+        for s, x_dev in stripes():
+            H = progs["stripe_fwd"](params, x_dev, H, s)
+        RS.sync_for_collectives(H)
+        z = progs["split"](H)
+        RS.sync_for_collectives(z)
+        for _ in range(cfg.num_layers):
+            z_next = RS.global_zeros(m, zspec, (V, Cp))
+            for c, xs_dev in chunks(transposed=False):
+                z_next = progs["chunk_fwd"](z, xs_dev, z_next, c)
+            z = z_next
+        RS.sync_for_collectives(z)
+
+        # ---- loss + dz by autodiff (gather a2a + psums live here)
+        (loss, _acc), ct = progs["loss_vg"](z, sb.labels, mask)
+        RS.sync_for_collectives(ct)
+
+        # ---- backward: L transposed rounds, then splitᵀ, then stripes
+        for _ in range(cfg.num_layers):
+            g = RS.global_zeros(m, zspec, (V, Cp))
+            for c, xs_dev in chunks(transposed=True):
+                g = progs["chunk_bwd"](ct, xs_dev, g, c)
+            ct = g
+        RS.sync_for_collectives(ct)
+        with T.mirror_scope():
+            # materialized autodiff mirror of the forward split — its
+            # bytes are already declared by the split's mirror=True
+            ct_h = progs["splitT"](ct)
+        RS.sync_for_collectives(ct_h)
+        grads = jax.tree.map(
+            lambda p: RS.global_zeros(m, P(), jnp.shape(p),
+                                      jnp.result_type(p)), params)
+        for s, x_dev in stripes():
+            grads = progs["stripe_bwd"](params, x_dev, ct_h, s, grads)
+        RS.sync_for_collectives(grads)
+        return loss, grads
+
+    return value_and_grad_fn

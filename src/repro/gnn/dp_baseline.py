@@ -107,6 +107,67 @@ def place_dp_bundle(bundle: DPBundle, mesh) -> DPBundle:
         test_mask=dist.put_global(bundle.test_mask, mesh, rows2))
 
 
+def place_dp_bundle_streamed(bundle: DPBundle, mesh, *, n_slabs: int = 4,
+                             depth: int = 2) -> DPBundle:
+    """Streamed drop-in for :func:`place_dp_bundle`: node arrays reach the
+    mesh slab-by-slab (contiguous row ranges of every partition) through
+    the double-buffered H2D prefetcher
+    (:func:`repro.runtime.streaming.prefetched`), each slab's bytes
+    recorded in the telemetry H2D column, with consumed buffers donated
+    back to XLA.
+
+    Honesty note: DP residency is *already* V/k rows per worker — unlike
+    the TP out-of-core path (:mod:`repro.core.stream`) this does not
+    shrink the steady-state footprint.  What it bounds is the *staging*
+    side: no host→device transfer larger than one slab is ever in
+    flight, and the placement cost shows up as measured ``h2d`` ledger
+    entries instead of an invisible bulk ``device_put``.  Call with the
+    host-side bundle from ``prepare_dp_bundle(mesh=None)``."""
+    from jax.sharding import NamedSharding
+    from ..runtime import mesh_axes
+    from ..runtime import streaming as RS
+    from ..runtime.mesh import as_mesh
+    axis, data_axes = mesh_axes(mesh)
+    amesh = as_mesh(mesh)
+    # graph structure is small and replicated: one recorded staging call
+    graph = RS.stage(jax.tree.map(np.asarray, bundle.graph), mesh, P(),
+                     label="dp_graph")
+    n_rows = bundle.graph.n_local_max
+    slab = -(-n_rows // max(1, min(n_slabs, n_rows)))
+
+    def streamed(host, spec):
+        host = np.asarray(host)
+        buf = RS.global_zeros(mesh, spec, host.shape, host.dtype)
+        donate = ({"donate_argnums": (0,)} if RS.donation_supported()
+                  else {})
+        tail = (0,) * (host.ndim - 2)
+        update = jax.jit(
+            lambda b, s, lo: jax.lax.dynamic_update_slice(
+                b, s, (0, lo) + tail),
+            out_shardings=NamedSharding(amesh, spec), **donate)
+        slabs = [(lo, host[:, lo:min(lo + slab, n_rows)])
+                 for lo in range(0, n_rows, slab)]
+
+        def stage_fn(item):
+            lo, rows = item
+            return (jnp.asarray(lo, jnp.int32),
+                    RS.stage(rows, mesh, P(axis), label="dp_rows"))
+
+        for lo_dev, slab_dev in RS.prefetched(slabs, stage_fn, depth=depth):
+            buf = update(buf, slab_dev, lo_dev)
+        return buf
+
+    rows2 = _dp_row_spec(axis, data_axes, trailing=0)
+    rows3 = _dp_row_spec(axis, data_axes)
+    return dataclasses.replace(
+        bundle, graph=graph,
+        features=streamed(bundle.features, rows3),
+        labels=streamed(bundle.labels, rows2),
+        train_mask=streamed(bundle.train_mask, rows2),
+        val_mask=streamed(bundle.val_mask, rows2),
+        test_mask=streamed(bundle.test_mask, rows2))
+
+
 def prepare_dp_bundle(data: GraphData, k: int | None = None,
                       balance: str = "vertex",
                       n_replicas: int | None = None,

@@ -1,7 +1,8 @@
 from .format import (Graph, ChunkedGraph, BlockSparseGraph, BlockSparsePlan,
-                     build_graph, chunk_graph, block_sparse,
-                     block_sparse_transpose, rect_block_sparse, stack_plans,
-                     chunk_block_sparse, pad_features)  # noqa: F401
+                     HostFeatureStore, build_graph, chunk_graph,
+                     block_sparse, block_sparse_transpose,
+                     rect_block_sparse, stack_plans, chunk_block_sparse,
+                     pad_features, require_int32_edge_ids)  # noqa: F401
 from .synthetic import (GraphData, sbm_power_law, barabasi_albert,
                         heterogeneous_sbm, reddit_like)  # noqa: F401
 from .partition import (Partition, chunk_partition, hash_partition,

@@ -18,6 +18,11 @@ single-worker full-graph aggregation:
                        (``rect_block_sparse`` + ``stack_plans``) so the
                        engines' chunk scans can stream MXU tiles with an
                        exact custom VJP through the Âᵀ plan.
+* ``HostFeatureStore`` — host-resident padded feature matrix with the
+                       worker-major stripe slicing contract of the
+                       out-of-core streaming path (``repro.core.stream``):
+                       features never commit to device wholesale, only
+                       two staged stripes at a time.
 
 Everything is constructed in numpy (host, once) and consumed as jnp arrays.
 """
@@ -138,8 +143,22 @@ class ChunkedGraph:
         return int(self.src.shape[1])
 
 
+def require_int32_edge_ids(e: int) -> None:
+    """The ``edge_id`` contract is int32 end-to-end (``ChunkedGraph``,
+    ``ChunkedDev`` and ``rechunk_edge_values`` all consume int32); the
+    pad value is E itself, so E must fit int32 *inclusive*."""
+    if e >= np.iinfo(np.int32).max:
+        raise ValueError(
+            f"chunk_graph: edge count E={e} does not fit the int32 "
+            f"edge_id contract (ids run 0..E-1 and the pad value is E, "
+            f"so E must be < {np.iinfo(np.int32).max}) — shard the graph "
+            f"before chunking or widen the ChunkedGraph/ChunkedDev "
+            f"edge_id dtype end-to-end")
+
+
 def chunk_graph(g: Graph, n_chunks: int) -> ChunkedGraph:
     n = g.n
+    require_int32_edge_ids(g.e)
     chunk_size = -(-n // n_chunks)
     srcs, dsts, ws, eids, news, new_counts = [], [], [], [], [], []
     seen = np.zeros(n, dtype=bool)
@@ -155,7 +174,10 @@ def chunk_graph(g: Graph, n_chunks: int) -> ChunkedGraph:
         s = g.src[e_lo:e_hi]
         d = g.dst[e_lo:e_hi] - lo
         w = g.weight[e_lo:e_hi]
-        eid = np.arange(e_lo, e_hi, dtype=np.int64)
+        # int32 from birth: edge ids were built int64 here and silently
+        # truncated by pad()'s dtype= below — consistent now, with the
+        # overflow case rejected eagerly (require_int32_edge_ids)
+        eid = np.arange(e_lo, e_hi, dtype=np.int32)
         fresh = np.unique(s[~seen[s]]) if s.size else np.empty(0, np.int32)
         seen[fresh] = True
         srcs.append(s); dsts.append(d); ws.append(w); eids.append(eid)
@@ -406,3 +428,74 @@ def pad_features(x: np.ndarray, n_padded: int) -> np.ndarray:
     out = np.zeros((n_padded,) + x.shape[1:], dtype=x.dtype)
     out[: x.shape[0]] = x
     return out
+
+
+# ---------------------------------------------------------------------------
+# Host-resident feature store (out-of-core streaming, repro.core.stream)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HostFeatureStore:
+    """Host-resident (n_padded, d) feature matrix with the worker-major
+    stripe slicing contract of the out-of-core streaming path.
+
+    The NN phase is streamed in ``n_stripes`` slices; the device never
+    holds more than two staged stripes at once (the double-buffer).  A
+    stripe is *worker-major*: stripe ``s`` stacks each TP worker ``i``'s
+    rows ``[i·V/N + s·rs, i·V/N + (s+1)·rs)`` (``rs = V/(N·S)``), so
+    placing it with ``P(axis, None)`` hands worker ``i`` exactly its
+    contiguous sub-block of the vertex-sharded layout — stripe writes
+    into the per-worker (V/N, ·) buffer are plain dynamic slices at
+    ``s·rs`` and streaming reproduces the in-memory row order bit-com-
+    patibly.  The slicing (not the array) is the contract: ``stripe()``
+    returns views/copies of host numpy, nothing here touches a device.
+    """
+
+    x: np.ndarray          # (n_padded, d) host numpy
+    n_workers: int
+    n_stripes: int
+
+    def __post_init__(self):
+        n_padded = int(self.x.shape[0])
+        denom = self.n_workers * self.n_stripes
+        if n_padded % denom:
+            raise ValueError(
+                f"HostFeatureStore: n_padded={n_padded} must divide by "
+                f"n_workers·n_stripes={self.n_workers}·{self.n_stripes}"
+                f"={denom} for rectangular stripes — pad the vertex dim "
+                f"(tp.padded_size) or pick a stripe count dividing the "
+                f"per-worker block")
+
+    @property
+    def n_padded(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def d(self) -> int:
+        return int(self.x.shape[1])
+
+    @property
+    def stripe_rows(self) -> int:
+        """Per-worker rows of one stripe (``rs`` above)."""
+        return self.n_padded // (self.n_workers * self.n_stripes)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.x.nbytes)
+
+    @property
+    def stripe_nbytes(self) -> int:
+        """Device bytes one staged stripe occupies (the unit of the
+        two-stripe footprint contract)."""
+        return self.n_workers * self.stripe_rows * self.d * \
+            self.x.dtype.itemsize
+
+    def stripe(self, s: int) -> np.ndarray:
+        """Worker-major host stripe ``s``: (n_workers·stripe_rows, d)."""
+        if not 0 <= s < self.n_stripes:
+            raise IndexError(
+                f"stripe {s} out of range [0, {self.n_stripes})")
+        rs = self.stripe_rows
+        return np.ascontiguousarray(
+            self.x.reshape(self.n_workers, self.n_stripes, rs,
+                           self.d)[:, s].reshape(-1, self.d))

@@ -57,6 +57,7 @@ collectives directly (tests/test_collectives_chokepoint.py enforces it).
 """
 from . import collectives  # noqa: F401
 from . import distributed  # noqa: F401
+from . import streaming  # noqa: F401
 from . import telemetry  # noqa: F401
 from .constraint import (  # noqa: F401
     constrain,
@@ -99,5 +100,5 @@ __all__ = [
     "resolve_shard_map", "smap", "validate_specs", "collectives",
     "constrain", "constraint_engine", "current_mesh", "layout_cast",
     "mesh_context", "note_transition", "telemetry", "CommLedger",
-    "collect_comm", "loop_scope", "distributed",
+    "collect_comm", "loop_scope", "distributed", "streaming",
 ]

@@ -1,0 +1,117 @@
+"""Host→device staging primitives for out-of-core chunk streaming.
+
+The §4.2 out-of-core path (:mod:`repro.core.stream`) keeps features and
+chunk plans in host numpy and walks them through a **double-buffered
+prefetch**: while the device consumes staged item ``c``, item ``c+1``'s
+``device_put`` is already in flight (jax transfers are async — the
+enqueue returns immediately and XLA overlaps the copy with compute).
+This module owns the three primitives that make that honest:
+
+* :func:`stage`      — place one host pytree on the mesh
+  (:func:`repro.runtime.distributed.put_global` per leaf, so the same
+  call works on a multi-process mesh) and record its bytes in the
+  telemetry H2D column (:func:`repro.runtime.telemetry.record_h2d`) —
+  staged bytes are measured, never inferred.
+* :func:`prefetched` — generator that keeps at most ``depth`` staged
+  items alive (the two-item footprint contract: the item being consumed
+  plus the one in flight).
+* :func:`global_zeros` — allocate a zero-initialized global array with a
+  given sharding *without* a host round trip (jitted zeros with
+  ``out_shardings``; each process materializes only its shards) — the
+  accumulator/double buffers the streaming driver donates back into its
+  programs.
+
+Donation is how the footprint stays at two staged items regardless of V:
+consumed buffers are handed back to XLA (``donate_argnums``) instead of
+accumulating.  The CPU backend does not implement buffer donation (XLA
+warns and copies), so :func:`donation_supported` gates it — the
+*structure* of the streaming path is identical either way, which is what
+the forced-host-device tests exercise.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+from typing import Any, Callable, Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import telemetry as T
+from .distributed import process_count, put_global
+from .mesh import as_mesh
+
+__all__ = [
+    "donation_supported", "global_zeros", "prefetched", "stage",
+    "sync_for_collectives",
+]
+
+
+def stage(tree: Any, mesh, spec=P(), *, label: str = "host") -> Any:
+    """Stage one host pytree onto ``mesh`` with layout ``spec`` (every
+    leaf the same spec), recording its bytes in the H2D telemetry
+    column.  Returns the device pytree; the transfer is async — reading
+    the result blocks until it lands, enqueuing it does not."""
+    leaves, treedef = jax.tree.flatten(tree)
+    T.record_h2d(leaves, label=label)
+    return jax.tree.unflatten(
+        treedef, [put_global(l, mesh, spec) for l in leaves])
+
+
+def prefetched(items: Iterable[Any], stage_fn: Callable[[Any], Any], *,
+               depth: int = 2) -> Iterator[Any]:
+    """Yield ``stage_fn(item)`` for each item, keeping up to ``depth``
+    staged items in flight ahead of the consumer.
+
+    ``depth=2`` is the double buffer: when the caller receives item
+    ``c``, item ``c+1`` has already been enqueued, so its host→device
+    copy overlaps the caller's compute on ``c``.  The generator holds
+    references to at most ``depth`` staged items — together with the
+    caller's donation of consumed buffers this bounds device residency
+    at two staged items regardless of how many the sequence yields."""
+    if depth < 1:
+        raise ValueError(f"prefetched depth must be >= 1, got {depth}")
+    buf: collections.deque = collections.deque()
+    for item in items:
+        buf.append(stage_fn(item))
+        if len(buf) > depth - 1:
+            yield buf.popleft()
+    while buf:
+        yield buf.popleft()
+
+
+@functools.lru_cache(maxsize=None)
+def _zeros_program(sharding: NamedSharding, shape: tuple, dtype):
+    return jax.jit(lambda: jnp.zeros(shape, dtype),
+                   out_shardings=sharding)
+
+
+def global_zeros(mesh, spec, shape, dtype=jnp.float32) -> jax.Array:
+    """Zero-initialized global array on ``mesh``/``spec``, allocated
+    device-side (no host buffer of size ``shape`` ever exists).  The
+    jitted zeros program is cached per (sharding, shape, dtype), so
+    per-round buffer allocation in the streaming driver costs one trace
+    total."""
+    return _zeros_program(NamedSharding(as_mesh(mesh), spec),
+                          tuple(shape), jnp.dtype(dtype))()
+
+
+def donation_supported() -> bool:
+    """Whether the default backend honors ``donate_argnums`` (CPU does
+    not — XLA falls back to a copy with a warning per call)."""
+    return jax.default_backend() != "cpu"
+
+
+def sync_for_collectives(x: Any) -> Any:
+    """Barrier between collective-bearing executables on a multi-process
+    mesh: gloo cannot have two executables' collectives concurrently in
+    flight (the single-executable discipline of
+    :func:`repro.core.decouple.bundled_value_and_grad`).  The streaming
+    driver dispatches *several* executables per epoch, so it blocks on
+    the previous program's results before launching the next
+    collective-bearing one.  Single-process this is a no-op — the whole
+    point of async staging is not to synchronize."""
+    if process_count() > 1:
+        jax.block_until_ready(x)
+    return x

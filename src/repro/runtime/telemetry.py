@@ -76,9 +76,10 @@ from contextvars import ContextVar
 from typing import Iterator, Mapping
 
 __all__ = [
-    "CommEntry", "CommLedger", "TelemetryError", "TransitionRecord",
-    "active_ledgers", "collect_comm", "loop_multiplier", "loop_scope",
-    "normalize_spec", "record", "record_transition", "ring_wire_factor",
+    "CommEntry", "CommLedger", "H2D_OP", "TelemetryError",
+    "TransitionRecord", "active_ledgers", "collect_comm",
+    "loop_multiplier", "loop_scope", "mirror_scope", "normalize_spec",
+    "record", "record_h2d", "record_transition", "ring_wire_factor",
 ]
 
 
@@ -98,6 +99,17 @@ OP_TO_HLO = {
     "ppermute": "collective-permute",
     "psum_scatter": "reduce-scatter",
 }
+
+#: Ledger op kind for host→device staging traffic (out-of-core chunk
+#: streaming, repro.core.stream).  NOT a collective: it never appears in
+#: a jaxpr, has no ring factor and no autodiff mirror, so it is keyed
+#: outside OP_TO_HLO and the jaxpr audit skips it.  Unlike collective
+#: entries (trace-time), H2D entries are **execution-time**: the staging
+#: helpers record every ``device_put`` they issue, so one epoch inside
+#: ``collect_comm`` measures that epoch's actual staged bytes —
+#: re-executions record again (cached traces do not re-record
+#: collectives, so a post-warmup per-epoch ledger isolates H2D cleanly).
+H2D_OP = "h2d"
 
 
 def ring_wire_factor(op: str, g: int) -> float:
@@ -293,6 +305,8 @@ _LEDGERS: ContextVar[tuple[CommLedger, ...]] = ContextVar(
     "repro_comm_ledgers", default=())
 _LOOP_MULT: ContextVar[float] = ContextVar("repro_comm_loop_mult",
                                            default=1.0)
+_SUPPRESS: ContextVar[bool] = ContextVar("repro_comm_suppress",
+                                         default=False)
 
 
 @contextlib.contextmanager
@@ -335,6 +349,32 @@ def loop_multiplier() -> float:
     return _LOOP_MULT.get()
 
 
+@contextlib.contextmanager
+def mirror_scope() -> Iterator[None]:
+    """Suppress collective recording inside the block.
+
+    For programs that *manually materialize* an autodiff mirror already
+    declared elsewhere with ``mirror=True`` — e.g. the out-of-core
+    streaming driver's split-transpose program, which applies the
+    ``gather`` all-to-all to a hand-propagated cotangent.  The forward
+    split's ``mirror=True`` declaration already accounts those wire
+    bytes (that is the declaration's whole meaning), so letting the
+    materialized transpose record again would double-count and break
+    ledger parity with the in-memory path.  Wrap every call of such a
+    program: recording happens at trace time (the first call), and
+    cached re-executions record nothing anyway, so the blanket wrap is
+    both sufficient and free."""
+    token = _SUPPRESS.set(True)
+    try:
+        yield
+    finally:
+        _SUPPRESS.reset(token)
+
+
+def mirror_suppressed() -> bool:
+    return _SUPPRESS.get()
+
+
 # ---------------------------------------------------------------------------
 # Recording
 # ---------------------------------------------------------------------------
@@ -368,7 +408,7 @@ def record(op: str, axes, x, *, group_size: int,
     module docstring).  No-op when no ledger is collecting.
     """
     ledgers = active_ledgers()
-    if not ledgers:
+    if not ledgers or mirror_suppressed():
         return
     if op not in OP_TO_HLO:
         raise TelemetryError(f"unknown collective op kind {op!r} "
@@ -466,7 +506,7 @@ def record_transition(shape, dtype, src_spec, dst_spec,
     endpoints, which the audit verifies structurally.  No-op when no
     ledger is collecting."""
     ledgers = active_ledgers()
-    if not ledgers:
+    if not ledgers or mirror_suppressed():
         return
     import numpy as np
 
@@ -483,3 +523,27 @@ def record_transition(shape, dtype, src_spec, dst_spec,
         calls=mult, mirror=mirror, anchored=anchored)
     for ledger in ledgers:
         ledger.add_transition(rec)
+
+
+# ---------------------------------------------------------------------------
+# Host→device staging traffic (out-of-core streaming)
+# ---------------------------------------------------------------------------
+
+def record_h2d(x, *, label: str = "host") -> None:
+    """Report one host→device staging transfer into every active ledger.
+
+    ``x`` is the (pytree of) host array(s) being staged; its total bytes
+    are recorded under ``(H2D_OP, label, dtype)`` with
+    ``payload == wire`` (a PCIe/host-link copy has no ring factor) and
+    no mirror.  Execution-time semantics — see :data:`H2D_OP`: call this
+    once per issued ``device_put``, every time it is issued.  The
+    ``loop_scope`` multiplier is deliberately NOT applied (it corrects
+    trace-once/execute-many scans; staging is recorded per execution).
+    No-op when no ledger is collecting."""
+    ledgers = active_ledgers()
+    if not ledgers:
+        return
+    payload, dtype = _aval_bytes(x)
+    for ledger in ledgers:
+        ledger.add(H2D_OP, label, dtype, payload=payload, wire=payload,
+                   calls=1.0)

@@ -1,0 +1,64 @@
+"""Multi-process checkpoint.save contract (2 jax.distributed processes).
+
+:func:`repro.checkpoint.save` materializes every leaf with
+``np.asarray`` — on a multi-process mesh a host-sharded global
+``jax.Array`` cannot be materialized from one process, and before the
+guard this crashed deep inside numpy with an opaque RuntimeError.  The
+contract pinned here:
+
+* a **sharded** global array (``P(axis)`` across two hosts) is rejected
+  eagerly with an actionable ValueError naming the offending leaf path
+  and pointing at the ROADMAP 'elastic multi-host' sharded-checkpoint
+  item;
+* a **fully replicated** global array (``P()`` — params/opt_state as
+  every trainer here places them) saves fine from any process: each
+  host holds a complete copy, and the restored values round-trip.
+
+Launched by tests/test_checkpoint.py via the multiproc harness
+(2 processes × 4 forced devices).
+"""
+import os
+import tempfile
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import checkpoint  # noqa: E402
+from repro.runtime import distributed as dist  # noqa: E402
+from repro.runtime import tp_mesh  # noqa: E402
+
+assert dist.env_topology().get("num_processes"), \
+    "run via harness.run_multiproc(n_processes=2)"
+ctx = dist.initialize()          # env contract: COORDINATOR_ADDRESS, ...
+assert jax.process_count() == 2
+mesh = tp_mesh(jax.device_count())
+
+host = np.arange(jax.device_count() * 3, dtype=np.float32)
+sharded = dist.put_global(host, mesh, P("model"))
+replicated = dist.put_global(host, mesh, P())
+assert not sharded.is_fully_addressable
+
+state = {"w": replicated, "rows": sharded}
+tmp = os.path.join(tempfile.gettempdir(),
+                   f"ckpt_multiproc_{ctx.process_id}")
+try:
+    checkpoint.save(tmp, state)
+except ValueError as e:
+    msg = str(e)
+    assert "['rows']" in msg, msg          # names the offending leaf
+    assert "elastic multi-host" in msg, msg
+    assert "not fully addressable" in msg, msg
+else:
+    raise AssertionError("save accepted a host-sharded global array")
+
+# replicated-only state saves from every process and round-trips
+state = {"w": replicated, "step": jnp.int32(7)}
+checkpoint.save(tmp, state, metadata={"who": ctx.process_id})
+restored = checkpoint.restore(tmp, state)
+np.testing.assert_array_equal(np.asarray(restored["w"]), host)
+assert int(restored["step"]) == 7
+assert checkpoint.load_metadata(tmp)["who"] == ctx.process_id
+
+print("OK check_checkpoint_multiproc")

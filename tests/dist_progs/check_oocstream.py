@@ -1,0 +1,126 @@
+"""8-device out-of-core streaming equivalence check (repro.core.stream).
+
+The streamed decoupled epoch — host-resident feature store, per-chunk
+plan staging through the double-buffered H2D prefetcher, donated device
+buffers — must be *indistinguishable on the wire and in the math* from
+the in-memory decoupled epoch it replaces:
+
+* losses AND grads match ``repro.core.decouple.make_tp_value_and_grad``
+  (mode=decoupled, same backend) to atol 1e-5, for every streaming mode
+  × engine backend × aggregation backend combination;
+* the collective CommLedger (all_to_all / psum / transition entries,
+  i.e. everything except the ``h2d`` column) is **byte-identical** to
+  the unpipelined in-memory ledger — streaming moves host↔device
+  traffic, never worker↔worker traffic;
+* the measured ``h2d`` column of a *post-warmup* epoch equals the
+  analytic :func:`repro.core.stream.expected_h2d_bytes` exactly
+  (collectives are trace-time and already cached on epoch 2, so the
+  second-epoch ledger isolates the per-execution H2D records);
+* the :func:`repro.core.stream.device_resident_bytes` staging footprint
+  is two items deep and independent of the store size.
+
+``--ci-smoke`` runs the subset wired into scripts/ci.sh
+(segment+blocksparse × both engine backends × decoupled).  Run as a
+child with --xla_force_host_platform_device_count=8.
+"""
+import os
+import sys
+
+assert "--xla_force_host_platform_device_count=8" in \
+    os.environ.get("XLA_FLAGS", "")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import decouple as D  # noqa: E402
+from repro.core import stream as ST  # noqa: E402
+from repro.gnn import models as M  # noqa: E402
+from repro.graph import sbm_power_law  # noqa: E402
+from repro.runtime import collect_comm, tp_mesh  # noqa: E402
+
+assert len(jax.devices()) == 8
+
+SMOKE = "--ci-smoke" in sys.argv[1:]
+AGGS = ("segment", "blocksparse") if SMOKE else \
+    ("segment", "blocksparse", "dense")
+MODES = ("decoupled",) if SMOKE else ST.STREAM_MODES
+BACKENDS = ("explicit", "constraint")
+ATOL = 1e-5
+
+data = sbm_power_law(n=616, num_classes=5, feat_dim=24, avg_degree=8,
+                     seed=0)
+mesh = tp_mesh(8)
+
+
+def tree_max_diff(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(np.abs(np.asarray(x) - np.asarray(y)).max()),
+        a, b)))
+
+
+def split_ledger(led):
+    """(collective entries, total h2d payload bytes) of a ledger dict."""
+    d = led.as_dict()
+    coll = {k: v for k, v in d.items() if not k.startswith("h2d|")}
+    h2d = sum(v["payload_bytes"] for k, v in d.items()
+              if k.startswith("h2d|"))
+    return coll, h2d
+
+
+# host-side stream bundles (n_stripes defaults to n_chunks → identical
+# padding to the in-memory prepare_bundle below, so epochs are
+# bit-comparable) + one in-memory reference bundle per epoch shape
+bundles = {agg: ST.prepare_stream_bundle(data, mesh=mesh, n_chunks=4,
+                                         agg=agg, agg_block_size=32)
+           for agg in AGGS}
+sb0 = bundles["segment"]
+cfg = ST.stream_gnn_config(data, sb0, model="gcn", hidden_dim=16,
+                           num_layers=2, gamma=0.7)
+params = M.init_params(jax.random.PRNGKey(1), cfg)
+ref_bundle = D.prepare_bundle(data, n_workers=8, n_chunks=4)
+assert ref_bundle.graph.n_padded == sb0.n_padded, \
+    "stream/in-memory padding diverged — epochs are no longer comparable"
+
+# footprint contract: the staged double buffer is depth items, not O(V)
+foot = ST.device_resident_bytes(sb0, cfg)
+assert foot["staged_stripe_bytes"] == 2 * sb0.store.stripe_nbytes
+assert foot["staged_stripe_bytes"] * sb0.n_stripes == 2 * sb0.store.nbytes
+
+for backend in BACKENDS:
+    ref_vg = D.make_tp_value_and_grad(cfg, ref_bundle, mesh,
+                                      mode="decoupled", backend=backend)
+    with collect_comm() as led:
+        ref_loss, ref_grads = ref_vg(params, ref_bundle.train_mask)
+    ref_led, ref_h2d = split_ledger(led)
+    assert ref_h2d == 0, "in-memory epoch must not stage host data"
+    for agg in AGGS:
+        sb = bundles[agg]
+        for mode in MODES:
+            tag = f"oocstream/{agg}/{backend}/{mode}"
+            vg = ST.make_stream_value_and_grad(cfg, sb, mode=mode,
+                                               backend=backend)
+            with collect_comm() as led:
+                loss, grads = vg(params, sb.train_mask)
+            coll, h2d = split_ledger(led)
+            dl = abs(float(loss) - float(ref_loss))
+            dg = tree_max_diff(grads, ref_grads)
+            assert dl < ATOL and dg < ATOL, (tag, dl, dg)
+            assert coll == ref_led, (
+                f"{tag}: collective ledger differs from the in-memory "
+                f"decoupled epoch — streaming must not change "
+                f"worker↔worker communication\n  streamed: {coll}\n"
+                f"  in-mem:   {ref_led}")
+            # post-warmup epoch: programs cached → the ledger holds
+            # ONLY the per-execution h2d records, which must equal the
+            # analytic formula exactly
+            with collect_comm() as led2:
+                vg(params, sb.train_mask)
+            coll2, h2d2 = split_ledger(led2)
+            assert coll2 == {}, (tag, "unexpected retrace", coll2)
+            expect = ST.expected_h2d_bytes(sb, cfg)
+            assert h2d2 == expect, (tag, h2d2, expect)
+            assert h2d == h2d2, (tag, "first-epoch h2d differs", h2d)
+            print(f"ok {tag}: dloss={dl:.2e} dgrad={dg:.2e} "
+                  f"ledger-identical h2d={int(h2d2)}B (analytic exact)")
+
+print("OK check_oocstream")

@@ -1,0 +1,94 @@
+"""repro.checkpoint layout validation (the restore bugfix sweep).
+
+``restore`` used to validate only leaf count and shapes: a same-arity
+pytree with a different *structure* (dict key renamed, list vs tuple)
+restored leaves into the wrong slots, and a dtype drift (int step
+counter saved, float template) silently cast.  Each failure mode is
+pinned here with its actionable error; the multi-process ``save``
+contract (host-sharded global arrays rejected eagerly, replicated ones
+saved) runs under the real 2-process harness in the slow lane
+(tests/dist_progs/check_checkpoint_multiproc.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_dist_prog
+from dist_progs import harness
+from repro import checkpoint
+
+
+def params(dtype=jnp.float32, step=jnp.int32(3)):
+    return {"layers": [{"w": jnp.ones((4, 2), dtype), "b": jnp.zeros(2)}],
+            "step": step}
+
+
+def test_roundtrip(tmp_path):
+    p = params()
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, p, metadata={"epoch": 9})
+    out = checkpoint.restore(path, jax.tree.map(jnp.zeros_like, p))
+    assert jax.tree.map(lambda a, b: np.array_equal(a, b), p, out)
+    assert all(jax.tree.leaves(
+        jax.tree.map(lambda a, b: bool(np.array_equal(a, b)), p, out)))
+    assert checkpoint.load_metadata(path)["epoch"] == 9
+
+
+def test_restore_rejects_leaf_count_mismatch(tmp_path):
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, params())
+    with pytest.raises(ValueError, match="leaves"):
+        checkpoint.restore(path, {"w": jnp.ones((4, 2))})
+
+
+def test_restore_rejects_treedef_mismatch(tmp_path):
+    """Same leaf count, different structure: before the fingerprint
+    check this silently restored leaves into the wrong slots."""
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, params())
+    renamed = params()
+    renamed["step_count"] = renamed.pop("step")     # same arity
+    with pytest.raises(ValueError) as ei:
+        checkpoint.restore(path, renamed)
+    msg = str(ei.value)
+    assert "tree structure" in msg
+    # both fingerprints shown, so the drift is diagnosable from the error
+    assert "stored:" in msg and "template:" in msg
+
+
+def test_restore_rejects_shape_mismatch_naming_path(tmp_path):
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, params())
+    bad = params()
+    bad["layers"][0]["w"] = jnp.ones((4, 3))
+    with pytest.raises(ValueError) as ei:
+        checkpoint.restore(path, bad)
+    assert "['layers'][0]['w']" in str(ei.value)
+    assert "(4, 2)" in str(ei.value) and "(4, 3)" in str(ei.value)
+
+
+def test_restore_rejects_dtype_mismatch_naming_path(tmp_path):
+    """The int-step-counter-restored-as-float corruption, pinned."""
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, params())
+    with pytest.raises(ValueError) as ei:
+        checkpoint.restore(path, params(step=jnp.float32(3)))
+    msg = str(ei.value)
+    assert "['step']" in msg and "int32" in msg and "float32" in msg
+
+
+def test_save_accepts_plain_host_leaves(tmp_path):
+    """numpy / python scalars have no is_fully_addressable — the
+    multihost guard must not trip over them."""
+    path = str(tmp_path / "ckpt")
+    tree = {"a": np.arange(3), "b": 1.5}
+    checkpoint.save(path, tree)
+    out = checkpoint.restore(path, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), tree["a"])
+
+
+@pytest.mark.slow
+def test_multiproc_save_contract():
+    harness.run_multiproc("check_checkpoint_multiproc.py", n_processes=2,
+                          devices_per_process=4, timeout=600)

@@ -231,3 +231,52 @@ def test_stack_plans_pads_with_zero_tiles():
     np.testing.assert_allclose(_plan_dense(stacked, 1), ref2, rtol=1e-6)
     np.testing.assert_allclose(_plan_dense(stacked, 0, transpose=True),
                                ref1.T, rtol=1e-6)
+
+
+def test_edge_id_int32_end_to_end():
+    """The chunked edge_id contract: int32 from construction through
+    padding (no int64 build + silent downcast), pad value == E."""
+    g = small_graph(60, seed=3)
+    cg = chunk_graph(g, 3)
+    assert cg.edge_id.dtype == np.int32
+    # every real edge id appears exactly once; pads are exactly E
+    ids = cg.edge_id.ravel()
+    real = ids[ids < g.e]
+    assert sorted(real.tolist()) == list(range(g.e))
+    assert np.all(ids[ids >= g.e] == g.e)
+
+
+def test_edge_id_overflow_rejected():
+    """E at/after the int32 ceiling must raise eagerly, naming E —
+    not overflow into negative ids during padding."""
+    from repro.graph import require_int32_edge_ids
+    require_int32_edge_ids(np.iinfo(np.int32).max - 1)  # largest legal
+    with pytest.raises(ValueError) as ei:
+        require_int32_edge_ids(np.iinfo(np.int32).max)
+    msg = str(ei.value)
+    assert str(np.iinfo(np.int32).max) in msg and "edge_id" in msg
+
+
+def test_host_feature_store_worker_major_stripes():
+    from repro.graph import HostFeatureStore
+    n_workers, n_stripes, rs, d = 3, 4, 2, 5
+    n = n_workers * n_stripes * rs
+    x = np.arange(n * d, dtype=np.float32).reshape(n, d)
+    store = HostFeatureStore(x, n_workers=n_workers, n_stripes=n_stripes)
+    assert store.stripe_rows == rs
+    assert store.stripe_nbytes == n_workers * rs * d * 4
+    # stripe s stacks worker i's rows [i·V/N + s·rs, i·V/N + (s+1)·rs)
+    seen = np.zeros(n, bool)
+    for s in range(n_stripes):
+        st = store.stripe(s)
+        assert st.shape == (n_workers * rs, d)
+        for i in range(n_workers):
+            lo = i * (n // n_workers) + s * rs
+            np.testing.assert_array_equal(st[i * rs:(i + 1) * rs],
+                                          x[lo:lo + rs])
+            seen[lo:lo + rs] = True
+    assert seen.all()          # the stripes tile the store exactly
+    with pytest.raises(IndexError):
+        store.stripe(n_stripes)
+    with pytest.raises(ValueError, match="divide"):
+        HostFeatureStore(x, n_workers=n_workers, n_stripes=5)

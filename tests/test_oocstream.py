@@ -1,0 +1,129 @@
+"""Out-of-core chunk streaming (repro.core.stream + runtime.streaming).
+
+Fast lane: single-device (tp_mesh(1)) streamed-vs-in-memory loss+grad
+equivalence across engine backends and streaming modes, the analytic
+H2D-byte formula against the measured telemetry column, the staging
+primitives (prefetch ordering/depth, global_zeros placement), and the
+streamability gates.  The real 8-device matrix (3 agg backends × both
+engine backends × both streaming modes, collective-ledger byte-identity
+with the in-memory epoch) lives in
+tests/dist_progs/check_oocstream.py (slow lane).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from conftest import max_tree_diff, run_dist_prog
+from repro.core import decouple as D
+from repro.core import stream as ST
+from repro.gnn import models as M
+from repro.graph import sbm_power_law
+from repro.runtime import collect_comm, tp_mesh
+from repro.runtime import streaming as RS
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = sbm_power_law(n=96, num_classes=3, feat_dim=12, avg_degree=6,
+                         seed=0)
+    sb = ST.prepare_stream_bundle(data, n_workers=1, n_chunks=3,
+                                  agg="segment")
+    cfg = ST.stream_gnn_config(data, sb, hidden_dim=16, num_layers=2,
+                               gamma=0.7)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    ref = D.prepare_bundle(data, n_workers=1, n_chunks=3)
+    assert ref.graph.n_padded == sb.n_padded
+    return data, sb, cfg, params, ref
+
+
+@pytest.mark.parametrize("mode", ST.STREAM_MODES)
+@pytest.mark.parametrize("backend", ["explicit", "constraint"])
+def test_streamed_matches_in_memory(setup, mode, backend):
+    data, sb, cfg, params, ref = setup
+    ref_vg = D.make_tp_value_and_grad(cfg, ref, tp_mesh(1),
+                                      mode="decoupled", backend=backend)
+    ref_loss, ref_grads = ref_vg(params, ref.train_mask)
+    vg = ST.make_stream_value_and_grad(cfg, sb, mode=mode,
+                                       backend=backend)
+    loss, grads = vg(params, sb.train_mask)
+    assert abs(float(loss) - float(ref_loss)) < 1e-5
+    assert max_tree_diff(grads, ref_grads) < 1e-5
+
+
+def test_h2d_column_matches_analytic_formula(setup):
+    data, sb, cfg, params, ref = setup
+    vg = ST.make_stream_value_and_grad(cfg, sb)
+    vg(params, sb.train_mask)                     # warmup: trace + stage
+    with collect_comm() as led:
+        vg(params, sb.train_mask)
+    d = led.as_dict()
+    assert all(k.startswith("h2d|") for k in d), d  # programs all cached
+    measured = sum(v["payload_bytes"] for v in d.values())
+    assert measured == ST.expected_h2d_bytes(sb, cfg)
+
+
+def test_footprint_contract(setup):
+    data, sb, cfg, params, ref = setup
+    foot = ST.device_resident_bytes(sb, cfg)
+    # the double buffer is 2 items deep, each 1/S (1/C) of the store
+    assert foot["staged_stripe_bytes"] == 2 * sb.store.stripe_nbytes
+    assert sb.store.nbytes == sb.n_stripes * sb.store.stripe_nbytes
+    per_chunk = ST.chunk_input_nbytes(sb)
+    assert foot["staged_chunk_bytes"] >= 2 * max(per_chunk) > 0
+    assert len(per_chunk) == sb.n_chunks
+
+
+def test_streamability_gates(setup):
+    data, sb, cfg, params, ref = setup
+    with pytest.raises(ValueError, match="naive"):
+        ST.make_stream_value_and_grad(cfg, sb, mode="naive")
+    gat = ST.stream_gnn_config(data, sb, model="gat")
+    with pytest.raises(ValueError, match="GAT"):
+        ST.make_stream_value_and_grad(gat, sb)
+    with pytest.raises(ValueError, match="blocksparse"):
+        ST.make_stream_value_and_grad(cfg, sb, agg="blocksparse")
+
+
+def test_prefetched_is_double_buffered():
+    staged, order = [], []
+
+    def stage(x):
+        staged.append(x)
+        return x
+
+    for item in RS.prefetched(range(5), stage, depth=2):
+        order.append(item)
+        # when the consumer receives c, c+1 has already been staged
+        assert len(staged) >= min(len(order) + 1, 5)
+        # ...but never more than depth items ahead of consumption
+        assert len(staged) - len(order) <= 2
+    assert order == staged == list(range(5))
+    with pytest.raises(ValueError, match="depth"):
+        list(RS.prefetched(range(3), stage, depth=0))
+
+
+def test_global_zeros_places_without_host_roundtrip():
+    mesh = tp_mesh(1)
+    z = RS.global_zeros(mesh, P(), (3, 4))
+    assert z.shape == (3, 4) and float(jnp.sum(z)) == 0.0
+    # cached program: same (sharding, shape, dtype) → same executable
+    z2 = RS.global_zeros(mesh, P(), (3, 4))
+    assert z2.sharding == z.sharding
+
+
+def test_stage_records_h2d_bytes():
+    mesh = tp_mesh(1)
+    tree = {"a": np.ones((4, 4), np.float32), "b": np.ones(2, np.int32)}
+    with collect_comm() as led:
+        out = RS.stage(tree, mesh, P(), label="unit")
+    jax.block_until_ready(out)
+    d = led.as_dict()
+    assert sum(v["payload_bytes"] for k, v in d.items()
+               if k.startswith("h2d|unit")) == 64 + 8
+
+
+@pytest.mark.slow
+def test_oocstream_8dev_matrix():
+    run_dist_prog("check_oocstream.py", timeout=1800)
